@@ -1,0 +1,144 @@
+"""Roofline analysis over the dry-run artifacts (§Roofline deliverable).
+
+Derives the three roofline terms per (arch x shape x mesh) cell from the
+compiled-HLO statistics recorded by repro.launch.dryrun:
+
+    compute    = HLO_FLOPs / peak_FLOPs            (197 TFLOP/s bf16, v5e)
+    memory     = HLO_bytes / HBM_bw                (819 GB/s)
+    collective = ICI_bytes / link_bw               (~50 GB/s/link)
+
+All numerators are PER-DEVICE (the dry-run parses the SPMD-partitioned
+module with while-loop trip weighting), so no further division by chip
+count is needed.  MODEL_FLOPS uses the standard accounting:
+    train:   6 * N * D      (D = global tokens; N = active params for MoE)
+    prefill: 2 * N * D
+    decode:  2 * N * B      (one new token per row)
+divided by the mesh's chip count for the per-device ratio.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir artifacts/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+MESH_CHIPS = {"16x16": 256, "2x16x16": 512}
+
+
+def model_flops(rec: Dict[str, Any]) -> Optional[float]:
+    from repro.configs import get_config, get_shape
+    cfg = get_config(rec["arch"])
+    shape = get_shape(rec["shape"])
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens
+    return 2.0 * n * shape.global_batch        # decode: one token/row
+
+
+def analyze(rec: Dict[str, Any]) -> Optional[Dict[str, Any]]:
+    if rec.get("status") != "ok":
+        return None
+    chips = MESH_CHIPS[rec["mesh"]]
+    t_comp = rec["hlo_flops"] / PEAK_FLOPS
+    t_mem = rec["hlo_bytes"] / HBM_BW
+    t_coll = rec["ici_bytes"] / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    mf_dev = mf / chips if mf else None
+    useful = (mf_dev / rec["hlo_flops"]
+              if mf_dev and rec["hlo_flops"] else None)
+    # roofline fraction: useful model FLOPs over the time the dominant
+    # term would take (what MFU would be if the bottleneck ran at peak)
+    bound_s = max(terms.values())
+    frac = (mf_dev / PEAK_FLOPS) / bound_s if mf_dev and bound_s else None
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec["kind"],
+        "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_dev": mf_dev,
+        "useful_ratio": useful,
+        "roofline_fraction": frac,
+        "hlo_flops": rec["hlo_flops"], "hlo_bytes": rec["hlo_bytes"],
+        "ici_bytes": rec["ici_bytes"],
+        "collectives": rec.get("collectives", {}),
+        "bytes_per_device": rec.get("bytes_per_device", {}),
+    }
+
+
+def advice(row: Dict[str, Any]) -> str:
+    d = row["dominant"]
+    if d == "collective":
+        kinds = sorted(row["collectives"].items(),
+                       key=lambda kv: -kv[1]["ici_bytes"])
+        top = kinds[0][0] if kinds else "?"
+        return (f"cut {top} traffic (cast weights to bf16 before "
+                "all-gather / shard the gathered dim / overlap with scan)")
+    if d == "memory":
+        return ("raise arithmetic intensity (fuse elementwise chains, "
+                "keep KV/state in lower precision, larger per-step tiles)")
+    if row.get("useful_ratio") and row["useful_ratio"] < 0.5:
+        return ("reduce non-model FLOPs (remat policy, causal-masked "
+                "attention waste, replicated heads on the model axis)")
+    return "near compute roof; only kernel-level MXU utilization remains"
+
+
+def load(dir_: str) -> List[Dict[str, Any]]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        row = analyze(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def render_table(rows: List[Dict[str, Any]], mesh: str = "16x16") -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | "
+        "dominant | useful | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        u = f"{r['useful_ratio']:.2f}" if r["useful_ratio"] else "-"
+        fr = f"{r['roofline_fraction']:.2f}" \
+            if r["roofline_fraction"] else "-"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.2e} | "
+            f"{r['memory_s']:.2e} | {r['collective_s']:.2e} | "
+            f"{r['dominant']} | {u} | {fr} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    rows = load(args.dir)
+    print(render_table(rows, args.mesh))
+    print()
+    for r in rows:
+        if r["mesh"] == args.mesh:
+            print(f"{r['arch']:20s} {r['shape']:12s} -> {advice(r)}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

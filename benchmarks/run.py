@@ -1,0 +1,63 @@
+"""Benchmark orchestrator: one entry per paper table/figure + the kernel
+microbench + the roofline table.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Default (CI-friendly) mode reads cached paper artifacts when present and
+re-runs only the cheap benches; --full regenerates the 7-dataset paper
+evaluation (hours on this 1-core container).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def bench_kernels() -> None:
+    print("== kernels (CPU path; TPU analytic estimate) ==")
+    from benchmarks import kernels
+    kernels.main()
+
+
+def bench_roofline() -> None:
+    print("\n== roofline (from dry-run artifacts) ==")
+    from benchmarks import roofline
+    rows = roofline.load("artifacts/dryrun")
+    if not rows:
+        print("no dry-run artifacts; run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all")
+        return
+    print(roofline.render_table(rows, "16x16"))
+
+
+def bench_paper(full: bool) -> None:
+    print("\n== paper evaluation (Table 1 / Fig 6-8 / Table 2) ==")
+    paths = sorted(glob.glob("artifacts/paper/*.json"))
+    if not paths and not full:
+        print("no cached paper artifacts; run the evaluation driver:\n"
+              "  PYTHONPATH=src python -m repro.core.experiment --out "
+              "artifacts/paper")
+        return
+    if full:
+        from repro.core import experiment
+        sys.argv = ["experiment", "--out", "artifacts/paper"]
+        experiment.main()
+        paths = sorted(glob.glob("artifacts/paper/*.json"))
+    from benchmarks.table1 import render_all
+    render_all(paths)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    bench_kernels()
+    bench_roofline()
+    bench_paper(args.full)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Train a ~100M-parameter LM for a few hundred steps on the synthetic
+bigram corpus — the end-to-end training driver over the same substrate
+the dry-run lowers at production scale (AdamW, grad clip, checkpointing,
+crash-safe supervisor, skippable data pipeline).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+The loss should descend from ~log(vocab) toward the bigram entropy floor
+printed at startup — proof the whole stack trains.
+"""
+import argparse
+import dataclasses
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.data.tokens import TokenPipeline  # noqa: E402
+from repro.distributed.checkpoint import Checkpointer  # noqa: E402
+from repro.distributed.fault import Supervisor  # noqa: E402
+from repro.models.model import build_model  # noqa: E402
+from repro.optim import adamw, cosine_schedule  # noqa: E402
+from repro.train import build_train_step  # noqa: E402
+
+
+def make_100m_config():
+    """qwen2-family config scaled to ~100M params."""
+    base = get_config("qwen2-0.5b")
+    return dataclasses.replace(
+        base, name="qwen2-100m", n_layers=6, d_model=512, n_heads=8,
+        n_kv_heads=2, head_dim=64, d_ff=1536, vocab_size=8192,
+        remat="none")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="artifacts/train_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = make_100m_config()
+    model = build_model(cfg)
+    params = model.init_params(0)
+    n = model.param_count()
+    print(f"model {cfg.name}: {n / 1e6:.1f}M params")
+
+    pipe = TokenPipeline(cfg.vocab_size, args.batch, args.seq, seed=0)
+    print(f"bigram entropy floor: {pipe.bigram_entropy():.3f} nats/token")
+
+    opt = adamw(lr=cosine_schedule(3e-3, 30, args.steps))
+    opt_state = opt.init(params)
+    ts = build_train_step(model, opt, max_grad_norm=1.0)
+    step_jit = jax.jit(lambda p, s, b: ts(p, s, b))
+
+    sup = Supervisor(Checkpointer(args.ckpt, keep=2), checkpoint_every=100)
+    t0 = time.time()
+    losses = []
+
+    def step_fn(state, step):
+        p, s = state
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(step).items()}
+        p, s, mets = step_jit(p, s, batch)
+        losses.append(float(mets["loss"]))
+        if step % 25 == 0:
+            avg = sum(losses[-25:]) / len(losses[-25:])
+            tok_s = args.batch * args.seq * (step + 1) / (time.time() - t0)
+            print(f"step {step:4d} loss {avg:7.4f} "
+                  f"({tok_s:,.0f} tok/s)")
+        return (p, s)
+
+    params, opt_state = sup.run((params, opt_state), step_fn, 0,
+                                args.steps)
+    final = sum(losses[-20:]) / 20
+    print(f"\nfinal loss {final:.4f} (floor {pipe.bigram_entropy():.3f}, "
+          f"start ~{losses[0]:.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Config registry.  ``load_all()`` imports every per-arch module exactly
+once so that ``get_config``/``list_archs`` see the full pool."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (ModelConfig, MoEConfig, SSMConfig,
+                                HybridConfig, FrontendConfig, get_config,
+                                list_archs, register)
+from repro.configs.shapes import (ShapeConfig, ALL_SHAPES, SHAPES, get_shape,
+                                  shape_skip_reason, cells_for)
+
+ARCH_MODULES = (
+    "whisper_small",
+    "mamba2_370m",
+    "deepseek_67b",
+    "qwen2_0_5b",
+    "deepseek_coder_33b",
+    "stablelm_1_6b",
+    "zamba2_7b",
+    "deepseek_moe_16b",
+    "grok_1_314b",
+    "pixtral_12b",
+    "multiscope",
+)
+
+_loaded = False
+
+
+def load_all() -> None:
+    global _loaded
+    if _loaded:
+        return
+    _loaded = True
+    for mod in ARCH_MODULES:
+        importlib.import_module(f"repro.configs.{mod}")
+
+
+ASSIGNED_ARCHS = (
+    "whisper-small", "mamba2-370m", "deepseek-67b", "qwen2-0.5b",
+    "deepseek-coder-33b", "stablelm-1.6b", "zamba2-7b", "deepseek-moe-16b",
+    "grok-1-314b", "pixtral-12b")

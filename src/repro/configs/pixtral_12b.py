@@ -1,0 +1,23 @@
+"""pixtral-12b — [vlm] pixtral-ViT frontend (STUB) + mistral-nemo backbone.
+
+40L d_model=5120 32H (GQA kv=8) d_ff=14336 vocab=131072, head_dim=128.
+The vision frontend supplies precomputed patch embeddings via input_specs();
+they are merged into the token stream at image-placeholder positions.
+[hf:mistralai/Pixtral-12B-2409; unverified]
+"""
+from repro.configs.base import FrontendConfig, ModelConfig, register
+
+PIXTRAL_12B = register(ModelConfig(
+    name="pixtral-12b",
+    family="vlm",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14_336,
+    vocab_size=131_072,
+    head_dim=128,
+    rope_theta=1_000_000.0,
+    frontend=FrontendConfig(kind="vision", n_embeds=1024),
+    source="hf:mistralai/Pixtral-12B-2409",
+))

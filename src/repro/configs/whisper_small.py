@@ -1,0 +1,23 @@
+"""whisper-small — [audio] enc-dec transformer, conv frontend stubbed.
+
+12L (12 enc + 12 dec) d_model=768 12H (GQA kv=12) d_ff=3072 vocab=51865.
+[arXiv:2212.04356; unverified]
+"""
+from repro.configs.base import FrontendConfig, ModelConfig, register
+
+WHISPER_SMALL = register(ModelConfig(
+    name="whisper-small",
+    family="encdec",
+    n_layers=12,
+    n_encoder_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_ff=3072,
+    vocab_size=51_865,
+    head_dim=64,
+    qkv_bias=True,
+    tie_embeddings=True,
+    frontend=FrontendConfig(kind="audio", n_embeds=1500),
+    source="arXiv:2212.04356",
+))

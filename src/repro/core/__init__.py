@@ -1,0 +1,10 @@
+"""The paper's primary contribution: the MultiScope pre-processing system.
+
+Public API:
+    tuner.setup / tuner.tune     — Figure 1 workflow (train + θ_best +
+                                   greedy joint tuning)
+    pipeline.run_clip            — execute one configuration θ
+    experiment.run_dataset       — the §4 evaluation protocol
+    baselines                    — Chameleon / BlazeIt / Miris
+"""
+from repro.core.pipeline import ModelBank, PipelineParams, run_clip  # noqa: F401

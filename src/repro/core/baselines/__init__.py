@@ -1,0 +1,3 @@
+from repro.core.baselines.chameleon import ChameleonBaseline  # noqa: F401
+from repro.core.baselines.blazeit import BlazeItBaseline  # noqa: F401
+from repro.core.baselines.miris import MirisBaseline  # noqa: F401

@@ -1,0 +1,200 @@
+"""BlazeIt baseline (Kang et al. 2019, adapted per §4).
+
+Query-agnostic mode (NoScope-like): a frame-level CLASSIFICATION proxy
+(small CNN -> P(frame contains any object)) gates full-frame detection;
+frames under the threshold are skipped entirely.  On busy datasets this
+yields only the trivial configurations (process everything / skip
+everything) — exactly the paper's observation.
+
+Limit-query mode (§4.2, Table 2): a REGRESSION proxy estimates the object
+count in a region on every frame; the query phase applies the detector on
+frames in descending proxy-score order until it has found the requested
+number of matching frames (min spacing enforced).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pipeline as pl
+from repro.core.metrics import clip_count_accuracy
+from repro.core.proxy import _n_levels
+from repro.core.detector import _apply_conv, _conv
+from repro.core.sort import SortTracker
+from repro.core.tuner import TunerPoint
+from repro.core.train_models import _fit
+from repro.data.video_synth import Clip
+from repro.models.common import ParamBuilder, build
+
+
+def def_frame_scorer(pb: ParamBuilder, base: int = 8) -> None:
+    """Tiny frame-level CNN -> one scalar (classification or count)."""
+    cin = 3
+    for i, c in enumerate((base, base * 2, base * 4)):
+        _conv(pb, f"enc{i}", cin, c)
+        cin = c
+    _conv(pb, "head", cin, 1, k=1)
+
+
+@jax.jit
+def frame_score(params, frames):
+    x = frames
+    for i in range(3):
+        x = jax.nn.relu(_apply_conv(params[f"enc{i}"], x, stride=2))
+    return _apply_conv(params["head"], x).mean(axis=(1, 2, 3))
+
+
+def _scorer_loss_cls(params, frames, labels):
+    s = frame_score(params, frames)
+    y = labels.astype(jnp.float32)
+    bce = jnp.maximum(s, 0) - s * y + jnp.log1p(jnp.exp(-jnp.abs(s)))
+    return bce.mean()
+
+
+def _scorer_loss_reg(params, frames, counts):
+    s = frame_score(params, frames)
+    return jnp.abs(s - counts.astype(jnp.float32)).mean()
+
+
+@dataclass
+class BlazeItBaseline:
+    bank: pl.ModelBank
+    proxy_res: Tuple[int, int] = (64, 48)
+    name: str = "blazeit"
+    cls_params: Optional[dict] = None
+    reg_params: Optional[dict] = None
+
+    # -- training --------------------------------------------------------------
+    def train(self, train_dets: Sequence[Tuple[Clip, int, np.ndarray]],
+              steps: int = 150,
+              region: Optional[Tuple[float, float, float, float]] = None,
+              ) -> None:
+        """train_dets: θ_best (clip, frame, detections) labels."""
+        W, H = self.proxy_res
+        frames = np.stack([c.render(f, W, H) for c, f, _ in train_dets])
+        has = np.asarray([float(len(d) > 0) for _, _, d in train_dets])
+        counts = np.asarray([
+            float(_count_in_region(d, region)) for _, _, d in train_dets])
+        rng = np.random.default_rng(0)
+
+        def batches(labels):
+            def it():
+                for _ in range(steps):
+                    idx = rng.integers(len(frames), size=16)
+                    yield (jnp.asarray(frames[idx]),
+                           jnp.asarray(labels[idx]))
+            return it()
+
+        p0 = build(def_frame_scorer, "init", seed=1)
+        self.cls_params, _ = _fit(_scorer_loss_cls, p0, batches(has),
+                                  lr=3e-3)
+        p1 = build(def_frame_scorer, "init", seed=2)
+        self.reg_params, _ = _fit(_scorer_loss_reg, p1, batches(counts),
+                                  lr=3e-3)
+
+    # -- query-agnostic track extraction ----------------------------------------
+    def run_clip(self, params: pl.PipelineParams, clip: Clip,
+                 threshold: float) -> pl.RunResult:
+        detector = self.bank.detectors[params.det_arch]
+        W, H = params.det_res
+        tracker = SortTracker()
+        skipped = 0
+        t0 = time.process_time()
+        charged = 0.0
+        for f in range(clip.n_frames):
+            t_r = time.process_time()
+            frame, cost = pl.render_frame(clip, f, W, H)
+            charged += cost - (time.process_time() - t_r)
+            small = pl._downsample(frame, self.proxy_res)
+            score = jax.nn.sigmoid(frame_score(
+                self.cls_params, jnp.asarray(small[None])))[0]
+            if float(score) < threshold:
+                skipped += 1
+                continue
+            dets = detector.detect_batch(frame[None], params.det_conf)[0]
+            tracker.step(f, dets)
+        tracks = tracker.result()
+        secs = time.process_time() - t0 + max(charged, 0.0)
+        return pl.RunResult(tracks, secs, clip.n_frames - skipped,
+                            clip.n_frames - skipped,
+                            clip.n_frames - skipped, skipped)
+
+    def select(self, val_clips: Sequence[Clip],
+               thresholds=(0.0, 0.2, 0.4, 0.6, 0.8, 0.95)
+               ) -> List[TunerPoint]:
+        cfg = self.bank.cfg
+        params = pl.PipelineParams(
+            det_arch=cfg.detector.archs[-1],
+            det_res=cfg.detector.resolutions[0],
+            det_conf=cfg.detector.confidences[1], gap=1, tracker="sort")
+        points = []
+        for th in thresholds:
+            accs, secs = [], 0.0
+            for clip in val_clips:
+                r = self.run_clip(params, clip, th)
+                accs.append(clip_count_accuracy(r.tracks, clip))
+                secs += r.seconds
+            pt = TunerPoint(params, float(np.mean(accs)), secs,
+                            f"th={th}")
+            points.append(pt)
+        from repro.core.baselines.chameleon import pareto
+        return pareto(points)
+
+    # -- limit query (§4.2) ------------------------------------------------------
+    def limit_query(self, clips: Sequence[Clip],
+                    params: pl.PipelineParams, *, want: int,
+                    min_count: int, region, min_spacing: int
+                    ) -> Dict[str, object]:
+        """Find ``want`` frames with >= min_count objects in ``region``.
+
+        Returns dict with found frames, preprocessing/query times, and
+        detector invocations."""
+        W, H = params.det_res
+        detector = self.bank.detectors[params.det_arch]
+        # pre-processing: regression proxy over EVERY frame (decode at
+        # proxy resolution — cheap, like BlazeIt's 64x64 decode)
+        t0 = time.process_time()
+        scores = []
+        for ci, clip in enumerate(clips):
+            for f in range(clip.n_frames):
+                small = clip.render(f, *self.proxy_res)
+                s = float(frame_score(self.reg_params,
+                                      jnp.asarray(small[None]))[0])
+                scores.append((s, ci, f))
+        pre_s = time.process_time() - t0
+        # query phase: detector in descending-score order
+        t0 = time.process_time()
+        scores.sort(key=lambda x: -x[0])
+        found: List[Tuple[int, int]] = []
+        n_det = 0
+        for s, ci, f in scores:
+            if len(found) >= want:
+                break
+            if any(c == ci and abs(f - g) < min_spacing
+                   for c, g in found):
+                continue
+            frame = clips[ci].render(f, W, H)
+            dets = detector.detect_batch(frame[None], params.det_conf)[0]
+            n_det += 1
+            if _count_in_region(dets, region) >= min_count:
+                found.append((ci, f))
+        query_s = time.process_time() - t0
+        return {"found": found, "pre_seconds": pre_s,
+                "query_seconds": query_s, "detector_frames": n_det}
+
+
+def _count_in_region(dets: np.ndarray, region) -> int:
+    if len(dets) == 0:
+        return 0
+    if region is None:
+        return len(dets)
+    x0, y0, x1, y1 = region
+    m = ((dets[:, 0] >= x0) & (dets[:, 0] <= x1)
+         & (dets[:, 1] >= y0) & (dets[:, 1] <= y1))
+    return int(m.sum())

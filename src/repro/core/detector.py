@@ -1,0 +1,225 @@
+"""Single-shot anchor-free object detector (the pipeline's expensive model).
+
+The paper treats the detector as a pluggable black box with an
+(architecture, input resolution) menu (YOLOv3 / Mask R-CNN at several
+resolutions); this repo registers two architectures of different depths,
+``ssd-lite`` and ``ssd-deep``, preserving the tuner's arch-choice
+dimension.
+
+Design: strided conv backbone to stride ``S`` (16), then a 1x1 head
+predicting per cell [objectness, dx, dy, log w, log h].  A cell is
+positive when an object center falls inside it; boxes are regressed
+relative to the cell (center offset in [0,1]) and the frame (log-size).
+The same network applies to full frames AND to the proxy-selected windows
+(any HxW divisible by the stride) — one jit specialization per input
+size, which is exactly the paper's "initialize the detector at each of the
+k fixed window sizes".
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ParamBuilder, build
+
+STRIDE = 16
+
+ARCHS: Dict[str, Tuple[Tuple[int, ...], Tuple[int, ...]]] = {
+    # name -> (channels per block, extra 3x3 convs per block)
+    "ssd-lite": ((12, 24, 48, 96), (0, 0, 0, 0)),
+    "ssd-deep": ((16, 32, 64, 128), (1, 1, 1, 1)),
+}
+
+
+def _conv(pb: ParamBuilder, name: str, cin: int, cout: int, k: int = 3
+          ) -> None:
+    with pb.scope(name):
+        pb.param("w", (k, k, cin, cout), (None, None, None, "mlp"),
+                 scale=(1.0 / np.sqrt(k * k * cin)))
+        pb.param("b", (cout,), (None,), init="zeros")
+
+
+def _apply_conv(p, x, stride: int = 1):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def def_detector(pb: ParamBuilder, arch: str) -> None:
+    chans, extras = ARCHS[arch]
+    cin = 3
+    for i, (c, extra) in enumerate(zip(chans, extras)):
+        _conv(pb, f"block{i}_down", cin, c)
+        for j in range(extra):
+            _conv(pb, f"block{i}_conv{j}", c, c)
+        cin = c
+    _conv(pb, "head", cin, 5, k=1)
+
+
+def init_detector(arch: str, seed: int = 0):
+    return build(functools.partial(def_detector, arch=arch), "init",
+                 seed=seed)
+
+
+@functools.partial(jax.jit, static_argnames=("arch",))
+def detector_raw(params, frames, arch: str):
+    """frames: (B, H, W, 3) -> (B, H/S, W/S, 5) raw head outputs."""
+    chans, extras = ARCHS[arch]
+    x = frames
+    for i in range(len(chans)):
+        x = jax.nn.relu(_apply_conv(params[f"block{i}_down"], x, stride=2))
+        for j in range(extras[i]):
+            x = jax.nn.relu(_apply_conv(params[f"block{i}_conv{j}"], x))
+    return _apply_conv(params["head"], x)
+
+
+def detector_loss(params, frames, obj_target, box_target, arch: str):
+    """obj_target: (B, Hc, Wc) {0,1}; box_target: (B, Hc, Wc, 4)."""
+    out = detector_raw(params, frames, arch)
+    obj_logit = out[..., 0]
+    box = out[..., 1:]
+    obj = obj_target.astype(jnp.float32)
+    bce = jnp.maximum(obj_logit, 0) - obj_logit * obj \
+        + jnp.log1p(jnp.exp(-jnp.abs(obj_logit)))
+    # class-balanced normalization: positives are ~5-10% of cells, so a
+    # plain mean starves them of gradient and confidences stall below any
+    # usable threshold
+    n_pos = jnp.maximum(obj.sum(), 1.0)
+    n_neg = jnp.maximum((1 - obj).sum(), 1.0)
+    bce = (bce * obj).sum() / n_pos + (bce * (1 - obj)).sum() / n_neg
+    l1 = jnp.sum(jnp.abs(box - box_target) * obj[..., None]) \
+        / (n_pos * 4)
+    return bce + l1
+
+
+def make_targets(boxes_list: List[np.ndarray], hc: int, wc: int
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """boxes: per-frame (n, >=4) [cx, cy, w, h] world units -> targets."""
+    B = len(boxes_list)
+    obj = np.zeros((B, hc, wc), np.float32)
+    box = np.zeros((B, hc, wc, 4), np.float32)
+    for b, boxes in enumerate(boxes_list):
+        for row in boxes:
+            cx, cy, w, h = row[:4]
+            j = min(int(cx * wc), wc - 1)
+            i = min(int(cy * hc), hc - 1)
+            obj[b, i, j] = 1.0
+            # sizes in CELL units: input-resolution invariant (an object's
+            # pixel size is what the conv net sees, full frame or window)
+            box[b, i, j] = [cx * wc - j, cy * hc - i,
+                            np.log(max(w * wc, 1e-3)),
+                            np.log(max(h * hc, 1e-3))]
+    return obj, box
+
+
+@functools.partial(jax.jit, static_argnames=("arch",))
+def _detect_scores(params, frames, arch: str):
+    out = detector_raw(params, frames, arch)
+    return jax.nn.sigmoid(out[..., 0]), out[..., 1:]
+
+
+def decode_detections(scores: np.ndarray, boxes: np.ndarray,
+                      conf: float, origin: Tuple[float, float] = (0.0, 0.0),
+                      scale: Tuple[float, float] = (1.0, 1.0),
+                      max_dets: int = 64) -> np.ndarray:
+    """One frame's head outputs -> (n, 5) [cx, cy, w, h, score] world
+    units.  origin/scale place a WINDOW's cells into the full frame:
+    world = origin + cell_frac * scale."""
+    hc, wc = scores.shape
+    ii, jj = np.nonzero(scores > conf)
+    if len(ii) == 0:
+        return np.zeros((0, 5), np.float32)
+    sc = scores[ii, jj]
+    order = np.argsort(-sc)[:max_dets * 4]
+    ii, jj, sc = ii[order], jj[order], sc[order]
+    bx = boxes[ii, jj]
+    cx = origin[0] + (jj + np.clip(bx[:, 0], 0, 1)) / wc * scale[0]
+    cy = origin[1] + (ii + np.clip(bx[:, 1], 0, 1)) / hc * scale[1]
+    w = np.exp(np.clip(bx[:, 2], -5, 5)) / wc * scale[0]
+    h = np.exp(np.clip(bx[:, 3], -5, 5)) / hc * scale[1]
+    dets = np.stack([cx, cy, w, h, sc], axis=1).astype(np.float32)
+    return nms(dets)[:max_dets]
+
+
+def nms(dets: np.ndarray, iou_thresh: float = 0.45) -> np.ndarray:
+    if len(dets) == 0:
+        return dets
+    order = np.argsort(-dets[:, 4])
+    keep = []
+    for idx in order:
+        ok = True
+        for k in keep:
+            if iou(dets[idx, :4], dets[k, :4]) > iou_thresh:
+                ok = False
+                break
+        if ok:
+            keep.append(idx)
+    return dets[keep]
+
+
+def iou(a: np.ndarray, b: np.ndarray) -> float:
+    ax0, ay0 = a[0] - a[2] / 2, a[1] - a[3] / 2
+    ax1, ay1 = a[0] + a[2] / 2, a[1] + a[3] / 2
+    bx0, by0 = b[0] - b[2] / 2, b[1] - b[3] / 2
+    bx1, by1 = b[0] + b[2] / 2, b[1] + b[3] / 2
+    ix = max(0.0, min(ax1, bx1) - max(ax0, bx0))
+    iy = max(0.0, min(ay1, by1) - max(ay0, by0))
+    inter = ix * iy
+    union = a[2] * a[3] + b[2] * b[3] - inter
+    return inter / union if union > 0 else 0.0
+
+
+def iou_matrix(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """a: (n,4), b: (m,4) [cx,cy,w,h] -> (n,m) IoU."""
+    if len(a) == 0 or len(b) == 0:
+        return np.zeros((len(a), len(b)), np.float32)
+    ax0 = a[:, 0] - a[:, 2] / 2
+    ay0 = a[:, 1] - a[:, 3] / 2
+    ax1 = a[:, 0] + a[:, 2] / 2
+    ay1 = a[:, 1] + a[:, 3] / 2
+    bx0 = b[:, 0] - b[:, 2] / 2
+    by0 = b[:, 1] - b[:, 3] / 2
+    bx1 = b[:, 0] + b[:, 2] / 2
+    by1 = b[:, 1] + b[:, 3] / 2
+    ix = np.maximum(0, np.minimum(ax1[:, None], bx1[None]) -
+                    np.maximum(ax0[:, None], bx0[None]))
+    iy = np.maximum(0, np.minimum(ay1[:, None], by1[None]) -
+                    np.maximum(ay0[:, None], by0[None]))
+    inter = ix * iy
+    union = (a[:, 2] * a[:, 3])[:, None] + (b[:, 2] * b[:, 3])[None] - inter
+    return np.where(union > 0, inter / union, 0.0).astype(np.float32)
+
+
+class Detector:
+    """Stateful wrapper: params + arch + jit cache per input size."""
+
+    def __init__(self, arch: str, params=None, seed: int = 0):
+        self.arch = arch
+        self.params = params if params is not None else init_detector(
+            arch, seed)
+
+    def detect_batch(self, frames: np.ndarray, conf: float,
+                     origins=None, scales=None, max_dets: int = 64
+                     ) -> List[np.ndarray]:
+        """frames: (B, H, W, 3) -> list of (n, 5) world-unit detections.
+
+        origins/scales: per-frame window placement (see
+        decode_detections); default full frame."""
+        scores, boxes = _detect_scores(self.params,
+                                       jnp.asarray(frames), self.arch)
+        scores = np.asarray(scores)
+        boxes = np.asarray(boxes)
+        out = []
+        for b in range(frames.shape[0]):
+            o = origins[b] if origins is not None else (0.0, 0.0)
+            s = scales[b] if scales is not None else (1.0, 1.0)
+            out.append(decode_detections(scores[b], boxes[b], conf,
+                                         origin=o, scale=s,
+                                         max_dets=max_dets))
+        return out

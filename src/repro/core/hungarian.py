@@ -1,0 +1,90 @@
+"""Hungarian algorithm (min-cost assignment), host-side numpy.
+
+Classic O(n^3) potentials + augmenting-path formulation (Jonker-Volgenant
+style).  Rectangular matrices are padded with a large cost; pairs matched
+to padding are reported as unmatched.  Used by the recurrent tracker, the
+SORT baseline, and the MOTA metric.
+
+Hardware note (DESIGN.md §2): the paper runs Hungarian on the host CPU
+next to a GPU; we keep the same split on TPU — association matrices are
+tiny (<= max_tracks^2 = 64^2) so the assignment is host-side, bridged
+with ``jax.pure_callback`` when embedded in an on-device loop
+(``hungarian_on_device``).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+BIG = 1e9
+
+
+def hungarian(cost: np.ndarray) -> List[Tuple[int, int]]:
+    """cost: (n, m) -> list of (row, col) matched pairs (only real pairs;
+    entries with cost >= BIG/2 are treated as forbidden)."""
+    n, m = cost.shape
+    if n == 0 or m == 0:
+        return []
+    size = max(n, m)
+    a = np.full((size + 1, size + 1), BIG, np.float64)
+    a[1:n + 1, 1:m + 1] = cost
+    u = np.zeros(size + 1)
+    v = np.zeros(size + 1)
+    p = np.zeros(size + 1, np.int64)      # p[j] = row matched to col j
+    way = np.zeros(size + 1, np.int64)
+    for i in range(1, size + 1):
+        p[0] = i
+        j0 = 0
+        minv = np.full(size + 1, np.inf)
+        used = np.zeros(size + 1, bool)
+        while True:
+            used[j0] = True
+            i0 = p[j0]
+            delta = np.inf
+            j1 = -1
+            cur = a[i0, 1:] - u[i0] - v[1:]
+            for j in range(1, size + 1):
+                if used[j]:
+                    continue
+                if cur[j - 1] < minv[j]:
+                    minv[j] = cur[j - 1]
+                    way[j] = j0
+                if minv[j] < delta:
+                    delta = minv[j]
+                    j1 = j
+            u[p[used]] += delta
+            v[np.flatnonzero(used)] -= delta
+            minv[~used] -= delta
+            j0 = j1
+            if p[j0] == 0:
+                break
+        while j0:
+            j1 = way[j0]
+            p[j0] = p[j1]
+            j0 = j1
+    pairs = []
+    for j in range(1, size + 1):
+        i = int(p[j])
+        if 1 <= i <= n and 1 <= j <= m and cost[i - 1, j - 1] < BIG / 2:
+            pairs.append((i - 1, j - 1))
+    return pairs
+
+
+def hungarian_on_device(cost):
+    """On-device bridge: col index per row (-1 = unmatched) via
+    pure_callback into the numpy solver (association matrices are tiny)."""
+    import jax
+    import jax.numpy as jnp
+
+    n = cost.shape[0]
+
+    def _cb(c):
+        pairs = hungarian(np.asarray(c))
+        out = np.full((n,), -1, np.int32)
+        for r, cc in pairs:
+            out[r] = cc
+        return out
+
+    return jax.pure_callback(_cb, jax.ShapeDtypeStruct((n,), jnp.int32),
+                             cost)

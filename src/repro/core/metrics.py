@@ -1,0 +1,111 @@
+"""Accuracy metrics: pattern-count accuracy (the paper's hand-label
+metric, §4) and MOTA (§4.3 cross-check).
+
+Count accuracy: tracks are classified into the profile's spatial patterns
+by nearest start/end endpoints against the pattern polylines; per-clip
+accuracy = mean over patterns of  1 - |pred - gt| / max(gt, 1), floored at
+0 — matching the paper's "percent accuracy averaged over patterns and
+clips".
+
+MOTA = 1 - (FN + FP + IDSW) / GT, computed per frame with IoU >= 0.3
+Hungarian matching and identity bookkeeping.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.detector import iou_matrix
+from repro.core.hungarian import hungarian, BIG
+from repro.data.video_synth import Clip, Profile, _interp
+
+
+def classify_track(track: np.ndarray, profile: Profile) -> Optional[int]:
+    """track: (m, 6) world units -> pattern id (nearest path by endpoint
+    + midpoint distance) or None for stubs."""
+    if len(track) < 2:
+        return None
+    start, end = track[0, 1:3], track[-1, 1:3]
+    mid = track[len(track) // 2, 1:3]
+    best, best_d = None, np.inf
+    for pid, path in enumerate(profile.paths):
+        p0 = np.asarray(_interp(path.waypoints, 0.02))
+        p1 = np.asarray(_interp(path.waypoints, 0.98))
+        pm = np.asarray(_interp(path.waypoints, 0.5))
+        d = (np.linalg.norm(start - p0) + np.linalg.norm(end - p1)
+             + 0.5 * np.linalg.norm(mid - pm))
+        if d < best_d:
+            best_d, best = d, pid
+    return best
+
+
+def pattern_counts(tracks: Sequence[np.ndarray], profile: Profile,
+                   min_len: int = 2) -> np.ndarray:
+    counts = np.zeros(profile.patterns(), np.int64)
+    for t in tracks:
+        if len(t) < min_len:
+            continue          # ignore single-detection stubs (paper §4.2)
+        pid = classify_track(t, profile)
+        if pid is not None:
+            counts[pid] += 1
+    return counts
+
+
+def count_accuracy(pred_counts: np.ndarray, gt_counts: np.ndarray
+                   ) -> float:
+    """Mean over patterns of 1 - |pred-gt|/max(gt,1), floored at 0."""
+    acc = 1.0 - np.abs(pred_counts - gt_counts) / np.maximum(gt_counts, 1)
+    return float(np.clip(acc, 0.0, 1.0).mean())
+
+
+def clip_count_accuracy(tracks: Sequence[np.ndarray], clip: Clip
+                        ) -> float:
+    return count_accuracy(pattern_counts(tracks, clip.profile),
+                          clip.pattern_counts())
+
+
+# ---------------------------------------------------------------------------
+# MOTA
+# ---------------------------------------------------------------------------
+
+def mota(tracks: Sequence[np.ndarray], clip: Clip,
+         frames: Optional[Sequence[int]] = None,
+         iou_thresh: float = 0.3) -> float:
+    """Multi-Object Tracking Accuracy against the clip's exact GT."""
+    if frames is None:
+        frames = range(clip.n_frames)
+    # index predictions: frame -> (boxes, ids)
+    pred_by_frame: Dict[int, List[Tuple[np.ndarray, int]]] = {}
+    for t in tracks:
+        for row in t:
+            pred_by_frame.setdefault(int(row[0]), []).append(
+                (row[1:5], int(row[5])))
+    fn = fp = idsw = gt_total = 0
+    last_match: Dict[int, int] = {}      # gt id -> pred id
+    for f in frames:
+        gt = clip.boxes_at(f)
+        preds = pred_by_frame.get(f, [])
+        gt_total += len(gt)
+        if len(preds) == 0:
+            fn += len(gt)
+            continue
+        pb = np.stack([p[0] for p in preds])
+        iou = iou_matrix(gt[:, :4], pb)
+        cost = np.where(iou >= iou_thresh, 1.0 - iou, BIG)
+        pairs = hungarian(cost)
+        matched_gt = set()
+        matched_pred = set()
+        for gi, pi in pairs:
+            gid = int(gt[gi, 4])
+            pid = preds[pi][1]
+            if gid in last_match and last_match[gid] != pid:
+                idsw += 1
+            last_match[gid] = pid
+            matched_gt.add(gi)
+            matched_pred.add(pi)
+        fn += len(gt) - len(matched_gt)
+        fp += len(preds) - len(matched_pred)
+    if gt_total == 0:
+        return 1.0 if fp == 0 else 0.0
+    return 1.0 - (fn + fp + idsw) / gt_total

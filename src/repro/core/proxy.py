@@ -1,0 +1,120 @@
+"""Segmentation proxy model (§3.3): a small strided-conv encoder + 2-layer
+decoder scoring every CxC pixel cell with P(cell intersects a detection).
+
+The head (1x1 conv + sigmoid + threshold -> binary positive-cell grid) is
+the fused ``proxy_score`` Pallas kernel on TPU; the encoder is standard
+conv layers.  Training labels come from θ_best detections (never ground
+truth), per the paper.
+
+The cell size C is configurable (paper: 32; the reduced CPU pipeline uses
+8) — the encoder applies log2(C) stride-2 convs, then two 3x3 decoder
+convs at cell resolution.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.detector import _apply_conv, _conv
+from repro.kernels.proxy_score import proxy_score
+from repro.models.common import ParamBuilder, build
+
+
+def _n_levels(cell: int) -> int:
+    n = int(np.log2(cell))
+    assert 2 ** n == cell, f"cell {cell} must be a power of two"
+    return n
+
+
+def def_proxy(pb: ParamBuilder, cell: int, base_channels: int) -> None:
+    n = _n_levels(cell)
+    cin = 3
+    for i in range(n):
+        c = base_channels * min(2 ** i, 8)
+        _conv(pb, f"enc{i}", cin, c)
+        cin = c
+    _conv(pb, "dec0", cin, cin)
+    # dec1 is the fused head: declared as a 1x1 conv, applied via the
+    # proxy_score kernel (w: (cin,), b: scalar)
+    with pb.scope("head"):
+        pb.param("w", (cin,), (None,), scale=1.0 / np.sqrt(cin))
+        pb.param("b", (1,), (None,), init="zeros")
+
+
+def init_proxy(cell: int, base_channels: int, seed: int = 0):
+    return build(functools.partial(def_proxy, cell=cell,
+                                   base_channels=base_channels),
+                 "init", seed=seed)
+
+
+@functools.partial(jax.jit, static_argnames=("cell",))
+def proxy_features(params, frames, cell: int):
+    """frames: (B, H, W, 3) -> (B, H/C, W/C, channels)."""
+    n = _n_levels(cell)
+    x = frames
+    for i in range(n):
+        x = jax.nn.relu(_apply_conv(params[f"enc{i}"], x, stride=2))
+    return jax.nn.relu(_apply_conv(params["dec0"], x))
+
+
+@functools.partial(jax.jit, static_argnames=("cell",))
+def proxy_scores(params, frames, cell: int, threshold: float = 0.5):
+    """-> (scores (B, Hc, Wc) fp32, positive (B, Hc, Wc) int8) via the
+    fused head kernel."""
+    feat = proxy_features(params, frames, cell)
+    return proxy_score(feat, params["head"]["w"], params["head"]["b"][0],
+                       threshold)
+
+
+def proxy_loss(params, frames, cell_labels, cell: int):
+    """cell_labels: (B, Hc, Wc) {0,1} from θ_best detections."""
+    feat = proxy_features(params, frames, cell)
+    logits = jnp.einsum("bhwc,c->bhw", feat, params["head"]["w"]) \
+        + params["head"]["b"][0]
+    y = cell_labels.astype(jnp.float32)
+    bce = jnp.maximum(logits, 0) - logits * y \
+        + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    n_pos = jnp.maximum(y.sum(), 1.0)
+    n_neg = jnp.maximum((1 - y).sum(), 1.0)
+    return (bce * y).sum() / n_pos + (bce * (1 - y)).sum() / n_neg
+
+
+def cells_from_detections(dets: np.ndarray, hc: int, wc: int
+                          ) -> np.ndarray:
+    """Label a cell 1 if any detection box INTERSECTS it (paper wording).
+
+    dets: (n, >=4) [cx, cy, w, h] world units -> (hc, wc) int8."""
+    grid = np.zeros((hc, wc), np.int8)
+    for row in dets:
+        cx, cy, w, h = row[:4]
+        x0 = int(np.clip((cx - w / 2) * wc, 0, wc - 1e-6))
+        x1 = int(np.clip((cx + w / 2) * wc, 0, wc - 1e-6))
+        y0 = int(np.clip((cy - h / 2) * hc, 0, hc - 1e-6))
+        y1 = int(np.clip((cy + h / 2) * hc, 0, hc - 1e-6))
+        grid[y0:y1 + 1, x0:x1 + 1] = 1
+    return grid
+
+
+class ProxyModel:
+    """One trained proxy at one input resolution."""
+
+    def __init__(self, cell: int, base_channels: int,
+                 resolution: Tuple[int, int], params=None, seed: int = 0):
+        self.cell = cell
+        self.resolution = resolution                      # (W, H)
+        self.params = params if params is not None else init_proxy(
+            cell, base_channels, seed)
+
+    def grid_shape(self) -> Tuple[int, int]:
+        W, H = self.resolution
+        return H // self.cell, W // self.cell
+
+    def scores(self, frame: np.ndarray, threshold: float = 0.5
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        s, p = proxy_scores(self.params, jnp.asarray(frame[None]),
+                            self.cell, threshold)
+        return np.asarray(s[0]), np.asarray(p[0])

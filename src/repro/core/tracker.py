@@ -1,0 +1,503 @@
+"""Recurrent reduced-rate tracker (§3.4).
+
+Model = three components, per the paper:
+  1. detection-level features: a small CNN over the detection's image crop,
+     concatenated with the 4D box and the t_elapsed temporal feature
+     (frames since the previous detection — what makes one model robust
+     across every sampling gap g);
+  2. track-level features: a GRU over the prefix's detection features
+     (kept INCREMENTALLY at inference: one GRU step per appended
+     detection, so reduced-rate tracking costs O(1) per track per frame);
+  3. a matching MLP scoring (track feature, detection feature) pairs;
+     Hungarian assignment on the score matrix, with a threshold below
+     which a detection starts a new track.
+
+Training (gap-randomized, §3.4): examples are sampled from θ_best tracks;
+each example subsamples a track at a random gap g ~ G (one detection every
+>= g frames), uses the last subsampled detection as the positive candidate
+and same-frame detections of OTHER tracks as distractors, and trains the
+pair score with BCE (calibrated probabilities -> the same threshold serves
+Hungarian costs and new-track decisions).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.multiscope import TrackerConfig
+from repro.core.hungarian import hungarian, BIG
+from repro.models.common import ParamBuilder, build
+from repro.optim import adamw
+
+BOX_FEATS = 6      # cx, cy, w, h, t_elapsed/8, log1p(t_elapsed)
+REL_FEATS = 6      # dcx, dcy, dcx/te, dcy/te, dw, dh (candidate vs track)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def def_tracker(pb: ParamBuilder, cfg: TrackerConfig) -> None:
+    C = cfg.crop
+    e = cfg.embed_dim
+    with pb.scope("crop_cnn"):
+        pb.param("w0", (3, 3, 3, e // 2), (None,) * 4,
+                 scale=1.0 / np.sqrt(27))
+        pb.param("b0", (e // 2,), (None,), init="zeros")
+        pb.param("w1", (3, 3, e // 2, e), (None,) * 4,
+                 scale=1.0 / np.sqrt(9 * e // 2))
+        pb.param("b1", (e,), (None,), init="zeros")
+        flat = (C // 4) * (C // 4) * e
+        pb.param("wd", (flat, e), (None, None))
+        pb.param("bd", (e,), (None,), init="zeros")
+    with pb.scope("det_proj"):
+        pb.param("w", (e + BOX_FEATS, e), (None, None))
+        pb.param("b", (e,), (None,), init="zeros")
+    with pb.scope("gru"):
+        h, f = cfg.rnn_dim, e
+        pb.param("wz", (f + h, h), (None, None))
+        pb.param("wr", (f + h, h), (None, None))
+        pb.param("wh", (f + h, h), (None, None))
+        pb.param("bz", (h,), (None,), init="zeros")
+        pb.param("br", (h,), (None,), init="zeros")
+        pb.param("bh", (h,), (None,), init="zeros")
+    with pb.scope("match"):
+        pb.param("w0", (cfg.rnn_dim + e + REL_FEATS, cfg.match_hidden),
+                 (None, None))
+        pb.param("b0", (cfg.match_hidden,), (None,), init="zeros")
+        pb.param("w1", (cfg.match_hidden, 1), (None, None))
+        pb.param("b1", (1,), (None,), init="zeros")
+
+
+def init_tracker(cfg: TrackerConfig, seed: int = 0):
+    return build(functools.partial(def_tracker, cfg=cfg), "init",
+                 seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Forward pieces (fixed-shape jit)
+# ---------------------------------------------------------------------------
+
+def _conv(x, w, b, stride):
+    y = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return jax.nn.relu(y + b)
+
+
+@jax.jit
+def embed_dets(params, crops, boxes, t_elapsed):
+    """crops: (N, C, C, 3); boxes: (N, 4); t_elapsed: (N,) -> (N, e)."""
+    p = params["crop_cnn"]
+    x = _conv(crops, p["w0"], p["b0"], 2)
+    x = _conv(x, p["w1"], p["b1"], 2)
+    x = x.reshape(x.shape[0], -1)
+    x = jnp.tanh(x @ p["wd"] + p["bd"])
+    te = t_elapsed.astype(jnp.float32)
+    extra = jnp.stack([boxes[:, 0], boxes[:, 1], boxes[:, 2], boxes[:, 3],
+                       te / 8.0, jnp.log1p(te)], axis=1)
+    d = jnp.concatenate([x, extra], axis=1)
+    dp = params["det_proj"]
+    return jnp.tanh(d @ dp["w"] + dp["b"])
+
+
+@jax.jit
+def gru_step(params, h, feat):
+    """h: (..., H); feat: (..., e) -> new h."""
+    g = params["gru"]
+    hf = jnp.concatenate([feat, h], axis=-1)
+    z = jax.nn.sigmoid(hf @ g["wz"] + g["bz"])
+    r = jax.nn.sigmoid(hf @ g["wr"] + g["br"])
+    hf2 = jnp.concatenate([feat, r * h], axis=-1)
+    cand = jnp.tanh(hf2 @ g["wh"] + g["bh"])
+    return (1 - z) * h + z * cand
+
+
+def _rel_features(track_boxes, det_boxes, te):
+    """track_boxes: (T, 4); det_boxes: (N, 4); te: (N,) -> (T, N, 6)."""
+    d = det_boxes[None, :, :] - track_boxes[:, None, :]      # (T, N, 4)
+    tesafe = jnp.maximum(te, 1.0)[None, :, None]
+    return jnp.concatenate([
+        d[..., :2], d[..., :2] / tesafe, d[..., 2:]], axis=-1)
+
+
+@jax.jit
+def match_logits(params, track_h, track_boxes, det_feats, det_boxes, te):
+    """track_h: (T, H); track_boxes: (T, 4) last box per track;
+    det_feats: (N, e); det_boxes: (N, 4); te: (N,) -> (T, N) logits."""
+    m = params["match"]
+    T, N = track_h.shape[0], det_feats.shape[0]
+    rel = _rel_features(track_boxes, det_boxes, te)
+    pair = jnp.concatenate([
+        jnp.broadcast_to(track_h[:, None], (T, N, track_h.shape[1])),
+        jnp.broadcast_to(det_feats[None], (T, N, det_feats.shape[1])),
+        rel,
+    ], axis=-1)
+    hid = jnp.tanh(pair @ m["w0"] + m["b0"])
+    return (hid @ m["w1"] + m["b1"])[..., 0]
+
+
+@jax.jit
+def _train_loss(params, crops, boxes, te, prefix_mask, cand_mask, labels,
+                last_box):
+    """One batch of listwise examples.
+
+    crops/boxes/te: (B, L + K, C, C, 3)/(B, L+K, 4)/(B, L+K) — first L
+    slots are the prefix detections (masked by prefix_mask (B, L)), the
+    remaining K are candidates (masked by cand_mask (B, K));
+    labels: (B, K) {0,1} (the true continuation has 1).
+    """
+    B, LK = boxes.shape[:2]
+    feats = embed_dets(params, crops.reshape(B * LK, *crops.shape[2:]),
+                       boxes.reshape(B * LK, 4), te.reshape(B * LK))
+    feats = feats.reshape(B, LK, -1)
+    L = prefix_mask.shape[1]
+    K = cand_mask.shape[1]
+    pre, cand = feats[:, :L], feats[:, L:]
+    H = params["gru"]["bz"].shape[0]
+
+    def scan_body(h, x):
+        f, m = x
+        h2 = gru_step(params, h, f)
+        h = jnp.where(m[:, None] > 0, h2, h)
+        return h, None
+
+    h0 = jnp.zeros((B, H), jnp.float32)
+    hT, _ = jax.lax.scan(scan_body, h0,
+                         (jnp.moveaxis(pre, 1, 0),
+                          jnp.moveaxis(prefix_mask, 1, 0)))
+    # score each candidate against its own example's track feature,
+    # with relative-motion features vs the prefix's LAST box
+    m = params["match"]
+    cboxes = boxes[:, L:]                               # (B, K, 4)
+    cte = jnp.maximum(te[:, L:], 1.0)[..., None]
+    d = cboxes - last_box[:, None, :]
+    rel = jnp.concatenate([d[..., :2], d[..., :2] / cte, d[..., 2:]],
+                          axis=-1)
+    pair = jnp.concatenate(
+        [jnp.broadcast_to(hT[:, None], (B, K, H)), cand, rel], axis=-1)
+    hid = jnp.tanh(pair @ m["w0"] + m["b0"])
+    logits = (hid @ m["w1"] + m["b1"])[..., 0]          # (B, K)
+    y = labels.astype(jnp.float32)
+    bce = jnp.maximum(logits, 0) - logits * y \
+        + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    return (bce * cand_mask).sum() / jnp.maximum(cand_mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Crop extraction (host)
+# ---------------------------------------------------------------------------
+
+def extract_crop(frame: np.ndarray, box: np.ndarray, crop: int
+                 ) -> np.ndarray:
+    """Nearest-neighbor resample of the box region to (crop, crop, 3)."""
+    H, W = frame.shape[:2]
+    cx, cy, w, h = box[:4]
+    x0, x1 = (cx - w / 2) * W, (cx + w / 2) * W
+    y0, y1 = (cy - h / 2) * H, (cy + h / 2) * H
+    xs = np.clip(np.linspace(x0, x1, crop).astype(np.int64), 0, W - 1)
+    ys = np.clip(np.linspace(y0, y1, crop).astype(np.int64), 0, H - 1)
+    return frame[np.ix_(ys, xs)]
+
+
+# ---------------------------------------------------------------------------
+# Training
+# ---------------------------------------------------------------------------
+
+@dataclass
+class TrackExample:
+    """One θ_best track on one clip, with crops pre-extracted."""
+    frames: np.ndarray           # (n,)
+    boxes: np.ndarray            # (n, 4)
+    crops: np.ndarray            # (n, C, C, 3)
+    clip_key: int = 0            # same-clip grouping for hard negatives
+
+
+def build_examples(tracks: Sequence[np.ndarray],
+                   frame_getter, crop: int,
+                   clip_key: int = 0) -> List[TrackExample]:
+    """tracks: (n, 6) [frame, cx, cy, w, h, id] arrays; frame_getter(f)
+    -> rendered frame."""
+    out = []
+    for tr in tracks:
+        if len(tr) < 3:
+            continue
+        crops = np.stack([
+            extract_crop(frame_getter(int(f)), b, crop)
+            for f, b in zip(tr[:, 0], tr[:, 1:5])])
+        out.append(TrackExample(tr[:, 0].astype(np.int64), tr[:, 1:5],
+                                crops, clip_key))
+    return out
+
+
+def train_tracker(cfg: TrackerConfig, examples: List[TrackExample],
+                  steps: int = 1500, batch: int = 32, seed: int = 0,
+                  lr: float = 3e-3, max_prefix: int = 6, n_cand: int = 6):
+    params = init_tracker(cfg, seed)
+    opt = adamw(lr=lr, weight_decay=0.0)
+    state = opt.init(params)
+    vg = jax.jit(jax.value_and_grad(_train_loss))
+    rng = np.random.default_rng(seed)
+    C = cfg.crop
+    gaps = cfg.gaps
+    losses = []
+    if not examples:
+        return params, losses
+
+    def sample_example():
+        ex = examples[rng.integers(len(examples))]
+        g = int(gaps[rng.integers(len(gaps))])
+        # subsample at gap g: next det >= g frames after the previous
+        idx = [0]
+        for i in range(1, len(ex.frames)):
+            if ex.frames[i] - ex.frames[idx[-1]] >= g:
+                idx.append(i)
+        if len(idx) < 2:
+            return None
+        split = int(rng.integers(1, len(idx)))
+        prefix, pos = idx[:split], idx[split]
+        prefix = prefix[-max_prefix:]
+        pos_frame = int(ex.frames[pos])
+        # distractors: same-frame detections of other tracks; SAME-CLIP
+        # tracks preferred (hard negatives — nearby objects in the same
+        # scene) with random-clip fallback
+        negs = []
+        same = [o for o in examples
+                if o is not ex and o.clip_key == ex.clip_key]
+        pools = (same, examples)
+        for pool in pools:
+            for _ in range(3 * (n_cand - 1)):
+                if len(negs) >= n_cand - 1 or not pool:
+                    break
+                other = pool[rng.integers(len(pool))]
+                if other is ex:
+                    continue
+                j = np.searchsorted(other.frames, pos_frame)
+                j = min(j, len(other.frames) - 1)
+                # same-clip negatives must actually overlap in time
+                if pool is same and abs(int(other.frames[j])
+                                        - pos_frame) > 8:
+                    continue
+                negs.append((other, j))
+            if len(negs) >= n_cand - 1:
+                break
+        return ex, prefix, pos, negs
+
+    L, K = max_prefix, n_cand
+    for step in range(steps):
+        crops = np.zeros((batch, L + K, C, C, 3), np.float32)
+        boxes = np.zeros((batch, L + K, 4), np.float32)
+        te = np.zeros((batch, L + K), np.float32)
+        pmask = np.zeros((batch, L), np.float32)
+        cmask = np.zeros((batch, K), np.float32)
+        labels = np.zeros((batch, K), np.float32)
+        last_box = np.zeros((batch, 4), np.float32)
+        b = 0
+        while b < batch:
+            s = sample_example()
+            if s is None:
+                continue
+            ex, prefix, pos, negs = s
+            off = L - len(prefix)
+            prev_f = None
+            for slot, i in enumerate(prefix):
+                crops[b, off + slot] = ex.crops[i]
+                boxes[b, off + slot] = ex.boxes[i]
+                te[b, off + slot] = 0 if prev_f is None else \
+                    ex.frames[i] - prev_f
+                pmask[b, off + slot] = 1
+                prev_f = ex.frames[i]
+            last_box[b] = ex.boxes[prefix[-1]]
+            t_gap = float(ex.frames[pos] - ex.frames[prefix[-1]])
+            crops[b, L] = ex.crops[pos]
+            boxes[b, L] = ex.boxes[pos]
+            te[b, L] = t_gap
+            cmask[b, 0] = 1
+            labels[b, 0] = 1
+            for slot, (other, j) in enumerate(negs):
+                crops[b, L + 1 + slot] = other.crops[j]
+                boxes[b, L + 1 + slot] = other.boxes[j]
+                te[b, L + 1 + slot] = t_gap
+                cmask[b, 1 + slot] = 1
+            b += 1
+        loss, g = vg(params, jnp.asarray(crops), jnp.asarray(boxes),
+                     jnp.asarray(te), jnp.asarray(pmask),
+                     jnp.asarray(cmask), jnp.asarray(labels),
+                     jnp.asarray(last_box))
+        params, state = opt.update(g, state, params)
+        losses.append(float(loss))
+    return params, losses
+
+
+# ---------------------------------------------------------------------------
+# Inference
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _ActiveTrack:
+    track_id: int
+    h: np.ndarray                # GRU state
+    frames: List[int]
+    boxes: List[np.ndarray]
+    misses: int = 0
+
+    def as_array(self) -> np.ndarray:
+        out = np.zeros((len(self.frames), 6), np.float32)
+        out[:, 0] = self.frames
+        out[:, 1:5] = np.stack(self.boxes)
+        out[:, 5] = self.track_id
+        return out
+
+
+def _pad(n: int, mult: int = 8) -> int:
+    return max(mult, ((n + mult - 1) // mult) * mult)
+
+
+class RecurrentTracker:
+    """Online inference: incremental GRU states + Hungarian matching."""
+
+    def __init__(self, cfg: TrackerConfig, params, max_misses: int = 2,
+                 min_hits: int = 2):
+        self.cfg = cfg
+        self.params = params
+        self.max_misses = max_misses
+        self.min_hits = min_hits
+        self.active: List[_ActiveTrack] = []
+        self.finished: List[_ActiveTrack] = []
+        self._next_id = 0
+        self._last_frame: Optional[int] = None
+
+    def step(self, frame_idx: int, dets: np.ndarray,
+             frame: np.ndarray) -> None:
+        """dets: (n, >=4) world-unit detections; frame: rendered pixels."""
+        cfg = self.cfg
+        n = len(dets)
+        te_scalar = 0.0 if self._last_frame is None else \
+            float(frame_idx - self._last_frame)
+        self._last_frame = frame_idx
+        if n > 0:
+            C = cfg.crop
+            crops = np.stack([extract_crop(frame, d, C) for d in dets])
+            npad = _pad(n)
+            crops_p = np.zeros((npad, C, C, 3), np.float32)
+            crops_p[:n] = crops
+            boxes_p = np.zeros((npad, 4), np.float32)
+            boxes_p[:n] = dets[:, :4]
+            te_p = np.full((npad,), te_scalar, np.float32)
+            feats = np.asarray(embed_dets(
+                self.params, jnp.asarray(crops_p), jnp.asarray(boxes_p),
+                jnp.asarray(te_p)))[:n]
+        else:
+            feats = np.zeros((0, cfg.embed_dim), np.float32)
+
+        T = len(self.active)
+        pairs = []
+        if T > 0 and n > 0:
+            tpad = _pad(T)
+            hs = np.zeros((tpad, cfg.rnn_dim), np.float32)
+            tboxes = np.zeros((tpad, 4), np.float32)
+            for i, t in enumerate(self.active):
+                hs[i] = t.h
+                tboxes[i] = t.boxes[-1]
+            npad = _pad(n)
+            fpad = np.zeros((npad, feats.shape[1]), np.float32)
+            fpad[:n] = feats
+            dboxes = np.zeros((npad, 4), np.float32)
+            dboxes[:n] = dets[:, :4]
+            te_arr = np.full((npad,), max(te_scalar, 1.0), np.float32)
+            logits = np.asarray(match_logits(
+                self.params, jnp.asarray(hs), jnp.asarray(tboxes),
+                jnp.asarray(fpad), jnp.asarray(dboxes),
+                jnp.asarray(te_arr)))[:T, :n]
+            probs = 1.0 / (1.0 + np.exp(-logits))
+            cost = np.where(probs >= cfg.match_threshold, 1.0 - probs,
+                            BIG)
+            pairs = hungarian(cost)
+
+        matched_t, matched_d = set(), set()
+        upd_feats, upd_tracks = [], []
+        for ti, di in pairs:
+            t = self.active[ti]
+            # GRU update uses the WITHIN-TRACK gap
+            gap = float(frame_idx - t.frames[-1])
+            upd_tracks.append(t)
+            upd_feats.append((di, gap))
+            t.frames.append(frame_idx)
+            t.boxes.append(dets[di, :4].astype(np.float32))
+            t.misses = 0
+            matched_t.add(ti)
+            matched_d.add(di)
+        if upd_tracks:
+            C = cfg.crop
+            idxs = [di for di, _ in upd_feats]
+            gaps = np.asarray([g for _, g in upd_feats], np.float32)
+            m = len(upd_tracks)
+            mpad = _pad(m)
+            crops_u = np.zeros((mpad, C, C, 3), np.float32)
+            boxes_u = np.zeros((mpad, 4), np.float32)
+            te_u = np.zeros((mpad,), np.float32)
+            for k, di in enumerate(idxs):
+                crops_u[k] = extract_crop(frame, dets[di], C)
+                boxes_u[k] = dets[di, :4]
+                te_u[k] = gaps[k]
+            f_u = embed_dets(self.params, jnp.asarray(crops_u),
+                             jnp.asarray(boxes_u), jnp.asarray(te_u))
+            hs = np.stack([t.h for t in upd_tracks])
+            hs_p = np.zeros((mpad, self.cfg.rnn_dim), np.float32)
+            hs_p[:m] = hs
+            new_h = np.asarray(gru_step(self.params, jnp.asarray(hs_p),
+                                        f_u))[:m]
+            for k, t in enumerate(upd_tracks):
+                t.h = new_h[k]
+
+        # age out unmatched
+        survivors = []
+        for ti, t in enumerate(self.active):
+            if ti in matched_t:
+                survivors.append(t)
+                continue
+            t.misses += 1
+            if t.misses > self.max_misses:
+                self.finished.append(t)
+            else:
+                survivors.append(t)
+        self.active = survivors
+
+        # new tracks
+        new_idx = [di for di in range(n) if di not in matched_d]
+        if new_idx:
+            C = cfg.crop
+            m = len(new_idx)
+            mpad = _pad(m)
+            crops_u = np.zeros((mpad, C, C, 3), np.float32)
+            boxes_u = np.zeros((mpad, 4), np.float32)
+            te_u = np.zeros((mpad,), np.float32)
+            for k, di in enumerate(new_idx):
+                crops_u[k] = extract_crop(frame, dets[di], C)
+                boxes_u[k] = dets[di, :4]
+            f_u = np.asarray(embed_dets(
+                self.params, jnp.asarray(crops_u), jnp.asarray(boxes_u),
+                jnp.asarray(te_u)))
+            h0 = np.zeros((mpad, self.cfg.rnn_dim), np.float32)
+            h_new = np.asarray(gru_step(self.params, jnp.asarray(h0),
+                                        jnp.asarray(f_u)))
+            for k, di in enumerate(new_idx):
+                t = _ActiveTrack(self._next_id, h_new[k], [frame_idx],
+                                 [dets[di, :4].astype(np.float32)])
+                self.active.append(t)
+                self._next_id += 1
+        # cap active set (static max_tracks capacity)
+        if len(self.active) > self.cfg.max_tracks:
+            self.active.sort(key=lambda t: -len(t.frames))
+            self.finished.extend(self.active[self.cfg.max_tracks:])
+            self.active = self.active[:self.cfg.max_tracks]
+
+    def result(self) -> List[np.ndarray]:
+        tracks = self.finished + self.active
+        return [t.as_array() for t in tracks
+                if len(t.frames) >= self.min_hits]

@@ -1,0 +1,206 @@
+"""Cell-grouping and fixed window-size-set selection (§3.3).
+
+Host-side control logic (numpy), mirroring the paper's CPU-side grouping
+next to the accelerator:
+
+  * ``group_cells`` — positive cells -> rectangular windows drawn from the
+    fixed size set S: connected components first (objects span cells), then
+    density-based agglomerative merging that accepts a merge whenever the
+    merged window is estimated FASTER than processing the parts separately;
+  * ``select_window_sizes`` — the offline greedy choice of S (|S| = k,
+    always containing the full frame): iteratively add the candidate size
+    minimizing ``tot_time`` = sum over training frames of est(R(I_t; S)),
+    assuming a perfect proxy (positive cells = θ_best detections).
+
+Window sizes and positions are in CELL units (multiples of the proxy cell
+= 32 px at full scale), which is also what makes the TPU ``window_gather``
+kernel a pure block DMA.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+Size = Tuple[int, int]          # (w_cells, h_cells)
+Window = Tuple[int, int, Size]  # (x_cell, y_cell, size)
+
+
+@dataclass
+class SizeSet:
+    """The fixed set S with per-size detector execution times (seconds)."""
+    sizes: List[Size]            # sizes[0] is always the full frame
+    times: Dict[Size, float]
+
+    @property
+    def full(self) -> Size:
+        return self.sizes[0]
+
+    def smallest_covering(self, w: int, h: int) -> Optional[Size]:
+        """Smallest-area size covering (w, h) cells; None -> full frame."""
+        best = None
+        for s in self.sizes:
+            if s[0] >= w and s[1] >= h:
+                if best is None or s[0] * s[1] < best[0] * best[1]:
+                    best = s
+        return best
+
+    def est(self, windows: Sequence[Window]) -> float:
+        return sum(self.times[s] for _, _, s in windows)
+
+
+def connected_components(grid: np.ndarray) -> List[np.ndarray]:
+    """grid: (hc, wc) {0,1} -> list of (n, 2) [y, x] cell index arrays
+    (4-connectivity)."""
+    hc, wc = grid.shape
+    seen = np.zeros_like(grid, bool)
+    comps = []
+    for y0, x0 in zip(*np.nonzero(grid)):
+        if seen[y0, x0]:
+            continue
+        stack = [(y0, x0)]
+        seen[y0, x0] = True
+        cells = []
+        while stack:
+            y, x = stack.pop()
+            cells.append((y, x))
+            for dy, dx in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+                yy, xx = y + dy, x + dx
+                if 0 <= yy < hc and 0 <= xx < wc and grid[yy, xx] \
+                        and not seen[yy, xx]:
+                    seen[yy, xx] = True
+                    stack.append((yy, xx))
+        comps.append(np.asarray(cells, np.int64))
+    return comps
+
+
+def _bbox(cells: np.ndarray) -> Tuple[int, int, int, int]:
+    y0, x0 = cells.min(axis=0)
+    y1, x1 = cells.max(axis=0)
+    return int(x0), int(y0), int(x1 - x0 + 1), int(y1 - y0 + 1)
+
+
+def group_cells(grid: np.ndarray, sizeset: SizeSet,
+                max_windows: int = 8) -> List[Window]:
+    """Positive-cell grid -> windows covering all positive cells.
+
+    Returns [] for an empty grid (frame fully skipped).  Falls back to one
+    full-frame window when a cluster exceeds every size in S or the window
+    count exceeds ``max_windows`` (static per-frame capacity)."""
+    hc, wc = grid.shape
+    full = sizeset.full
+    comps = connected_components(grid)
+    if not comps:
+        return []
+
+    def size_or_full(w: int, h: int) -> Size:
+        s = sizeset.smallest_covering(w, h)
+        return s if s is not None else full
+
+    clusters: List[np.ndarray] = comps
+    # agglomerative merging: keep merging while some merge reduces est time
+    merged_any = True
+    while merged_any and len(clusters) > 1:
+        merged_any = False
+        i = 0
+        while i < len(clusters):
+            ci = clusters[i]
+            # closest neighbor by centroid distance
+            cen = np.array([c.mean(axis=0) for c in clusters])
+            d = np.linalg.norm(cen - cen[i], axis=1)
+            d[i] = np.inf
+            j = int(np.argmin(d))
+            if not np.isfinite(d[j]):
+                break
+            prop = [i, j]
+            merged_cells = np.concatenate([clusters[i], clusters[j]])
+            x, y, w, h = _bbox(merged_cells)
+            s_merged = size_or_full(w, h)
+            # absorb any other cluster that fits without a larger window
+            for k in range(len(clusters)):
+                if k in prop:
+                    continue
+                trial = np.concatenate([merged_cells, clusters[k]])
+                tx, ty, tw, th = _bbox(trial)
+                if size_or_full(tw, th) == s_merged \
+                        and tw <= s_merged[0] and th <= s_merged[1]:
+                    merged_cells = trial
+                    prop.append(k)
+            t_merged = sizeset.times[s_merged]
+            t_split = 0.0
+            for k in prop:
+                x_, y_, w_, h_ = _bbox(clusters[k])
+                t_split += sizeset.times[size_or_full(w_, h_)]
+            if t_merged < t_split:
+                clusters = [c for k, c in enumerate(clusters)
+                            if k not in prop] + [merged_cells]
+                merged_any = True
+            else:
+                i += 1
+
+    windows: List[Window] = []
+    for cells in clusters:
+        x, y, w, h = _bbox(cells)
+        s = sizeset.smallest_covering(w, h)
+        if s is None:
+            return [(0, 0, full)]
+        # place the window to cover the bbox, clamped inside the grid
+        wx = min(x, wc - s[0])
+        wy = min(y, hc - s[1])
+        windows.append((max(wx, 0), max(wy, 0), s))
+    if len(windows) > max_windows:
+        return [(0, 0, full)]
+    # estimated-cost sanity: never worse than one full frame
+    if sizeset.est(windows) >= sizeset.times[full]:
+        return [(0, 0, full)]
+    return windows
+
+
+# ---------------------------------------------------------------------------
+# Offline size-set selection
+# ---------------------------------------------------------------------------
+
+def detector_time_model(full_size: Size, t_full: float,
+                        overhead_frac: float = 0.25
+                        ) -> Callable[[Size], float]:
+    """Analytic per-size time: fixed dispatch overhead + pixel-linear
+    term, calibrated so the full frame costs ``t_full``.  Used during size
+    selection (measuring every candidate would need one jit per size);
+    the k CHOSEN sizes are then measured for real by the tuner cache."""
+    area_full = full_size[0] * full_size[1]
+    t0 = t_full * overhead_frac
+
+    def t(size: Size) -> float:
+        return t0 + (t_full - t0) * (size[0] * size[1]) / area_full
+    return t
+
+
+def select_window_sizes(grids: Sequence[np.ndarray], full_size: Size,
+                        k: int, time_fn: Callable[[Size], float],
+                        max_windows: int = 8) -> List[Size]:
+    """Greedy S selection over training-frame positive grids (assumed
+    perfect-proxy = cells of θ_best detections)."""
+    wc_full, hc_full = full_size
+    candidates = [(w, h)
+                  for w in range(1, wc_full + 1)
+                  for h in range(1, hc_full + 1)
+                  if (w, h) != full_size]
+    S: List[Size] = [full_size]
+
+    def tot_time(sizes: List[Size]) -> float:
+        ss = SizeSet(sizes, {s: time_fn(s) for s in sizes})
+        return sum(ss.est(group_cells(g, ss, max_windows)) for g in grids)
+
+    for _ in range(k - 1):
+        best_s, best_t = None, tot_time(S)
+        for cand in candidates:
+            if cand in S:
+                continue
+            t = tot_time(S + [cand])
+            if t < best_t - 1e-12:
+                best_t, best_s = t, cand
+        if best_s is None:
+            break
+        S.append(best_s)
+    return S

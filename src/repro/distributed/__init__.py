@@ -1,0 +1,1 @@
+from repro.distributed.sharding import LogicalRules, tree_pspecs, tree_shardings  # noqa: F401

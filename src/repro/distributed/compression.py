@@ -1,0 +1,77 @@
+"""Error-feedback int8 gradient compression for cross-pod reduction.
+
+At 2+ pods the inter-pod links are the scarcest bandwidth (data-center
+interconnect vs intra-pod ICI), so cross-pod gradient all-reduce is the
+tensor to compress.  We use the standard error-feedback scheme (1-bit
+Adam / EF-SGD lineage, here at 8 bits):
+
+    q_t   = Q(g_t + e_{t-1})          # int8 row-wise absmax quantization
+    e_t   = (g_t + e_{t-1}) - D(q_t)  # residual kept LOCALLY
+    out   = D(allreduce(q_t))         # wire carries int8 (4x fewer bytes)
+
+The residual e_t re-enters the next step, so quantization error
+accumulates to zero rather than biasing the trajectory.
+
+Two entry points:
+  * ``ef_roundtrip`` — pure quantize/dequantize + error feedback, used as a
+    TrainStep.grad_transform; under SPMD jit the all-reduce stays fused in
+    XLA and this simulates exactly the wire precision (the numerics the
+    tests validate).
+  * ``compressed_psum`` — explicit shard_map psum over a named axis in
+    int32 (summing int8 payloads without overflow: 8-bit values x <= 2^15
+    pods fit int32), for deployments that lower the cross-pod reduce
+    manually.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def _quant(x):
+    """fp32 -> (int8, row absmax scale).  Rows = last axis."""
+    if x.ndim == 0:
+        scale = jnp.maximum(jnp.abs(x), 1e-30)
+        return jnp.round(x / scale * 127).astype(jnp.int8), scale
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-30)
+    q = jnp.round(jnp.clip(x / scale, -1, 1) * 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant(q, scale):
+    return q.astype(jnp.float32) * scale / 127.0
+
+
+def init_error_buffer(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def ef_roundtrip(grads: PyTree, err: PyTree) -> Tuple[PyTree, PyTree]:
+    """Quantize grads+err to int8 precision and return (dequantized grads,
+    new error buffer)."""
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        q, s = _quant(x)
+        d = _dequant(q, s)
+        return d, x - d
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(err)
+    pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([p[0] for p in pairs]),
+            treedef.unflatten([p[1] for p in pairs]))
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """int8-on-the-wire psum for use INSIDE shard_map: quantize locally,
+    sum int32 payloads across the axis, dequantize with the max scale."""
+    q, scale = _quant(x)
+    scale_max = jax.lax.pmax(scale, axis_name)
+    # renormalize local payload to the common scale before the wire sum
+    q2 = jnp.round(_dequant(q, scale) / scale_max * 127).astype(jnp.int32)
+    total = jax.lax.psum(q2, axis_name)
+    return total.astype(jnp.float32) * scale_max / 127.0

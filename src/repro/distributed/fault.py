@@ -1,0 +1,93 @@
+"""Fault tolerance + straggler mitigation for the training loop.
+
+``Supervisor`` wraps the step loop with:
+  * periodic checkpointing (async) via repro.distributed.checkpoint;
+  * crash recovery: any exception from the step function triggers a
+    restore-from-latest and replay (bounded retries) — on a real cluster
+    the restart path re-resolves the mesh from live hosts first (see
+    repro.distributed.elastic);
+  * straggler detection: an EWMA of per-step wall time per host; hosts
+    exceeding ``straggler_factor`` x the median over a window are flagged
+    and reported through ``on_straggler`` (deployments use this to request
+    backup workers / evict the host).
+
+The data pipeline must be SKIPPABLE (batch_at(step)) so replay after
+restore does not double-train — repro.data.tokens provides that.
+"""
+from __future__ import annotations
+
+import time
+from collections import defaultdict, deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+from repro.distributed.checkpoint import Checkpointer
+
+
+@dataclass
+class HeartbeatMonitor:
+    window: int = 20
+    straggler_factor: float = 2.0
+    _times: Dict[int, deque] = field(default_factory=lambda: defaultdict(
+        lambda: deque(maxlen=64)))
+
+    def record(self, host: int, seconds: float) -> None:
+        self._times[host].append(seconds)
+
+    def stragglers(self):
+        import statistics
+        means = {h: statistics.fmean(list(ts)[-self.window:])
+                 for h, ts in self._times.items() if ts}
+        if len(means) < 2:
+            return []
+        med = statistics.median(means.values())
+        return [h for h, m in means.items()
+                if m > self.straggler_factor * med]
+
+
+@dataclass
+class Supervisor:
+    checkpointer: Checkpointer
+    checkpoint_every: int = 50
+    max_restarts: int = 3
+    on_straggler: Optional[Callable[[list], None]] = None
+    monitor: HeartbeatMonitor = field(default_factory=HeartbeatMonitor)
+    restarts: int = 0
+
+    def run(self, state: Any, step_fn: Callable[[Any, int], Any],
+            start_step: int, num_steps: int,
+            template: Any = None, shardings: Any = None) -> Any:
+        """Run ``num_steps`` of ``step_fn(state, step) -> state`` with
+        checkpoint/restart.  ``template`` defaults to ``state`` (used to
+        rebuild the pytree on restore)."""
+        template = state if template is None else template
+        step = start_step
+        end = start_step + num_steps
+        while step < end:
+            try:
+                t0 = time.monotonic()
+                state = step_fn(state, step)
+                self.monitor.record(0, time.monotonic() - t0)
+                step += 1
+                if step % self.checkpoint_every == 0:
+                    self.checkpointer.save(step, state, async_=True)
+                bad = self.monitor.stragglers()
+                if bad and self.on_straggler:
+                    self.on_straggler(bad)
+            except KeyboardInterrupt:
+                raise
+            except Exception:
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise
+                self.checkpointer.wait()
+                latest = self.checkpointer.latest_step()
+                if latest is None:
+                    # nothing durable yet: restart from the initial state
+                    step = start_step
+                    continue
+                state, manifest = self.checkpointer.restore(
+                    template, step=latest, shardings=shardings)
+                step = manifest["step"]
+        self.checkpointer.wait()
+        return state

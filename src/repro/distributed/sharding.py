@@ -1,0 +1,153 @@
+"""Logical-axis -> mesh-axis sharding rules with divisibility fallback.
+
+Every tensor in the framework (params, activations, caches, optimizer state)
+carries *logical* axes ("embed", "mlp", "vocab", "batch", "kv_seq", ...).
+``LogicalRules`` resolves them against a concrete mesh:
+
+  * each logical axis has a priority list of candidate mesh axes / axis
+    tuples;
+  * a candidate is taken only if its total size divides the tensor dim and
+    none of its mesh axes are already used by another dim of the same tensor;
+  * otherwise fall through; an exhausted list means replicate that dim.
+
+This one mechanism gives DP (+pod DP), FSDP/ZeRO-3 (weight "embed" dims on
+the data axes), TP (mlp/qkv/vocab/heads on "model"), EP (experts on "model"
+with TP-within-expert fallback for n_experts < model-axis, e.g. grok's 8
+experts on a 16-wide model axis) and SP (kv_seq on "model" when kv_heads
+doesn't divide — the 500k-context decode path).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Candidate = Tuple[str, ...]
+
+
+# Priority lists per logical axis.  Entries are tuples of mesh axis names;
+# "+pod" variants are synthesized automatically when the mesh has a pod axis.
+DEFAULT_RULES: Dict[str, List[Candidate]] = {
+    # weight axes
+    "embed":      [("data",)],           # FSDP / ZeRO-3 weight sharding
+    "vocab":      [("model",)],
+    "mlp":        [("model",)],
+    "qkv":        [("model",)],          # q-projection output dim
+    "kv":         [("model",)],          # kv-projection output dim
+    "expert":     [("model",)],          # EP when n_experts divides
+    "expert_mlp": [("model",)],          # TP-within-expert fallback
+    "conv":       [],
+    "layers":     [],
+    "state":      [],
+    # activation axes
+    "batch":      [("pod", "data"), ("data",)],
+    "seq":        [],
+    "heads":      [("model",)],
+    "kv_heads":   [("model",)],
+    "head_dim":   [("model",)],          # fallback TP when heads don't divide
+    "kv_seq":     [("model",)],          # SP for long-context KV caches
+    "cell_y":     [],                    # MultiScope proxy grids
+    "cell_x":     [],
+}
+
+# For MoE expert weights, when "expert" can't shard we want the expert's own
+# mlp dim to pick up "model" — expressed by listing both and letting the
+# used-axis bookkeeping handle it (see pspec_for_shape).
+
+
+class LogicalRules:
+    def __init__(self, mesh: Mesh,
+                 rules: Optional[Dict[str, List[Candidate]]] = None):
+        self.mesh = mesh
+        self.axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        self.rules = dict(DEFAULT_RULES)
+        if rules:
+            self.rules.update(rules)
+
+    def _expand(self, cand: Candidate) -> Optional[Tuple[str, ...]]:
+        """Map a candidate onto this mesh; synthesize pod prefixing for
+        'data', drop candidates that reference absent axes."""
+        names = []
+        for ax in cand:
+            if ax == "pod" and "pod" not in self.axis_sizes:
+                continue
+            if ax not in self.axis_sizes:
+                return None
+            names.append(ax)
+        if not names:
+            return None
+        return tuple(names)
+
+    def _cand_size(self, names: Tuple[str, ...]) -> int:
+        return int(np.prod([self.axis_sizes[n] for n in names]))
+
+    def candidates(self, logical: str) -> List[Tuple[str, ...]]:
+        out = []
+        for cand in self.rules.get(logical, []):
+            # synthesize ("pod", ...) variant first when pod exists
+            if "pod" in self.axis_sizes and "pod" not in cand \
+                    and cand and cand[0] == "data":
+                exp = self._expand(("pod",) + cand)
+                if exp:
+                    out.append(exp)
+            exp = self._expand(cand)
+            if exp:
+                out.append(exp)
+        return out
+
+    def pspec_for_shape(self, shape: Sequence[int],
+                        axes: Sequence[Optional[str]]) -> P:
+        """Resolve logical axes against a concrete shape."""
+        if len(shape) != len(axes):
+            raise ValueError(f"shape {shape} vs axes {axes}")
+        used: set = set()
+        entries: List[Optional[Tuple[str, ...]]] = []
+        for dim, logical in zip(shape, axes):
+            entry: Optional[Tuple[str, ...]] = None
+            if logical is not None:
+                for cand in self.candidates(logical):
+                    if any(n in used for n in cand):
+                        continue
+                    if dim % self._cand_size(cand) == 0:
+                        entry = cand
+                        used.update(cand)
+                        break
+            entries.append(entry)
+        return P(*[e if e is None or len(e) > 1 else e[0] for e in entries])
+
+    def pspec(self, axes: Sequence[Optional[str]],
+              shape: Sequence[int]) -> P:
+        return self.pspec_for_shape(shape, axes)
+
+    def named_sharding(self, shape: Sequence[int],
+                       axes: Sequence[Optional[str]]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.pspec_for_shape(shape, axes))
+
+
+def is_axes_leaf(x) -> bool:
+    """An axes annotation: tuple of axis names / None (() = scalar)."""
+    return isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+
+def tree_pspecs(rules: LogicalRules, shapes, axes_tree):
+    """Map matching (ShapeDtypeStruct tree, logical-axes tree) -> PSpec
+    tree.  Axes tree drives the traversal so scalar axes ``()`` work."""
+    import jax
+    return jax.tree.map(
+        lambda ax, sds: rules.pspec_for_shape(sds.shape, ax),
+        axes_tree, shapes, is_leaf=is_axes_leaf)
+
+
+def tree_shardings(rules: LogicalRules, shapes, axes_tree):
+    import jax
+    specs = tree_pspecs(rules, shapes, axes_tree)
+    return jax.tree.map(lambda s: NamedSharding(rules.mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def replicated_like(mesh: Mesh, tree):
+    """Fully-replicated NamedSharding tree matching ``tree``."""
+    import jax
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

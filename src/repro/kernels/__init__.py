@@ -1,0 +1,41 @@
+"""Pallas TPU kernels for the perf-critical compute hot spots.
+
+Each kernel subpackage follows the same layout:
+
+  kernel.py — ``pl.pallas_call`` + explicit ``BlockSpec`` VMEM tiling,
+              written for the TPU target (MXU-aligned tiles, sequential
+              grid axes for accumulation).
+  ops.py    — the public jit'd wrapper.  Dispatches to the Pallas kernel
+              on TPU and to a memory-equivalent pure-jnp implementation on
+              CPU (this container), so models lower identically everywhere.
+  ref.py    — the pure-jnp oracle used by tests (``interpret=True`` runs
+              the kernel body on CPU and is asserted allclose against it).
+
+Kernels:
+  flash_attention — block-tiled online-softmax causal attention (prefill).
+  decode_attention — single-token GQA attention over a long KV cache.
+  ssd_scan — Mamba2 state-space-duality chunked scan.
+  proxy_score — the paper's proxy head: fused 1x1-conv + sigmoid +
+                threshold producing the binary cell grid.
+  window_gather — the paper's spatial skipping: gather 32-aligned windows
+                  from a frame via a scalar-prefetched window table.
+"""
+from __future__ import annotations
+
+import jax
+
+_FORCE: dict = {"mode": None}   # None=auto | "pallas" | "ref"
+
+
+def set_kernel_mode(mode) -> None:
+    """Force kernel dispatch: None (auto), 'pallas', or 'ref'."""
+    assert mode in (None, "pallas", "ref")
+    _FORCE["mode"] = mode
+
+
+def use_pallas() -> bool:
+    if _FORCE["mode"] == "pallas":
+        return True
+    if _FORCE["mode"] == "ref":
+        return False
+    return jax.default_backend() == "tpu"

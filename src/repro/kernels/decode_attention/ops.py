@@ -1,0 +1,49 @@
+"""Public decode-attention op with backend dispatch.
+
+CPU fallback: a single masked einsum over the cache.  The (B, Hq, S) score
+tensor is small relative to the cache itself (S*Hq*4 vs S*Hkv*D*2*2 bytes
+per row), so unlike prefill no chunking is needed for memory parity.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax.numpy as jnp
+import jax
+
+from repro.kernels import use_pallas
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+
+NEG_INF = float(jnp.finfo(jnp.float32).min)
+
+
+def _jnp_fallback(q, k, v, kv_len, *, sm_scale: float):
+    B, Hq, D = q.shape
+    _, S, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, D) * sm_scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgd,bshd->bhgs", qf, kf)
+    mask = jnp.arange(S)[None, :] < kv_len[:, None]        # (B, S)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, vf)
+    return out.reshape(B, Hq, D).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "block_k"))
+def decode_attention(q, k, v, kv_len, *, sm_scale: Optional[float] = None,
+                     block_k: int = 512):
+    """Single-token GQA attention over a KV cache.
+
+    q: (B, Hq, D); k, v: (B, S, Hkv, D); kv_len: (B,) int32 valid lengths.
+    """
+    if sm_scale is None:
+        sm_scale = 1.0 / (q.shape[-1] ** 0.5)
+    if use_pallas():
+        return decode_attention_pallas(q, k, v, kv_len,
+                                       sm_scale=float(sm_scale),
+                                       block_k=block_k)
+    return _jnp_fallback(q, k, v, kv_len, sm_scale=float(sm_scale))

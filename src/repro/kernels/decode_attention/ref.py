@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for single-token decode attention (delegates to the
+flash-attention oracle with Sq=1 and a kv_len mask)."""
+from __future__ import annotations
+
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def decode_attention_ref(q, k, v, kv_len, *, sm_scale=None):
+    """q: (B, Hq, D); k, v: (B, S, Hkv, D); kv_len: (B,) int32.
+
+    Returns (B, Hq, D).  Non-causal within the valid prefix (the new token
+    attends to every cached position < kv_len, including itself if the
+    caller already wrote it into the cache).
+    """
+    out = attention_ref(q[:, None], k, v, causal=False, sm_scale=sm_scale,
+                        kv_len=kv_len)
+    return out[:, 0]

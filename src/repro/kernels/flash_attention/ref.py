@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for flash attention (naive O(S^2), materializes scores).
+
+Used only by tests on small shapes; the memory-bounded jnp fallback lives in
+ops.py and the TPU kernel in kernel.py.  All three must agree.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, sm_scale=None,
+                  kv_len=None):
+    """q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D); GQA by head repetition.
+
+    kv_len: optional (B,) int32 — valid KV prefix length (decode masking).
+    Returns (B, Sq, Hq, D) in q.dtype; softmax in fp32.
+    """
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / (D ** 0.5)
+    qf = q.astype(jnp.float32)
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=2)
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", qf, kf) * sm_scale
+    neg = jnp.finfo(jnp.float32).min
+    if causal:
+        # query i (at absolute position Skv - Sq + i) sees keys <= that pos
+        qpos = jnp.arange(Sq)[:, None] + (Skv - Sq)
+        kpos = jnp.arange(Skv)[None, :]
+        scores = jnp.where((kpos <= qpos)[None, None], scores, neg)
+    if kv_len is not None:
+        mask = jnp.arange(Skv)[None, :] < kv_len[:, None]   # (B, Skv)
+        scores = jnp.where(mask[:, None, None, :], scores, neg)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
+    return out.astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.proxy_score.ops import proxy_score  # noqa: F401

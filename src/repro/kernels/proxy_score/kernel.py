@@ -1,0 +1,77 @@
+"""Fused proxy-model head as a Pallas TPU kernel (the paper's §3.3 scorer).
+
+The segmentation proxy ends with a 1x1 conv to one channel, a sigmoid, and
+a threshold that yields the binary positive-cell grid.  Running these as
+separate XLA ops costs two extra HBM round-trips of the (B, Hc, Wc) score
+map; at proxy rates (every sampled frame) the head is bandwidth-bound, so
+we fuse matvec + sigmoid + compare into one VMEM-resident epilogue.
+
+Tiling: spatial cells are flattened to rows; block = (bm, C) rows of
+features x a (C, 1) weight column resident in VMEM across the whole grid
+(index_map pins it to block 0).  bm = 256 rows keeps the matvec in one MXU
+pass per block at C <= 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _head_kernel(f_ref, w_ref, b_ref, t_ref, score_ref, pos_ref):
+    f = f_ref[...].astype(jnp.float32)                  # (bm, C)
+    w = w_ref[...].astype(jnp.float32)                  # (C, 1)
+    logits = jax.lax.dot_general(
+        f, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[:, 0] + b_ref[0]
+    s = jax.nn.sigmoid(logits)
+    score_ref[...] = s
+    pos_ref[...] = (s > t_ref[0]).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def proxy_score_pallas(feat, w, b, threshold, *, block_m: int = 256,
+                       interpret: bool = False):
+    """feat: (B, Hc, Wc, C); w: (C,); b, threshold: scalars.
+
+    Returns (scores (B, Hc, Wc) fp32, positive (B, Hc, Wc) int8).
+    """
+    B, Hc, Wc, C = feat.shape
+    rows = B * Hc * Wc
+    bm = min(block_m, rows)
+    pad = (-rows) % bm
+    f2 = feat.reshape(rows, C)
+    if pad:
+        f2 = jnp.pad(f2, ((0, pad), (0, 0)))
+    n_blocks = (rows + pad) // bm
+
+    scores, pos = pl.pallas_call(
+        _head_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((bm, C), lambda i: (i, 0)),
+            pl.BlockSpec((C, 1), lambda i: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows + pad,), jnp.float32),
+            jax.ShapeDtypeStruct((rows + pad,), jnp.int8),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(pltpu.PARALLEL,)),
+        interpret=interpret,
+        name="proxy_score",
+    )(f2, w.reshape(C, 1),
+      jnp.asarray(b, jnp.float32).reshape(1),
+      jnp.asarray(threshold, jnp.float32).reshape(1))
+    scores = scores[:rows].reshape(B, Hc, Wc)
+    pos = pos[:rows].reshape(B, Hc, Wc)
+    return scores, pos

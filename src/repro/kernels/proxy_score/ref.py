@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused proxy head (1x1 conv + sigmoid +
+threshold -> binary cell grid)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def proxy_score_ref(feat, w, b, threshold):
+    """feat: (B, Hc, Wc, C) penultimate proxy features; w: (C,); b: scalar.
+
+    Returns (scores (B, Hc, Wc) fp32 sigmoid, positive (B, Hc, Wc) int8).
+    """
+    logits = jnp.einsum("bhwc,c->bhw", feat.astype(jnp.float32),
+                        w.astype(jnp.float32)) + b
+    scores = jax.nn.sigmoid(logits)
+    pos = (scores > threshold).astype(jnp.int8)
+    return scores, pos

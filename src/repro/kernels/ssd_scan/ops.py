@@ -1,0 +1,98 @@
+"""Public SSD-scan op with backend dispatch, plus the O(1) decode step.
+
+CPU fallback: the same chunked math as the kernel, vectorized over
+(batch, heads) with a lax.scan over chunks — peak temp memory is
+O(b * H * Q^2) per chunk, never O(S^2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import use_pallas
+from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
+
+
+def _chunked_jnp(x, dt, A, B, C, D, chunk: int):
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    n = S // Q
+    xf = x.astype(jnp.float32).reshape(b, n, Q, H, P)
+    dtf = dt.astype(jnp.float32).reshape(b, n, Q, H)
+    Bf = B.astype(jnp.float32).reshape(b, n, Q, N)
+    Cf = C.astype(jnp.float32).reshape(b, n, Q, N)
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+
+    ti = jnp.arange(Q)[:, None]
+    ji = jnp.arange(Q)[None, :]
+    tri = ji <= ti                                     # (Q, Q)
+
+    def step(state, inp):                              # state (b,H,P,N)
+        xc, dtc, Bc, Cc = inp                          # (b,Q,H,P) etc.
+        s = dtc * A[None, None, :]                     # (b,Q,H)
+        L = jnp.cumsum(s, axis=1)                      # (b,Q,H)
+        diff = L[:, :, None, :] - L[:, None, :, :]     # (b,Q,Q,H)
+        decay = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+        G = jnp.einsum("btn,bsn->bts", Cc, Bc)         # (b,Q,Q)
+        M = G[..., None] * decay                       # (b,t,s,H)
+        xdt = xc * dtc[..., None]                      # (b,Q,H,P)
+        y = jnp.einsum("btsh,bshp->bthp", M, xdt)
+        y += jnp.exp(L)[..., None] * jnp.einsum(
+            "btn,bhpn->bthp", Cc, state)
+        y += D[None, None, :, None] * xc
+        LQ = L[:, -1, :]                               # (b,H)
+        w = jnp.exp(LQ[:, None, :] - L) * dtc          # (b,Q,H)
+        state = jnp.exp(LQ)[..., None, None] * state + jnp.einsum(
+            "bshp,bsn->bhpn", xc * w[..., None], Bc)
+        return state, y
+
+    init = jnp.zeros((b, H, P, N), jnp.float32)
+    final, ys = jax.lax.scan(step, init, xs)           # ys (n,b,Q,H,P)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, S, H, P).astype(x.dtype)
+    return y, final
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A, B, C, D, *, chunk: int = 128):
+    """Mamba2 SSD over a full sequence.
+
+    x: (b, S, H, P); dt: (b, S, H) post-softplus; A: (H,) negative;
+    B, C: (b, S, N); D: (H,).  Returns (y, final_state (b,H,P,N) fp32).
+
+    S is padded up to a chunk multiple with dt=0 steps (decay exp(0)=1 and
+    zero input update), which leaves y and the final state exact.
+    """
+    S = x.shape[1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    if use_pallas():
+        y, fin = ssd_scan_pallas(x, dt, A, B, C, D, chunk=chunk)
+    else:
+        y, fin = _chunked_jnp(x, dt, A, B, C, D, chunk)
+    return (y[:, :S] if pad else y), fin
+
+
+@jax.jit
+def ssd_step(state, x_t, dt_t, A, B_t, C_t, D):
+    """Single-token decode update (no kernel needed: O(P*N) per head).
+
+    state: (b, H, P, N) fp32; x_t: (b, H, P); dt_t: (b, H);
+    B_t, C_t: (b, N).  Returns (y_t (b,H,P), new_state).
+    """
+    a = jnp.exp(dt_t.astype(jnp.float32) * A[None, :])          # (b,H)
+    upd = (dt_t[..., None, None] * x_t.astype(jnp.float32)[..., :, None]
+           * B_t.astype(jnp.float32)[:, None, None, :])
+    state = a[..., None, None] * state + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, C_t.astype(jnp.float32))
+    y = y + D[None, :, None] * x_t
+    return y.astype(x_t.dtype), state

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the Mamba2 SSD scan: the direct per-timestep
+recurrence (O(S) sequential steps — slow but unambiguous).
+
+Per head h with state S_t in R^{P x N}:
+    a_t = exp(dt_t * A_h)                       (A_h < 0)
+    S_t = a_t * S_{t-1} + dt_t * (x_t outer B_t)
+    y_t = S_t @ C_t + D_h * x_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, dt, A, B, C, D, init_state=None):
+    """x: (b, S, H, P); dt: (b, S, H) post-softplus; A: (H,) negative;
+    B, C: (b, S, N) (single group); D: (H,).
+
+    Returns (y, final_state): y (b, S, H, P), final_state (b, H, P, N).
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    if init_state is None:
+        init_state = jnp.zeros((b, H, P, N), jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp               # (b,H,P), (b,H), (b,N), (b,N)
+        a = jnp.exp(dtt * A[None, :])       # (b,H)
+        upd = (dtt[..., None, None] * xt[..., :, None]
+               * Bt[:, None, None, :])       # (b,H,P,N)
+        state = a[..., None, None] * state + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, Ct) \
+            + D[None, :, None] * xt
+        return state, y
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    final, ys = jax.lax.scan(step, init_state, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)    # (b, S, H, P)
+    return y, final

@@ -1,0 +1,1 @@
+from repro.kernels.window_gather.ops import window_gather  # noqa: F401

@@ -1,0 +1,27 @@
+"""Public window-gather op with backend dispatch.
+
+The CPU fallback uses vmapped dynamic_slice (pixel origins); the Pallas
+path takes 32-aligned cell origins, matching the proxy's cell grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import jax
+
+from repro.kernels import use_pallas
+from repro.kernels.window_gather.kernel import window_gather_pallas, CELL
+from repro.kernels.window_gather.ref import window_gather_ref
+
+
+@functools.partial(jax.jit, static_argnames=("win_h", "win_w", "cell"))
+def window_gather(frame, cell_origins, *, win_h: int, win_w: int,
+                  cell: int = CELL):
+    """Crop n windows of (win_h, win_w) px from frame at cell-aligned
+    origins.  frame: (H, W, C); cell_origins: (n, 2) int32 (cy, cx)."""
+    if use_pallas():
+        return window_gather_pallas(frame, cell_origins,
+                                    win_h=win_h, win_w=win_w, cell=cell)
+    return window_gather_ref(frame, cell_origins * cell,
+                             win_h=win_h, win_w=win_w)

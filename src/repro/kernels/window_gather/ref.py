@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for window gathering (vmapped dynamic_slice crops)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("win_h", "win_w"))
+def window_gather_ref(frame, origins, *, win_h: int, win_w: int):
+    """frame: (H, W, C); origins: (n, 2) int32 pixel (y, x) top-left corners.
+
+    Returns (n, win_h, win_w, C) crops.  Origins must satisfy
+    0 <= y <= H - win_h (the ops layer clamps; callers use 32-aligned cells).
+    """
+    H, W, C = frame.shape
+
+    def crop(origin):
+        y = jnp.clip(origin[0], 0, H - win_h)
+        x = jnp.clip(origin[1], 0, W - win_w)
+        return jax.lax.dynamic_slice(frame, (y, x, 0), (win_h, win_w, C))
+
+    return jax.vmap(crop)(origins)

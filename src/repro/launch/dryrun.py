@@ -1,0 +1,269 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and record the roofline inputs.
+
+For each cell this script:
+  1. builds the model + the step function the shape's kind dictates
+     (train_step with AdamW for train_*, prefill for prefill_*, one-token
+     decode for decode_*/long_*);
+  2. resolves in/out shardings from the logical axes via LogicalRules;
+  3. ``jax.jit(...).lower(...)`` then ``.compile()`` — a sharding
+     mismatch, compile-time OOM, or unsupported collective here is a bug
+     in the framework, not in the launcher;
+  4. records memory_analysis, cost_analysis (HLO FLOPs / bytes), the
+     collective schedule parsed from the partitioned HLO (with while-loop
+     trip-count weighting), and analytic per-device byte budgets;
+  5. writes one JSON artifact per cell to --out.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch qwen2-0.5b --shape train_4k --mesh both --out artifacts/
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out artifacts/
+
+The XLA_FLAGS line above MUST run before any other import so the CPU
+platform exposes 512 placeholder devices for jax.make_mesh.  Smoke tests
+and benchmarks never import this module.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ASSIGNED_ARCHS, get_config, get_shape,
+                           ALL_SHAPES, shape_skip_reason)
+from repro.distributed.sharding import (LogicalRules, replicated_like,
+                                        tree_shardings)
+from repro.launch.hlo_stats import HloStats
+from repro.launch.mesh import make_production_mesh
+from repro.models.common import sharding_ctx
+from repro.models.model import build_model
+from repro.optim import adamw, cosine_schedule
+from repro.train import build_train_step
+
+# v5e hardware constants (roofline denominators)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+
+def _shard_count(sharding: NamedSharding) -> int:
+    m = sharding.mesh
+    sizes = dict(zip(m.axis_names, m.devices.shape))
+    n = 1
+    for entry in sharding.spec:
+        if entry is None:
+            continue
+        for ax in (entry if isinstance(entry, tuple) else (entry,)):
+            n *= sizes[ax]
+    return n
+
+
+def _bytes_per_device(sds_tree, sharding_tree) -> float:
+    total = 0.0
+    for sds, sh in zip(jax.tree.leaves(sds_tree),
+                       jax.tree.leaves(sharding_tree, is_leaf=lambda x:
+                                       isinstance(x, NamedSharding))):
+        nbytes = float(np.prod(sds.shape)) * jnp.dtype(sds.dtype).itemsize
+        total += nbytes / _shard_count(sh)
+    return total
+
+
+def build_cell(arch: str, shape_name: str, mesh, quantize_v: bool = False):
+    """Returns (fn, args_sds tuple, in_shardings, out_shardings,
+    byte_budget dict)."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    model = build_model(cfg)
+    rules = LogicalRules(mesh)
+
+    p_sds = model.param_shapes()
+    p_axes = model.param_axes()
+    p_sh = tree_shardings(rules, p_sds, p_axes)
+
+    batch_sds = model.input_specs(shape)
+    batch_axes = model.input_axes(shape)
+    b_sh = tree_shardings(rules, batch_sds, batch_axes)
+
+    budget = {"params": _bytes_per_device(p_sds, p_sh),
+              "inputs": _bytes_per_device(batch_sds, b_sh)}
+
+    if shape.kind == "train":
+        opt = adamw(lr=cosine_schedule(3e-4, 100, 10_000),
+                    quantize_v=quantize_v)
+        ts = build_train_step(model, opt)
+        o_sds = jax.eval_shape(opt.init, p_sds)
+        o_axes = opt.state_axes(p_axes)
+        o_sh = tree_shardings(rules, o_sds, o_axes)
+        budget["opt"] = _bytes_per_device(o_sds, o_sh)
+
+        def fn(params, opt_state, batch):
+            return ts(params, opt_state, batch)
+
+        met_sds = jax.eval_shape(fn, p_sds, o_sds, batch_sds)[2]
+        out_sh = (p_sh, o_sh, replicated_like(mesh, met_sds))
+        return (fn, (p_sds, o_sds, batch_sds), (p_sh, o_sh, b_sh),
+                out_sh, budget, model)
+
+    if shape.kind == "prefill":
+        def fn(params, batch):
+            return model.prefill(params, batch)
+        logits_sh = NamedSharding(
+            mesh, rules.pspec_for_shape(
+                (shape.global_batch, cfg.vocab_size), ("batch", "vocab")))
+        _, cache_axes = model.make_cache(shape.global_batch, shape.seq_len)
+        cache_sds = jax.eval_shape(fn, p_sds, batch_sds)[1]
+        cache_sh = tree_shardings(rules, cache_sds, cache_axes)
+        budget["cache"] = _bytes_per_device(cache_sds, cache_sh)
+        return (fn, (p_sds, batch_sds), (p_sh, b_sh),
+                (logits_sh, cache_sh), budget, model)
+
+    # decode
+    cache_sds = batch_sds["cache"]
+    cache_axes = model.input_axes(shape)["cache"]
+    cache_sh = tree_shardings(rules, cache_sds, cache_axes)
+    tok_sh = NamedSharding(mesh, rules.pspec_for_shape(
+        (shape.global_batch, 1), ("batch", None)))
+    pos_sh = NamedSharding(mesh, rules.pspec_for_shape(
+        (shape.global_batch,), ("batch",)))
+    logits_sh = NamedSharding(mesh, rules.pspec_for_shape(
+        (shape.global_batch, cfg.vocab_size), ("batch", "vocab")))
+    budget["cache"] = _bytes_per_device(cache_sds, cache_sh)
+
+    def fn(params, token, pos, cache):
+        return model.decode_step(params, token, pos, cache)
+
+    return (fn, (p_sds, batch_sds["token"], batch_sds["pos"], cache_sds),
+            (p_sh, tok_sh, pos_sh, cache_sh),
+            (logits_sh, cache_sh), budget, model)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             quantize_v: Optional[bool] = None) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "status": "?",
+    }
+    skip = shape_skip_reason(cfg, shape)
+    if skip:
+        rec["status"] = "skip"
+        rec["skip_reason"] = skip
+        return rec
+    if quantize_v is None:
+        # grok's 314B x 12 bytes of fp32 Adam state does not fit 256 chips;
+        # the 8-bit second moment is the documented production setting
+        quantize_v = arch == "grok-1-314b"
+    rec["quantize_v"] = bool(quantize_v)
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        rules = LogicalRules(mesh)
+        t0 = time.monotonic()
+        with sharding_ctx(mesh, rules):
+            fn, args, in_sh, out_sh, budget, model = build_cell(
+                arch, shape_name, mesh, quantize_v)
+            donate = (0, 1) if shape.kind == "train" else \
+                ((3,) if shape.kind == "decode" else ())
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate)
+            with mesh:
+                lowered = jitted.lower(*args)
+                t_lower = time.monotonic() - t0
+                t0 = time.monotonic()
+                compiled = lowered.compile()
+                t_compile = time.monotonic() - t0
+        rec["lower_s"] = round(t_lower, 2)
+        rec["compile_s"] = round(t_compile, 2)
+        rec["bytes_per_device"] = {k: float(v) for k, v in budget.items()}
+        rec["params_total"] = model.param_count()
+        try:
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            rec["cost_analysis"] = {
+                k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and (
+                    "flops" in k or "bytes" in k or "utilization" not in k)
+            }
+        except Exception as e:            # pragma: no cover
+            rec["cost_analysis_error"] = repr(e)
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory_analysis"] = {
+                k: float(getattr(ma, k)) for k in dir(ma)
+                if not k.startswith("_")
+                and isinstance(getattr(ma, k), (int, float))}
+        except Exception as e:            # pragma: no cover
+            rec["memory_analysis_error"] = repr(e)
+        hlo = compiled.as_text()
+        st = HloStats(hlo)
+        rec["collectives"] = st.collectives
+        rec["ici_bytes"] = st.ici_bytes
+        rec["hlo_flops"] = st.flops          # per device, loop-weighted
+        rec["hlo_bytes"] = st.bytes
+        rec["status"] = "ok"
+    except Exception as e:
+        rec["status"] = "fail"
+        rec["error"] = repr(e)
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--force", action="store_true",
+                    help="re-run cells that already have artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    archs = [args.arch] if args.arch else list(ASSIGNED_ARCHS)
+    shapes = [args.shape] if args.shape else [s.name for s in ALL_SHAPES]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                mesh_name = "2x16x16" if multi else "16x16"
+                path = os.path.join(
+                    args.out,
+                    f"{arch}_{shape_name}_{mesh_name}.json".replace(
+                        "/", "_"))
+                if os.path.exists(path) and not args.force:
+                    print(f"[dryrun] cached  {arch} {shape_name} "
+                          f"{mesh_name}")
+                    continue
+                t0 = time.monotonic()
+                rec = run_cell(arch, shape_name, multi)
+                dt = time.monotonic() - t0
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1, default=float)
+                flops = rec.get("hlo_flops", 0)
+                print(f"[dryrun] {rec['status']:5s} {arch:20s} "
+                      f"{shape_name:12s} {mesh_name:8s} {dt:7.1f}s "
+                      f"GFLOP={flops/1e9:12.1f} "
+                      f"ici={rec.get('ici_bytes', 0)/1e6:10.1f}MB",
+                      flush=True)
+                if rec["status"] == "fail":
+                    print(rec["error"], flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,363 @@
+"""Roofline accounting from SPMD-partitioned HLO text.
+
+``compiled.cost_analysis()`` visits while-loop bodies ONCE, so for a
+scan-over-layers program it underreports FLOPs/bytes by ~n_layers, and it
+reports no collective traffic at all.  This module re-derives all three
+roofline numerators from ``compiled.as_text()`` with loop weighting:
+
+  * computations are parsed into a call graph; ``while`` ops carry
+    ``backend_config={"known_trip_count":{"n":...}}`` (fallback: the
+    comparison constant in the condition computation), and a DFS from
+    ENTRY multiplies nested trip counts;
+  * FLOPs: 2 * prod(result dims) * prod(lhs contracting dims) per ``dot``
+    (elementwise FLOPs are ignored — dots dominate every assigned arch);
+  * bytes: fusion-boundary accounting — result + operand bytes for every
+    materialized op in visited computations (fusion-internal ops are
+    invisible because ``calls=`` edges are not followed), mirroring
+    HloCostAnalysis bytes_accessed semantics;
+  * collectives: per-kind counts/bytes with ring-algorithm ICI factors:
+        all-gather          out * (n-1)/n
+        reduce-scatter      out * (n-1)
+        all-reduce          2 * shard * (n-1)/n
+        all-to-all          bytes * (n-1)/n
+        collective-permute  bytes
+    n parsed from replica_groups ([groups,size]<=... iota or explicit).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(\w+)\[([\d,]*)\]")
+_GROUPS_ARR_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_COMP_START_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\{\s*$")
+_OP_RE = re.compile(
+    r"^(?:ROOT\s+)?%?([\w.\-]+)\s+=\s+(.*?)\s+([\w\-]+)\((.*)$")
+_WHILE_ATTR_RE = re.compile(
+    r"condition=%?([\w.\-]+).*?body=%?([\w.\-]+)")
+_CALLEE_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_FUSION_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_DIMS_ATTR = lambda name, s: re.search(name + r"=\{([\d,]*)\}", s)  # noqa
+
+_BYTES_SKIP = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "while", "call", "conditional", "after-all",
+               "partition-id", "replica-id"}
+
+
+def _parse_shape(type_str: str) -> Tuple[int, Optional[List[int]]]:
+    """-> (total bytes, dims of the first array shape or None)."""
+    total = 0
+    first_dims: Optional[List[int]] = None
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims_s = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in dims_s.split(",") if d]
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+        if first_dims is None:
+            first_dims = dims
+    return total, first_dims
+
+
+def _group_size(line: str, default: int = 1) -> int:
+    m = _GROUPS_ARR_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return default
+
+
+def _ici_factor(kind: str, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if kind == "all-gather":
+        return (n - 1) / n
+    if kind == "all-reduce":
+        return 2 * (n - 1) / n
+    if kind == "reduce-scatter":
+        return float(n - 1)
+    if kind == "all-to-all":
+        return (n - 1) / n
+    return 1.0
+
+
+class _Op:
+    __slots__ = ("kind", "result_bytes", "result_dims", "operands",
+                 "attrs_str", "line")
+
+    def __init__(self, kind, result_bytes, result_dims, operands,
+                 attrs_str, line):
+        self.kind = kind
+        self.result_bytes = result_bytes
+        self.result_dims = result_dims
+        self.operands = operands
+        self.attrs_str = attrs_str
+        self.line = line
+
+
+class _Comp:
+    def __init__(self) -> None:
+        self.ops: List[_Op] = []
+        self.whiles: List[Tuple[str, str, Optional[int]]] = []
+        self.calls: List[str] = []        # call/conditional targets
+        self.fusion_calls: List[str] = [] # fusion bodies (FLOPs only)
+        self.max_const = 0
+        self.param_index: Dict[str, int] = {}   # %name -> parameter(N)
+        # parameter index -> bytes actually READ when the body only
+        # slices the parameter (scan-over-layers weight fetch pattern)
+        self.sliced_param_bytes: Dict[int, float] = {}
+
+
+class HloStats:
+    def __init__(self, hlo_text: str):
+        self.comps: Dict[str, _Comp] = {}
+        self.entry: Optional[str] = None
+        self.symbols: Dict[str, Tuple[int, Optional[List[int]]]] = {}
+        self._parse(hlo_text)
+        self._accumulate()
+
+    # -- parsing ---------------------------------------------------------------
+    def _parse(self, text: str) -> None:
+        current: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            stripped = line.strip()
+            if current is None:
+                m = _COMP_START_RE.match(line)
+                if m:
+                    current = m.group(2)
+                    self.comps[current] = _Comp()
+                    if m.group(1):
+                        self.entry = current
+                continue
+            if stripped == "}":
+                current = None
+                continue
+            comp = self.comps[current]
+            mo = _OP_RE.match(stripped)
+            if not mo:
+                continue
+            name, type_str, kind, rest = mo.groups()
+            rbytes, rdims = _parse_shape(type_str)
+            self.symbols[name] = (rbytes, rdims)
+            if kind == "parameter":
+                mp = re.match(r"^(\d+)", rest)
+                if mp:
+                    comp.param_index[name] = int(mp.group(1))
+            if kind in ("dynamic-slice", "slice", "gather"):
+                # if the sliced operand is a fusion parameter, the body
+                # reads only the slice — record the cap for the caller
+                args_seg0 = rest.split("), ")[0]
+                ops0 = _OPERAND_RE.findall(args_seg0)
+                if ops0 and ops0[0] in comp.param_index:
+                    idx = comp.param_index[ops0[0]]
+                    prev = comp.sliced_param_bytes.get(idx, 0.0)
+                    comp.sliced_param_bytes[idx] = prev + rbytes
+            for c in _CONST_RE.finditer(stripped):
+                comp.max_const = max(comp.max_const, int(c.group(1)))
+            if kind == "while":
+                mw = _WHILE_ATTR_RE.search(rest)
+                trip = None
+                mt = _TRIP_RE.search(rest)
+                if mt:
+                    trip = int(mt.group(1))
+                if mw:
+                    comp.whiles.append((mw.group(1), mw.group(2), trip))
+                continue
+            if kind in ("call", "conditional"):
+                mc = _CALLEE_RE.search(rest)
+                if mc:
+                    comp.calls.append(mc.group(1))
+                mb = _BRANCHES_RE.search(rest)
+                if mb:
+                    comp.calls.extend(
+                        x.strip().lstrip("%") for x in
+                        mb.group(1).split(","))
+                continue
+            if kind == "fusion":
+                mf = _FUSION_CALLS_RE.search(rest)
+                if mf:
+                    comp.fusion_calls.append(mf.group(1))
+                # fall through: the fusion op itself is byte-counted
+            # operand names appear before the first '),' boundary; taking
+            # all %refs in the args segment is fine (attrs use raw ints)
+            args_seg = rest.split("), ")[0]
+            operands = _OPERAND_RE.findall(args_seg)
+            comp.ops.append(_Op(kind, rbytes, rdims, operands, rest,
+                                stripped))
+
+    # -- weighted accumulation ---------------------------------------------------
+    def _trip_count(self, cond: str, hint: Optional[int]) -> int:
+        if hint:
+            return hint
+        c = self.comps.get(cond)
+        return max(c.max_const, 1) if c else 1
+
+    def _comp_flops(self, name: str, depth: int = 0) -> float:
+        """dot FLOPs of one computation INCLUDING nested fusion bodies
+        (per single execution; memoized)."""
+        memo = self._flops_memo
+        if name in memo:
+            return memo[name]
+        comp = self.comps.get(name)
+        if comp is None or depth > 32:
+            return 0.0
+        total = sum(self._dot_flops(op) for op in comp.ops
+                    if op.kind == "dot")
+        for callee in comp.fusion_calls:
+            total += self._comp_flops(callee, depth + 1)
+        memo[name] = total
+        return total
+
+    def _op_bytes(self, op: "_Op") -> float:
+        """HBM-traffic model per op, at TPU fusion granularity: only ops
+        that materialize data count; elementwise chains are assumed fused
+        into their consumers (as the TPU backend does)."""
+        kind = op.kind.replace("-start", "")
+        res = op.result_bytes
+
+        def operands_bytes():
+            return sum(self.symbols.get(o, (0, None))[0]
+                       for o in op.operands)
+
+        if kind == "fusion":
+            total = float(res)
+            # operands that the body only SLICES are read at slice size
+            caps: Dict[int, float] = {}
+            for callee in _FUSION_CALLS_RE.findall(op.attrs_str):
+                body = self.comps.get(callee)
+                if body:
+                    caps.update(body.sliced_param_bytes)
+            for i, o in enumerate(op.operands):
+                b = self.symbols.get(o, (0, None))[0]
+                if i in caps:
+                    b = min(b, caps[i])
+                total += b
+            return total
+        if kind in ("dot", "convolution", "reduce",
+                    "reduce-window", "sort", "custom-call"):
+            return res + operands_bytes()
+        if kind in ("dynamic-slice", "gather"):
+            return 2.0 * res                       # read slice + write
+        if kind == "dynamic-update-slice":
+            # update tensor read+written; result aliases the operand
+            upd = (self.symbols.get(op.operands[1], (0, None))[0]
+                   if len(op.operands) > 1 else res)
+            return 2.0 * upd
+        if kind == "scatter":
+            upd = (self.symbols.get(op.operands[2], (0, None))[0]
+                   if len(op.operands) > 2 else res)
+            return 2.0 * upd
+        if kind in ("copy", "transpose", "reshape", "concatenate", "pad",
+                    "slice", "reverse", "copy-start"):
+            return 2.0 * res
+        if kind in ("iota", "rng", "rng-bit-generator", "broadcast"):
+            return res
+        if kind in COLLECTIVE_KINDS:
+            return 2.0 * res                       # HBM side of the wire
+        return 0.0                                 # assumed fused away
+
+    def _accumulate(self) -> None:
+        self.flops = 0.0
+        self.bytes = 0.0
+        self._flops_memo: Dict[str, float] = {}
+        self.collectives: Dict[str, Dict[str, float]] = defaultdict(
+            lambda: {"count": 0.0, "bytes": 0.0, "ici_bytes": 0.0})
+        self.top_collectives: List[Dict] = []   # per-op attribution
+        # computations reachable as fusion bodies must not be double
+        # counted when visiting: visit() walks only control-flow edges
+        fusion_bodies = set()
+        for comp in self.comps.values():
+            fusion_bodies.update(comp.fusion_calls)
+
+        def visit(name: str, weight: float, depth: int = 0) -> None:
+            comp = self.comps.get(name)
+            if comp is None or depth > 32:
+                return
+            for op in comp.ops:
+                base = op.kind.replace("-start", "")
+                if base in COLLECTIVE_KINDS and not op.kind.endswith(
+                        "-done"):
+                    n = _group_size(op.line)
+                    st = self.collectives[base]
+                    st["count"] += weight
+                    st["bytes"] += op.result_bytes * weight
+                    ici = op.result_bytes * _ici_factor(base, n) * weight
+                    st["ici_bytes"] += ici
+                    mm = re.search(r'op_name="([^"]*)"', op.line)
+                    dm = re.match(r"(\w+)\[", op.line.split("= ", 1)[-1])
+                    self.top_collectives.append({
+                        "kind": base, "ici_bytes": ici,
+                        "bytes": op.result_bytes, "weight": weight,
+                        "dtype": dm.group(1) if dm else "?",
+                        "group": n,
+                        "op_name": mm.group(1) if mm else "?"})
+                if op.kind == "dot":
+                    self.flops += self._dot_flops(op) * weight
+                elif op.kind == "fusion":
+                    for callee in _FUSION_CALLS_RE.findall(op.attrs_str):
+                        self.flops += self._comp_flops(callee) * weight
+                if not op.kind.endswith("-done"):
+                    self.bytes += self._op_bytes(op) * weight
+            for cond, body, trip in comp.whiles:
+                t = self._trip_count(cond, trip)
+                visit(body, weight * t, depth + 1)
+            for callee in comp.calls:
+                visit(callee, weight, depth + 1)
+
+        if self.entry is None and self.comps:
+            self.entry = next(iter(self.comps))
+        if self.entry:
+            visit(self.entry, 1.0)
+        self.collectives = dict(self.collectives)
+        self.top_collectives.sort(key=lambda d: -d["ici_bytes"])
+        self.top_collectives = self.top_collectives[:24]
+
+    def _dot_flops(self, op: _Op) -> float:
+        if not op.result_dims or not op.operands:
+            return 0.0
+        out = 1
+        for d in op.result_dims:
+            out *= d
+        lhs = self.symbols.get(op.operands[0], (0, None))[1]
+        m = _DIMS_ATTR("lhs_contracting_dims", op.attrs_str)
+        contract = 1
+        if lhs and m:
+            for idx in m.group(1).split(","):
+                if idx:
+                    i = int(idx)
+                    if i < len(lhs):
+                        contract *= lhs[i]
+        return 2.0 * out * contract
+
+    @property
+    def ici_bytes(self) -> float:
+        return sum(s["ici_bytes"] for s in self.collectives.values())
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    return HloStats(hlo_text).collectives
+
+
+def total_ici_bytes(stats: Dict[str, Dict[str, float]]) -> float:
+    return sum(s["ici_bytes"] for s in stats.values())

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state — the dry-run
+launcher must set XLA_FLAGS before anything initializes XLA.
+
+Topology: TPU v5e pods of 16x16 = 256 chips.  Single-pod meshes are
+("data", "model") = (16, 16); the multi-pod mesh prepends a "pod" axis:
+(2, 16, 16) = 512 chips.  The pod axis carries pure data parallelism
+(gradient all-reduce only — the slowest links get the most compressible
+collective; see repro.distributed.compression), "data" carries DP+FSDP,
+and "model" carries TP/EP/SP.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (CPU tests)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,201 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""Perf hillclimb harness (§Perf deliverable).
+
+Runs one (arch x shape) cell under named optimization VARIANTS, records
+the three roofline terms + the top collective contributors per variant,
+and prints the before/after comparison the EXPERIMENTS.md §Perf log is
+written from.
+
+Variants are config/step-level knobs (no code forking):
+    baseline              paper-faithful defaults (remat=full, fp32
+                          master weights on the wire, replicated
+                          attention when heads don't divide)
+    bf16_wire             TrainStep.cast_bf16 — fp32->bf16 cast at step
+                          entry so FSDP all-gathers move bf16
+    remat_dots            remat policy "dots" (keep matmul outputs;
+                          trades HBM bytes for recompute FLOPs)
+    remat_none            no remat (max memory, min FLOPs)
+    qseq_sp               ModelConfig.attention_qseq_sp — context-
+                          parallel attention for head counts that don't
+                          divide the model axis
+    serve_bf16            serving params held in bf16 (decode/prefill
+                          cells; halves the weight-read memory term)
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.perf --arch qwen2-0.5b \
+        --shape train_4k --variants baseline,bf16_wire,qseq_sp
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_shape
+from repro.distributed.sharding import LogicalRules, replicated_like, \
+    tree_shardings
+from repro.launch.hlo_stats import HloStats
+from repro.launch.mesh import make_production_mesh
+from repro.models.common import sharding_ctx
+from repro.models.model import Model, build_model
+from repro.optim import adamw, cosine_schedule
+from repro.train import build_train_step
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+VARIANTS: Dict[str, Dict[str, Any]] = {
+    "baseline": {},
+    "bf16_wire": {"cast_bf16": True},
+    "remat_dots": {"remat": "dots"},
+    "remat_none": {"remat": "none"},
+    "qseq_sp": {"attention_qseq_sp": True},
+    "serve_bf16": {"serve_bf16": True},
+    # combos
+    "bf16+dots": {"cast_bf16": True, "remat": "dots"},
+    "bf16+qseq": {"cast_bf16": True, "attention_qseq_sp": True},
+    "bf16+qseq+dots": {"cast_bf16": True, "attention_qseq_sp": True,
+                       "remat": "dots"},
+    "bf16+none": {"cast_bf16": True, "remat": "none"},
+}
+
+
+def run_variant(arch: str, shape_name: str, overrides: Dict[str, Any],
+                multi_pod: bool = False) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    cfg_kw = {k: v for k, v in overrides.items()
+              if k in ("remat", "attention_qseq_sp")}
+    if cfg_kw:
+        cfg = dataclasses.replace(cfg, **cfg_kw)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = LogicalRules(mesh)
+    model = Model(cfg)
+    t0 = time.monotonic()
+    with sharding_ctx(mesh, rules):
+        p_sds = model.param_shapes()
+        if overrides.get("serve_bf16") and shape.kind != "train":
+            p_sds = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+                if s.dtype == jnp.float32 and len(s.shape) >= 2 else s,
+                p_sds)
+        p_axes = model.param_axes()
+        p_sh = tree_shardings(rules, p_sds, p_axes)
+        batch_sds = model.input_specs(shape)
+        b_sh = tree_shardings(rules, batch_sds, model.input_axes(shape))
+
+        if shape.kind == "train":
+            opt = adamw(lr=cosine_schedule(3e-4, 100, 10_000),
+                        quantize_v=arch == "grok-1-314b")
+            ts = build_train_step(model, opt,
+                                  cast_bf16=bool(
+                                      overrides.get("cast_bf16")))
+            o_sds = jax.eval_shape(opt.init, p_sds)
+            o_sh = tree_shardings(rules, o_sds, opt.state_axes(p_axes))
+
+            def fn(params, opt_state, batch):
+                return ts(params, opt_state, batch)
+            met_sds = jax.eval_shape(fn, p_sds, o_sds, batch_sds)[2]
+            args = (p_sds, o_sds, batch_sds)
+            in_sh = (p_sh, o_sh, b_sh)
+            out_sh = (p_sh, o_sh, replicated_like(mesh, met_sds))
+            donate = (0, 1)
+        elif shape.kind == "prefill":
+            def fn(params, batch):
+                return model.prefill(params, batch)
+            _, cache_axes = model.make_cache(shape.global_batch,
+                                             shape.seq_len)
+            cache_sds = jax.eval_shape(fn, p_sds, batch_sds)[1]
+            cache_sh = tree_shardings(rules, cache_sds, cache_axes)
+            from jax.sharding import NamedSharding
+            logits_sh = NamedSharding(mesh, rules.pspec_for_shape(
+                (shape.global_batch, cfg.vocab_size),
+                ("batch", "vocab")))
+            args = (p_sds, batch_sds)
+            in_sh = (p_sh, b_sh)
+            out_sh = (logits_sh, cache_sh)
+            donate = ()
+        else:
+            cache_sds = batch_sds["cache"]
+            cache_axes = model.input_axes(shape)["cache"]
+            cache_sh = tree_shardings(rules, cache_sds, cache_axes)
+            from jax.sharding import NamedSharding
+            tok_sh = NamedSharding(mesh, rules.pspec_for_shape(
+                (shape.global_batch, 1), ("batch", None)))
+            pos_sh = NamedSharding(mesh, rules.pspec_for_shape(
+                (shape.global_batch,), ("batch",)))
+            logits_sh = NamedSharding(mesh, rules.pspec_for_shape(
+                (shape.global_batch, cfg.vocab_size),
+                ("batch", "vocab")))
+
+            def fn(params, token, pos, cache):
+                return model.decode_step(params, token, pos, cache)
+            args = (p_sds, batch_sds["token"], batch_sds["pos"],
+                    cache_sds)
+            in_sh = (p_sh, tok_sh, pos_sh, cache_sh)
+            out_sh = (logits_sh, cache_sh)
+            donate = (3,)
+
+        with mesh:
+            compiled = jax.jit(fn, in_shardings=in_sh,
+                               out_shardings=out_sh,
+                               donate_argnums=donate).lower(
+                                   *args).compile()
+    st = HloStats(compiled.as_text())
+    return {
+        "arch": arch, "shape": shape_name,
+        "overrides": {k: v for k, v in overrides.items()},
+        "compile_s": round(time.monotonic() - t0, 1),
+        "compute_s": st.flops / PEAK_FLOPS,
+        "memory_s": st.bytes / HBM_BW,
+        "collective_s": st.ici_bytes / ICI_BW,
+        "hlo_flops": st.flops, "hlo_bytes": st.bytes,
+        "ici_bytes": st.ici_bytes,
+        "collectives": st.collectives,
+        "top_collectives": st.top_collectives[:10],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variants", default="baseline")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--top", action="store_true",
+                    help="print top collective contributors")
+    args = ap.parse_args()
+    results = []
+    for name in args.variants.split(","):
+        rec = run_variant(args.arch, args.shape, VARIANTS[name])
+        rec["variant"] = name
+        results.append(rec)
+        dom = max(("compute_s", "memory_s", "collective_s"),
+                  key=lambda k: rec[k])
+        print(f"[perf] {name:16s} compile={rec['compile_s']:6.1f}s "
+              f"compute={rec['compute_s']:.3e} "
+              f"memory={rec['memory_s']:.3e} "
+              f"collective={rec['collective_s']:.3e}  <-{dom}",
+              flush=True)
+        if args.top:
+            for t in rec["top_collectives"][:6]:
+                print(f"        {t['kind']:18s} {t['dtype']:5s} "
+                      f"x{t['weight']:<6.0f} "
+                      f"{t['ici_bytes'] / 1e9:8.2f}GB  "
+                      f"{t['op_name'][:90]}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1, default=float)
+
+
+if __name__ == "__main__":
+    main()

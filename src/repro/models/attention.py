@@ -1,0 +1,127 @@
+"""GQA attention block: full-sequence (train/prefill via the flash kernel)
+and single-token decode (via the decode kernel) paths, plus KV-cache plumb.
+
+Cache layout: K, V as (B, S_max, Hkv, Dh).  Sharding preference is decided
+per-arch at trace time: kv_heads on the model axis when divisible, else
+sequence-sharded (SP) — see ``kv_cache_axes``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.models.common import ParamBuilder, current_rules, shard
+from repro.models.layers import apply_rope, def_linear, linear, rope_tables
+
+
+def def_attention(pb: ParamBuilder, name: str, cfg: ModelConfig,
+                  d_in: Optional[int] = None) -> None:
+    d_in = d_in or cfg.d_model
+    with pb.scope(name):
+        def_linear(pb, "wq", d_in, cfg.q_dim, ("embed", "qkv"),
+                   bias=cfg.qkv_bias, bias_axis="qkv")
+        def_linear(pb, "wk", d_in, cfg.kv_dim, ("embed", "kv"),
+                   bias=cfg.qkv_bias, bias_axis="kv")
+        def_linear(pb, "wv", d_in, cfg.kv_dim, ("embed", "kv"),
+                   bias=cfg.qkv_bias, bias_axis="kv")
+        def_linear(pb, "wo", cfg.q_dim, cfg.d_model, ("qkv", "embed"))
+
+
+def kv_cache_axes(cfg: ModelConfig) -> Tuple[Optional[str], ...]:
+    """Logical axes for a (B, S, Hkv, Dh) cache: prefer TP over kv heads,
+    fall back to sequence parallelism for small-kv GQA archs."""
+    rules = current_rules()
+    model_size = 1
+    if rules is not None:
+        model_size = rules.axis_sizes.get("model", 1)
+    if cfg.n_kv_heads and cfg.n_kv_heads % model_size == 0:
+        return ("batch", None, "kv_heads", None)
+    return ("batch", "kv_seq", None, None)
+
+
+def _project_qkv(p, x, cfg: ModelConfig):
+    B, S = x.shape[:2]
+    q = linear(p["wq"], x).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = linear(p["wk"], x).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = linear(p["wv"], x).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def attention_full(p, x, cfg: ModelConfig, *, causal: bool = True,
+                   positions=None, use_rope: bool = True,
+                   kv_override=None):
+    """Full-sequence attention.  x: (B, S, d_in) -> (B, S, d_model).
+
+    kv_override: optional (k, v) for cross-attention (already projected).
+    """
+    B, S = x.shape[:2]
+    if kv_override is None:
+        q, k, v = _project_qkv(p, x, cfg)
+        if use_rope:
+            if positions is None:
+                positions = jnp.arange(S)
+            cos, sin = rope_tables(positions, cfg.head_dim, cfg.rope_theta)
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+    else:
+        q = linear(p["wq"], x).reshape(B, S, cfg.n_heads, cfg.head_dim)
+        k, v = kv_override
+    rules = current_rules()
+    msize = rules.axis_sizes.get("model", 1) if rules else 1
+    if cfg.attention_qseq_sp and cfg.n_heads % msize != 0 \
+            and S % max(msize, 1) == 0:
+        # heads can't shard on the model axis: shard the q rows instead
+        # (context parallelism) — k/v stay whole per device, attention
+        # compute drops by the model-axis size instead of replicating
+        q = shard(q, "batch", "kv_seq", None, None)
+        k = shard(k, "batch", None, None, None)
+        v = shard(v, "batch", None, None, None)
+    else:
+        q = shard(q, "batch", "seq", "heads", None)
+        k = shard(k, "batch", "seq", "kv_heads", None)
+        v = shard(v, "batch", "seq", "kv_heads", None)
+    out = flash_attention(q, k, v, causal=causal)
+    out = out.reshape(B, S, cfg.q_dim)
+    return linear(p["wo"], out)
+
+
+def cross_kv(p, enc_out, cfg: ModelConfig):
+    """Project encoder output once into cross-attention K/V."""
+    B, S = enc_out.shape[:2]
+    k = linear(p["wk"], enc_out).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = linear(p["wv"], enc_out).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def attention_decode(p, x, cache_k, cache_v, pos, cfg: ModelConfig, *,
+                     use_rope: bool = True, update_cache: bool = True):
+    """Single-token decode.  x: (B, 1, d_in); cache_k/v: (B, S, Hkv, Dh);
+    pos: (B,) int32 — number of valid cached tokens (the new token is
+    written at index pos).  Returns (out (B,1,d_model), cache_k, cache_v).
+    """
+    B = x.shape[0]
+    q, k, v = _project_qkv(p, x, cfg)            # (B,1,H,D)
+    if use_rope:
+        cos, sin = rope_tables(pos[:, None], cfg.head_dim, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    if update_cache:
+        # scatter the new K/V row at each batch row's position (an HLO
+        # scatter: O(B*Hkv*Dh) bytes touched, not a full-cache rewrite)
+        rows = jnp.arange(B)
+        cache_k = cache_k.at[rows, pos].set(k[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[rows, pos].set(v[:, 0].astype(cache_v.dtype))
+        kv_len = pos + 1
+    else:
+        kv_len = pos
+    axes = kv_cache_axes(cfg)
+    cache_k = shard(cache_k, *axes)
+    cache_v = shard(cache_v, *axes)
+    out = decode_attention(q[:, 0], cache_k, cache_v, kv_len)
+    out = out.reshape(B, 1, cfg.q_dim)
+    return linear(p["wo"], out), cache_k, cache_v

@@ -1,0 +1,184 @@
+"""Encoder-decoder transformer (Whisper-style backbone).
+
+The audio conv frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings (B, n_frames, d_model).  The encoder
+adds sinusoidal positions and runs bidirectional attention; the decoder
+uses learned positions, causal self-attention, and cross-attention to the
+encoder output.  MLPs are GELU (Whisper), with pre-LayerNorm.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import (attention_decode, attention_full,
+                                    cross_kv, def_attention, kv_cache_axes)
+from repro.models.common import ParamBuilder, shard
+from repro.models.layers import (def_embedding, def_layernorm, def_mlp_gelu,
+                                 embed, layernorm, linear, mlp_gelu,
+                                 sinusoidal_positions, unembed)
+
+PyTree = Any
+
+MAX_DEC_POS = 32_768   # learned decoder position table rows (long_500k is
+                       # skipped for enc-dec archs, so 32k covers all cells)
+
+
+def def_encdec_params(pb: ParamBuilder, cfg: ModelConfig) -> None:
+    def_embedding(pb, "embed", cfg.vocab_size, cfg.d_model)
+    pb.param("dec_pos", (MAX_DEC_POS, cfg.d_model), (None, "embed"),
+             scale=0.01)
+    with pb.scope("encoder"), pb.stack(cfg.n_encoder_layers):
+        def_layernorm(pb, "ln_attn", cfg.d_model)
+        def_attention(pb, "attn", cfg)
+        def_layernorm(pb, "ln_mlp", cfg.d_model)
+        def_mlp_gelu(pb, "mlp", cfg.d_model, cfg.d_ff)
+    with pb.scope("decoder"), pb.stack(cfg.n_layers):
+        def_layernorm(pb, "ln_self", cfg.d_model)
+        def_attention(pb, "self_attn", cfg)
+        def_layernorm(pb, "ln_cross", cfg.d_model)
+        def_attention(pb, "cross_attn", cfg)
+        def_layernorm(pb, "ln_mlp", cfg.d_model)
+        def_mlp_gelu(pb, "mlp", cfg.d_model, cfg.d_ff)
+    def_layernorm(pb, "ln_enc_final", cfg.d_model)
+    def_layernorm(pb, "ln_final", cfg.d_model)
+
+
+def encode(params: PyTree, cfg: ModelConfig, audio_embeds):
+    """audio_embeds: (B, F, d) -> encoder output (B, F, d)."""
+    dtype = jnp.dtype(cfg.dtype)
+    B, F, _ = audio_embeds.shape
+    h = audio_embeds.astype(dtype)
+    h = h + sinusoidal_positions(F, cfg.d_model).astype(dtype)[None]
+    h = shard(h, "batch", "seq", None)
+
+    def body(h, lp):
+        hin = layernorm(lp["ln_attn"], h, cfg.norm_eps)
+        h = h + attention_full(lp["attn"], hin, cfg, causal=False,
+                               use_rope=False)
+        hin = layernorm(lp["ln_mlp"], h, cfg.norm_eps)
+        h = h + mlp_gelu(lp["mlp"], hin)
+        return h, None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["encoder"])
+    return layernorm(params["ln_enc_final"], h, cfg.norm_eps)
+
+
+def _dec_layer_full(lp, h, enc_out, cfg: ModelConfig, capture: bool):
+    hin = layernorm(lp["ln_self"], h, cfg.norm_eps)
+    B, S = hin.shape[:2]
+    cache = None
+    if capture:
+        k = linear(lp["self_attn"]["wk"], hin).reshape(
+            B, S, cfg.n_kv_heads, cfg.head_dim)
+        v = linear(lp["self_attn"]["wv"], hin).reshape(
+            B, S, cfg.n_kv_heads, cfg.head_dim)
+        from repro.kernels.flash_attention import flash_attention
+        q = linear(lp["self_attn"]["wq"], hin).reshape(
+            B, S, cfg.n_heads, cfg.head_dim)
+        attn = flash_attention(q, k, v, causal=True)
+        attn = linear(lp["self_attn"]["wo"], attn.reshape(B, S, cfg.q_dim))
+        ck, cv = cross_kv(lp["cross_attn"], enc_out, cfg)
+        cache = ((k, v), (ck, cv))
+    else:
+        attn = attention_full(lp["self_attn"], hin, cfg, use_rope=False)
+    h = h + attn
+    hin = layernorm(lp["ln_cross"], h, cfg.norm_eps)
+    if capture:
+        (ck, cv) = cache[1]
+        kv = (ck, cv)
+    else:
+        kv = cross_kv(lp["cross_attn"], enc_out, cfg)
+    h = h + attention_full(lp["cross_attn"], hin, cfg, causal=False,
+                           kv_override=kv)
+    hin = layernorm(lp["ln_mlp"], h, cfg.norm_eps)
+    h = h + mlp_gelu(lp["mlp"], hin)
+    return h, cache
+
+
+def encdec_forward(params: PyTree, cfg: ModelConfig, audio_embeds, tokens,
+                   *, return_cache: bool = False):
+    """-> (logits fp32, aux=0, cache|None).  Whisper has no positional
+    RoPE: decoder uses a learned table; self-attn is causal."""
+    dtype = jnp.dtype(cfg.dtype)
+    enc_out = encode(params, cfg, audio_embeds)
+    B, S = tokens.shape
+    h = embed(params["embed"], tokens, dtype)
+    h = h + params["dec_pos"][:S].astype(dtype)[None]
+    h = shard(h, "batch", "seq", None)
+
+    def body(h, lp):
+        h, c = _dec_layer_full(lp, h, enc_out, cfg, return_cache)
+        return h, c
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    h, raw_cache = jax.lax.scan(body, h, params["decoder"])
+    h = layernorm(params["ln_final"], h, cfg.norm_eps)
+    logits = unembed(params["embed"], h)
+    logits = shard(logits, "batch", "seq", "vocab")
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    if return_cache:
+        (sk, sv), (ck, cv) = raw_cache
+        cache = {"self": (sk, sv), "cross": (ck, cv)}
+    return logits, aux, cache
+
+
+def make_encdec_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      mode: str = "shape"):
+    dtype = jnp.dtype(cfg.dtype)
+    F = cfg.frontend.n_embeds
+    kv_axes = kv_cache_axes(cfg)
+
+    def mk(shape):
+        if mode == "init":
+            return jnp.zeros(shape, dtype)
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    self_shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads,
+                  cfg.head_dim)
+    cross_shape = (cfg.n_layers, batch, F, cfg.n_kv_heads, cfg.head_dim)
+    sax = ("layers",) + kv_axes
+    cax = ("layers", "batch", None, "kv_heads", None)
+    cache = {"self": (mk(self_shape), mk(self_shape)),
+             "cross": (mk(cross_shape), mk(cross_shape))}
+    axes = {"self": (sax, sax), "cross": (cax, cax)}
+    return cache, axes
+
+
+def encdec_decode(params: PyTree, cfg: ModelConfig, token, pos, cache):
+    """Single-token decoder step.  cache: {'self': (k,v), 'cross': (k,v)}
+    with leading layer dim.  Returns (logits (B,1,V) fp32, new_cache)."""
+    dtype = jnp.dtype(cfg.dtype)
+    B = token.shape[0]
+    h = embed(params["embed"], token, dtype)
+    h = h + params["dec_pos"][pos][:, None].astype(dtype)
+    F = cache["cross"][0].shape[2]
+    flen = jnp.full((B,), F, jnp.int32)
+
+    def body(h, xs):
+        lp, (sk, sv), (ck, cv) = xs
+        hin = layernorm(lp["ln_self"], h, cfg.norm_eps)
+        attn, sk, sv = attention_decode(lp["self_attn"], hin, sk, sv, pos,
+                                        cfg, use_rope=False)
+        h = h + attn
+        hin = layernorm(lp["ln_cross"], h, cfg.norm_eps)
+        attn, _, _ = attention_decode(lp["cross_attn"], hin, ck, cv, flen,
+                                      cfg, use_rope=False,
+                                      update_cache=False)
+        h = h + attn
+        hin = layernorm(lp["ln_mlp"], h, cfg.norm_eps)
+        h = h + mlp_gelu(lp["mlp"], hin)
+        return h, (sk, sv)
+
+    h, new_self = jax.lax.scan(
+        body, h, (params["decoder"], cache["self"], cache["cross"]))
+    h = layernorm(params["ln_final"], h, cfg.norm_eps)
+    logits = unembed(params["embed"], h)
+    return logits, {"self": new_self, "cross": cache["cross"]}

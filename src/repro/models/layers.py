@@ -1,0 +1,158 @@
+"""Shared neural-net building blocks (pure functions over ParamBuilder
+trees).
+
+Conventions:
+  * ``def_*(pb, ...)`` declares parameters (works in init/spec/shape modes).
+  * ``*_apply(p, x, ...)`` consumes the matching subtree.
+  * Compute dtype follows the activations (bf16 in production); params are
+    cast at the point of use; norms and softmax run in fp32.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamBuilder
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def def_rmsnorm(pb: ParamBuilder, name: str, dim: int) -> None:
+    with pb.scope(name):
+        pb.param("scale", (dim,), (None,), init="ones")
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def def_layernorm(pb: ParamBuilder, name: str, dim: int) -> None:
+    with pb.scope(name):
+        pb.param("scale", (dim,), (None,), init="ones")
+        pb.param("bias", (dim,), (None,), init="zeros")
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear / embedding
+# ---------------------------------------------------------------------------
+
+def def_linear(pb: ParamBuilder, name: str, d_in: int, d_out: int,
+               axes: Tuple[Optional[str], Optional[str]],
+               bias: bool = False, bias_axis: Optional[str] = None) -> None:
+    with pb.scope(name):
+        pb.param("w", (d_in, d_out), axes)
+        if bias:
+            pb.param("b", (d_out,), (bias_axis,), init="zeros")
+
+
+def linear(p, x):
+    y = jnp.einsum("...i,io->...o", x, p["w"].astype(x.dtype))
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def def_embedding(pb: ParamBuilder, name: str, vocab: int, dim: int) -> None:
+    with pb.scope(name):
+        pb.param("table", (vocab, dim), ("vocab", "embed"), scale=1.0)
+
+
+def embed(p, tokens, dtype):
+    return p["table"].astype(dtype)[tokens]
+
+
+def unembed(p, x):
+    """Logits in fp32 (loss numerics)."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      p["table"].astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_tables(positions, head_dim: int, theta: float):
+    """positions: (...,) int32 -> cos, sin of shape (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, D); cos/sin: (B, S, D//2) or (S, D//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None]
+        sin = sin[None]
+    c = cos[..., None, :].astype(x.dtype)    # (B, S, 1, D/2)
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+def sinusoidal_positions(n: int, dim: int):
+    """Whisper-style fixed sinusoidal position embeddings (n, dim)."""
+    half = dim // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                    * (jnp.log(10_000.0) / max(half - 1, 1)))
+    ang = jnp.arange(n, dtype=jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def def_mlp_swiglu(pb: ParamBuilder, name: str, d_model: int, d_ff: int,
+                   d_in: Optional[int] = None) -> None:
+    d_in = d_in or d_model
+    with pb.scope(name):
+        pb.param("w_gate", (d_in, d_ff), ("embed", "mlp"))
+        pb.param("w_up", (d_in, d_ff), ("embed", "mlp"))
+        pb.param("w_down", (d_ff, d_model), ("mlp", "embed"))
+
+
+def mlp_swiglu(p, x):
+    from repro.models.common import shard
+    g = jnp.einsum("...d,df->...f", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    h = shard(h, *((None,) * (h.ndim - 1)), "mlp")
+    return jnp.einsum("...f,fd->...d", h, p["w_down"].astype(x.dtype))
+
+
+def def_mlp_gelu(pb: ParamBuilder, name: str, d_model: int, d_ff: int,
+                 d_in: Optional[int] = None) -> None:
+    d_in = d_in or d_model
+    with pb.scope(name):
+        pb.param("w_in", (d_in, d_ff), ("embed", "mlp"))
+        pb.param("b_in", (d_ff,), ("mlp",), init="zeros")
+        pb.param("w_out", (d_ff, d_model), ("mlp", "embed"))
+        pb.param("b_out", (d_model,), (None,), init="zeros")
+
+
+def mlp_gelu(p, x):
+    from repro.models.common import shard
+    h = jnp.einsum("...d,df->...f", x, p["w_in"].astype(x.dtype)) \
+        + p["b_in"].astype(x.dtype)
+    h = jax.nn.gelu(h)
+    h = shard(h, *((None,) * (h.ndim - 1)), "mlp")
+    return jnp.einsum("...f,fd->...d", h, p["w_out"].astype(x.dtype)) \
+        + p["b_out"].astype(x.dtype)

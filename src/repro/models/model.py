@@ -1,0 +1,176 @@
+"""Unified Model API over every architecture family.
+
+``build_model(cfg)`` returns a ``Model`` exposing:
+
+  init_params(seed)      -> param pytree (fp32 master weights)
+  param_axes()           -> logical-axes pytree (leaf = tuple of axis names)
+  param_shapes()         -> ShapeDtypeStruct pytree
+  loss(params, batch)    -> (scalar fp32, metrics dict)
+  prefill(params, batch) -> (logits_last (B, V), cache)
+  decode_step(params, token, pos, cache) -> (logits (B, V), cache)
+  make_cache(batch, max_len, mode)       -> (cache, axes)
+  input_specs(shape)     -> dict of ShapeDtypeStructs for the shape cell
+  input_axes(shape)      -> matching logical-axes dict
+
+Batches are dicts; every family consumes ``tokens`` and optionally
+frontend embeddings (``audio_embeds`` / ``patch_embeds``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeConfig
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as tf_mod
+from repro.models.common import ParamBuilder, build
+
+PyTree = Any
+
+
+def _is_axes_leaf(x):
+    return isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # -- parameters -----------------------------------------------------------
+    def _def(self, pb: ParamBuilder) -> None:
+        if self.cfg.family == "encdec":
+            encdec_mod.def_encdec_params(pb, self.cfg)
+        else:
+            tf_mod.def_lm_params(pb, self.cfg)
+
+    def init_params(self, seed: int = 0) -> PyTree:
+        return build(self._def, "init", seed=seed,
+                     dtype=self.cfg.param_dtype)
+
+    def param_axes(self) -> PyTree:
+        return build(self._def, "spec")
+
+    def param_shapes(self) -> PyTree:
+        return build(self._def, "shape", dtype=self.cfg.param_dtype)
+
+    def param_count(self) -> int:
+        shapes = self.param_shapes()
+        return sum(int(jnp.prod(jnp.array(l.shape)))
+                   for l in jax.tree.leaves(shapes))
+
+    # -- forward / loss --------------------------------------------------------
+    def forward(self, params: PyTree, batch: Dict[str, Any],
+                return_cache: bool = False):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return encdec_mod.encdec_forward(
+                params, cfg, batch["audio_embeds"], batch["tokens"],
+                return_cache=return_cache)
+        return tf_mod.lm_forward(
+            params, cfg, batch["tokens"],
+            patch_embeds=batch.get("patch_embeds"),
+            return_cache=return_cache)
+
+    def loss(self, params: PyTree, batch: Dict[str, Any]
+             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        logits, aux, _ = self.forward(params, batch)
+        tokens = batch["tokens"]
+        targets = tokens[:, 1:]
+        lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+        nll = -jnp.take_along_axis(lp, targets[..., None],
+                                   axis=-1)[..., 0]
+        mask = batch.get("loss_mask")
+        if mask is None:
+            mask = jnp.ones_like(targets, jnp.float32)
+        else:
+            mask = mask[:, 1:].astype(jnp.float32)
+        denom = jnp.maximum(mask.sum(), 1.0)
+        ce = (nll * mask).sum() / denom
+        total = ce + self.cfg.moe.aux_loss_coef * aux \
+            if self.cfg.moe.enabled else ce
+        return total, {"ce": ce, "aux": aux,
+                       "tokens": mask.sum().astype(jnp.float32)}
+
+    # -- serving ----------------------------------------------------------------
+    def prefill(self, params: PyTree, batch: Dict[str, Any],
+                max_len: Optional[int] = None):
+        logits, _, cache = self.forward(params, batch, return_cache=True)
+        if max_len is not None:
+            if self.cfg.family == "encdec":
+                k, v = cache["self"]
+                extra = max_len - k.shape[2]
+                if extra > 0:
+                    padw = ((0, 0), (0, 0), (0, extra), (0, 0), (0, 0))
+                    cache = dict(cache)
+                    cache["self"] = (jnp.pad(k, padw), jnp.pad(v, padw))
+            else:
+                cache = tf_mod.pad_cache(self.cfg, cache, max_len)
+        return logits[:, -1], cache
+
+    def decode_step(self, params: PyTree, token, pos, cache):
+        if self.cfg.family == "encdec":
+            logits, cache = encdec_mod.encdec_decode(
+                params, self.cfg, token, pos, cache)
+        else:
+            logits, cache = tf_mod.lm_decode(
+                params, self.cfg, token, pos, cache)
+        return logits[:, 0], cache
+
+    def make_cache(self, batch: int, max_len: int, mode: str = "shape"):
+        if self.cfg.family == "encdec":
+            return encdec_mod.make_encdec_cache(self.cfg, batch, max_len,
+                                                mode)
+        return tf_mod.make_cache(self.cfg, batch, max_len, mode)
+
+    # -- shape-cell inputs -------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        tok = jnp.int32
+        d = cfg.d_model
+        emb_dt = jnp.dtype(cfg.dtype)
+        if shape.kind in ("train", "prefill"):
+            specs = {"tokens": jax.ShapeDtypeStruct((B, S), tok)}
+            if cfg.family == "encdec":
+                specs["audio_embeds"] = jax.ShapeDtypeStruct(
+                    (B, cfg.frontend.n_embeds, d), emb_dt)
+            if cfg.family == "vlm":
+                specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                    (B, cfg.frontend.n_embeds, d), emb_dt)
+            if shape.kind == "train":
+                specs["loss_mask"] = jax.ShapeDtypeStruct((B, S), jnp.int8)
+            return specs
+        # decode: one new token against a cache of seq_len
+        cache, _ = self.make_cache(B, S, mode="shape")
+        return {"token": jax.ShapeDtypeStruct((B, 1), tok),
+                "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+                "cache": cache}
+
+    def input_axes(self, shape: ShapeConfig) -> Dict[str, Any]:
+        cfg = self.cfg
+        if shape.kind in ("train", "prefill"):
+            axes: Dict[str, Any] = {"tokens": ("batch", "seq")}
+            if cfg.family == "encdec":
+                axes["audio_embeds"] = ("batch", None, None)
+            if cfg.family == "vlm":
+                axes["patch_embeds"] = ("batch", None, None)
+            if shape.kind == "train":
+                axes["loss_mask"] = ("batch", "seq")
+            return axes
+        _, cache_axes = self.make_cache(shape.global_batch, shape.seq_len,
+                                        mode="shape")
+        return {"token": ("batch", None), "pos": ("batch",),
+                "cache": cache_axes}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "pipeline":
+        raise ValueError(
+            "multiscope pipeline is built via repro.core.pipeline, "
+            "not build_model")
+    return Model(cfg)

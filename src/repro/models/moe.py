@@ -1,0 +1,126 @@
+"""Mixture-of-experts FFN with token-choice top-k routing and capacity-
+bounded, sort-based dispatch (static shapes — XLA/SPMD friendly).
+
+Dispatch is grouped BY SEQUENCE ROW (GShard-style groups): each batch row
+independently routes its S tokens into an (E, C) slot buffer with
+C = ceil(cf * S * top_k / E).  All routing ops (top_k, argsort, position
+arithmetic, scatter) act along per-row local axes, so under pjit the batch
+dim shards cleanly on (pod, data) and no global sort is ever built.  The
+expert einsum contracts with expert weights sharded on the model axis
+(EP when n_experts divides it, TP-within-expert otherwise — the
+LogicalRules divisibility fallback decides per arch).
+
+Overflowed tokens (position >= C) are dropped (contribute zero), matching
+standard capacity-factor semantics; the aux load-balance loss pushes the
+router away from overflow.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.common import ParamBuilder, shard
+from repro.models.layers import def_mlp_swiglu, mlp_swiglu
+
+
+def moe_capacity(m: MoEConfig, seq: int) -> int:
+    c = int(-(-m.capacity_factor * seq * m.top_k // m.n_experts))
+    return max(1, min(c, seq))
+
+
+def def_moe_block(pb: ParamBuilder, name: str, cfg: ModelConfig) -> None:
+    m = cfg.moe
+    d = cfg.d_model
+    with pb.scope(name):
+        pb.param("router", (d, m.n_experts), ("embed", None),
+                 dtype=jnp.float32)
+        with pb.scope("experts"):
+            pb.param("w_gate", (m.n_experts, d, m.expert_d_ff),
+                     ("expert", "embed", "expert_mlp"))
+            pb.param("w_up", (m.n_experts, d, m.expert_d_ff),
+                     ("expert", "embed", "expert_mlp"))
+            pb.param("w_down", (m.n_experts, m.expert_d_ff, d),
+                     ("expert", "expert_mlp", "embed"))
+        for i in range(m.n_shared):
+            def_mlp_swiglu(pb, f"shared{i}", d, m.expert_d_ff)
+
+
+def moe_block(p, x, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar fp32)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    E, k = m.n_experts, m.top_k
+    C = moe_capacity(m, S)
+
+    # --- routing (fp32) ---------------------------------------------------
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                  # (B, S, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)            # (B, S, k)
+
+    # aux load-balance loss: E * sum_e f_e * P_e  (per row, then mean)
+    pick_frac = jnp.zeros((B, E), jnp.float32).at[
+        jnp.arange(B)[:, None, None], gate_idx].add(1.0) / (S * k)
+    mean_prob = probs.mean(axis=1)                           # (B, E)
+    aux = E * jnp.sum(pick_frac * mean_prob, axis=-1).mean()
+
+    # --- per-row sort-based dispatch ---------------------------------------
+    e_flat = gate_idx.reshape(B, S * k)                      # expert ids
+    t_flat = jnp.repeat(jnp.arange(S), k)[None, :]           # token ids
+    w_flat = gate_vals.reshape(B, S * k)
+    order = jnp.argsort(e_flat, axis=-1, stable=True)
+    e_sort = jnp.take_along_axis(e_flat, order, axis=-1)
+    t_sort = jnp.take_along_axis(jnp.broadcast_to(t_flat, e_flat.shape),
+                                 order, axis=-1)
+    w_sort = jnp.take_along_axis(w_flat, order, axis=-1)
+    # position within expert segment: i - start_of_segment(e_sort[i])
+    counts = jnp.zeros((B, E), jnp.int32).at[
+        jnp.arange(B)[:, None], e_sort].add(1)
+    starts = jnp.cumsum(counts, axis=-1) - counts            # (B, E)
+    pos = jnp.arange(S * k)[None, :] - jnp.take_along_axis(
+        starts, e_sort, axis=-1)
+    keep = pos < C
+    slot = jnp.where(keep, e_sort * C + pos, E * C)          # E*C = dropped
+
+    # scatter tokens into the (E*C, d) buffer (per row; 'drop' mode).
+    # The zeros TARGET is sharding-constrained BEFORE the scatter: without
+    # this, SPMD propagates a replicated output for the scatter and
+    # all-gathers the updates across the mesh (measured at 3 TB/step for
+    # grok prefill_32k — see EXPERIMENTS.md §Perf).
+    xtok = jnp.take_along_axis(
+        x, t_sort[..., None].astype(jnp.int32), axis=1)      # (B, S*k, d)
+    buf0 = shard(jnp.zeros((B, E * C, d), x.dtype),
+                 "batch", None, None)
+    # vmapped 1-D scatter: the row dim stays an HLO scatter BATCH dim, so
+    # SPMD partitions it along (pod, data) instead of replicating the
+    # buffer and all-gathering updates (explicit arange(B) indices defeat
+    # the partitioner — measured 3 TB/step on grok prefill_32k)
+    buf = jax.vmap(lambda b0, s, xt: b0.at[s].set(xt, mode="drop"))(
+        buf0, slot, xtok)
+    buf = buf.reshape(B, E, C, d)
+    buf = shard(buf, "batch", None, None, None)
+
+    # --- expert compute (E on the model axis via weight sharding) ----------
+    wg = p["experts"]["w_gate"].astype(x.dtype)
+    wu = p["experts"]["w_up"].astype(x.dtype)
+    wd = p["experts"]["w_down"].astype(x.dtype)
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, wg)) \
+        * jnp.einsum("becd,edf->becf", buf, wu)
+    h = shard(h, "batch", "expert", None, "expert_mlp")
+    out_buf = jnp.einsum("becf,efd->becd", h, wd)
+    out_buf = out_buf.reshape(B, E * C, d)
+
+    # --- combine: gather slots back and weight-sum over k -----------------
+    gathered = jnp.take_along_axis(
+        out_buf, jnp.minimum(slot, E * C - 1)[..., None], axis=1)
+    gathered = jnp.where(keep[..., None], gathered, 0)
+    contrib = gathered * w_sort[..., None].astype(x.dtype)
+    y0 = shard(jnp.zeros((B, S, d), x.dtype), "batch", None, None)
+    y = jax.vmap(lambda y_, t, c: y_.at[t].add(c))(y0, t_sort, contrib)
+
+    # --- shared experts (always-on) ----------------------------------------
+    for i in range(m.n_shared):
+        y = y + mlp_swiglu(p[f"shared{i}"], x)
+    return y, aux.astype(jnp.float32)

@@ -1,0 +1,135 @@
+"""Mamba2 (SSD) block: in_proj -> (z, x, B, C, dt), causal depthwise conv,
+SSD scan (Pallas kernel on TPU), gated RMSNorm, out_proj.
+
+Decode carries two states per layer: the SSM state (B, H, P, N) fp32 and a
+conv tail (B, d_conv-1, conv_dim) holding the last inputs of the depthwise
+convolution.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.ssd_scan import ssd_scan, ssd_step
+from repro.models.common import ParamBuilder, shard
+from repro.models.layers import def_linear, linear, rmsnorm
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.d_inner(cfg.d_model)
+    n_heads = s.n_heads(cfg.d_model)
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return s, d_inner, n_heads, conv_dim
+
+
+def def_ssm_block(pb: ParamBuilder, name: str, cfg: ModelConfig) -> None:
+    s, d_inner, n_heads, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    with pb.scope(name):
+        # fused input projection: [z (d_inner), x (d_inner), B, C, dt]
+        d_proj = 2 * d_inner + 2 * s.n_groups * s.d_state + n_heads
+        def_linear(pb, "in_proj", d, d_proj, ("embed", "mlp"))
+        pb.param("conv_w", (s.d_conv, conv_dim), (None, "mlp"))
+        pb.param("conv_b", (conv_dim,), ("mlp",), init="zeros")
+        pb.param("A_log", (n_heads,), (None,), init="ssm_a")
+        pb.param("dt_bias", (n_heads,), (None,), init="ssm_dt")
+        pb.param("D", (n_heads,), (None,), init="ones")
+        pb.param("norm_scale", (d_inner,), ("mlp",), init="ones")
+        def_linear(pb, "out_proj", d_inner, d, ("mlp", "embed"))
+
+
+def _split_proj(proj, cfg: ModelConfig):
+    s, d_inner, n_heads, _ = _dims(cfg)
+    gN = s.n_groups * s.d_state
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner:d_inner + d_inner + 2 * gN]
+    dt = proj[..., -n_heads:]
+    return z, xbc, dt
+
+
+def _gated_norm(p, y, z, eps: float):
+    """Mamba2's normalization: RMSNorm(y * silu(z))."""
+    g = y * jax.nn.silu(z)
+    return rmsnorm({"scale": p["norm_scale"]}, g, eps)
+
+
+def ssm_block_full(p, x, cfg: ModelConfig, return_state: bool = False):
+    """Full-sequence SSD.  x: (B, S, d_model) -> (B, S, d_model)
+    [, decode state dict when return_state]."""
+    s, d_inner, n_heads, conv_dim = _dims(cfg)
+    gN = s.n_groups * s.d_state
+    B_, S_ = x.shape[:2]
+    proj = linear(p["in_proj"], x)
+    z, xbc, dt = _split_proj(proj, cfg)
+    # causal depthwise conv over time
+    pad = jnp.pad(xbc, ((0, 0), (s.d_conv - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + S_] * p["conv_w"][i].astype(x.dtype)
+               for i in range(s.d_conv))
+    conv = jax.nn.silu(conv + p["conv_b"].astype(x.dtype))
+    xs = conv[..., :d_inner].reshape(B_, S_, n_heads, s.head_dim)
+    Bmat = conv[..., d_inner:d_inner + gN]
+    Cmat = conv[..., d_inner + gN:]
+    dt_act = jax.nn.softplus(dt.astype(jnp.float32)
+                             + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xs = shard(xs, "batch", "seq", "heads", None)
+    y, final_state = ssd_scan(xs, dt_act, A, Bmat, Cmat,
+                              p["D"].astype(jnp.float32),
+                              chunk=s.chunk_size)
+    y = y.reshape(B_, S_, d_inner)
+    y = _gated_norm(p, y, z, cfg.norm_eps)
+    out = linear(p["out_proj"], y)
+    if return_state:
+        state = {"ssm": final_state,
+                 "conv": xbc[:, S_ - (s.d_conv - 1):, :]}
+        return out, state
+    return out
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    s, d_inner, n_heads, conv_dim = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, n_heads, s.head_dim, s.d_state),
+                         jnp.float32),
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+    }
+
+
+def ssm_state_axes(cfg: ModelConfig):
+    return {"ssm": ("batch", "heads", None, None),
+            "conv": ("batch", None, "mlp")}
+
+
+def ssm_block_decode(p, x, state, cfg: ModelConfig):
+    """Single-token decode.  x: (B, 1, d_model); state: init_ssm_state().
+
+    Returns (out (B, 1, d_model), new_state).
+    """
+    s, d_inner, n_heads, conv_dim = _dims(cfg)
+    gN = s.n_groups * s.d_state
+    B_ = x.shape[0]
+    proj = linear(p["in_proj"], x[:, 0])               # (B, d_proj)
+    z, xbc, dt = _split_proj(proj, cfg)
+    # depthwise conv over the stored tail + the new input
+    hist = jnp.concatenate(
+        [state["conv"], xbc[:, None, :].astype(state["conv"].dtype)], axis=1)
+    conv = jnp.einsum("btc,tc->bc", hist.astype(x.dtype),
+                      p["conv_w"].astype(x.dtype))
+    conv = jax.nn.silu(conv + p["conv_b"].astype(x.dtype))
+    xt = conv[..., :d_inner].reshape(B_, n_heads, s.head_dim)
+    Bt = conv[..., d_inner:d_inner + gN]
+    Ct = conv[..., d_inner + gN:]
+    dt_act = jax.nn.softplus(dt.astype(jnp.float32)
+                             + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, new_ssm = ssd_step(state["ssm"], xt, dt_act, A, Bt, Ct,
+                          p["D"].astype(jnp.float32))
+    y = y.reshape(B_, d_inner)
+    y = _gated_norm(p, y, z, cfg.norm_eps)
+    out = linear(p["out_proj"], y)[:, None, :]
+    new_state = {"ssm": new_ssm, "conv": hist[:, 1:]}
+    return out, new_state

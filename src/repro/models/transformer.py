@@ -1,0 +1,470 @@
+"""Decoder-only LM assembly for the dense / moe / ssm / hybrid / vlm
+families: parameter definition, full-sequence forward (train + prefill
+with cache capture), and single-token decode over caches.
+
+Layer parameters are STACKED (leading ``layers`` dim via ParamBuilder.stack)
+and applied with ``lax.scan`` so the lowered HLO is one layer body repeated
+— small HLO, fast SPMD partitioning, and XLA overlaps layer i+1 weight
+all-gathers with layer i compute.  Remat wraps the scan body according to
+``cfg.remat``.
+
+Hybrid (Zamba2) layout: scan over groups; each group runs a nested scan of
+``ssm_per_group`` Mamba2 layers then one SHARED attention+MLP block whose
+weights (2 distinct sets, alternating) read ``concat([h, h_embed])`` of
+width 2*d_model — the Zamba2 weight-sharing trick.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm as ssm_mod
+from repro.models.attention import (attention_decode, attention_full,
+                                    def_attention, kv_cache_axes)
+from repro.models.common import ParamBuilder, shard
+from repro.models.layers import (def_embedding, def_linear, def_mlp_swiglu,
+                                 def_rmsnorm, embed, linear, mlp_swiglu,
+                                 rmsnorm, unembed)
+from repro.models.moe import def_moe_block, moe_block
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Parameter definition
+# ---------------------------------------------------------------------------
+
+def _def_attn_layer(pb: ParamBuilder, cfg: ModelConfig,
+                    mlp_kind: str, d_ff: int) -> None:
+    def_rmsnorm(pb, "ln_attn", cfg.d_model)
+    def_attention(pb, "attn", cfg)
+    def_rmsnorm(pb, "ln_mlp", cfg.d_model)
+    if mlp_kind == "swiglu":
+        def_mlp_swiglu(pb, "mlp", cfg.d_model, d_ff)
+    elif mlp_kind == "moe":
+        def_moe_block(pb, "moe", cfg)
+    else:
+        raise ValueError(mlp_kind)
+
+
+def def_lm_params(pb: ParamBuilder, cfg: ModelConfig) -> None:
+    def_embedding(pb, "embed", cfg.vocab_size, cfg.d_model)
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        with pb.scope("layers"), pb.stack(cfg.n_layers):
+            _def_attn_layer(pb, cfg, "swiglu", cfg.d_ff)
+    elif fam == "moe":
+        m = cfg.moe
+        if m.dense_first_n:
+            with pb.scope("dense_layers"), pb.stack(m.dense_first_n):
+                _def_attn_layer(pb, cfg, "swiglu", m.dense_d_ff)
+        with pb.scope("layers"), pb.stack(cfg.n_layers - m.dense_first_n):
+            _def_attn_layer(pb, cfg, "moe", 0)
+    elif fam == "ssm":
+        with pb.scope("layers"), pb.stack(cfg.n_layers):
+            def_rmsnorm(pb, "ln", cfg.d_model)
+            ssm_mod.def_ssm_block(pb, "ssm", cfg)
+    elif fam == "hybrid":
+        h = cfg.hybrid
+        assert h is not None
+        with pb.scope("groups"), pb.stack(h.n_groups), \
+                pb.scope("ssm_layers"), pb.stack(h.ssm_per_group):
+            def_rmsnorm(pb, "ln", cfg.d_model)
+            ssm_mod.def_ssm_block(pb, "ssm", cfg)
+        with pb.scope("shared"), pb.stack(h.n_shared_blocks):
+            def_rmsnorm(pb, "ln_attn", 2 * cfg.d_model)
+            def_attention(pb, "attn", cfg, d_in=2 * cfg.d_model)
+            def_rmsnorm(pb, "ln_mlp", 2 * cfg.d_model)
+            def_mlp_swiglu(pb, "mlp", cfg.d_model, cfg.d_ff,
+                           d_in=2 * cfg.d_model)
+        with pb.scope("tail"), pb.stack(h.tail_ssm):
+            def_rmsnorm(pb, "ln", cfg.d_model)
+            ssm_mod.def_ssm_block(pb, "ssm", cfg)
+    else:
+        raise ValueError(fam)
+    def_rmsnorm(pb, "ln_final", cfg.d_model)
+    if not cfg.tie_embeddings:
+        def_linear(pb, "lm_head", cfg.d_model, cfg.vocab_size,
+                   ("embed", "vocab"))
+
+
+# ---------------------------------------------------------------------------
+# Remat policy
+# ---------------------------------------------------------------------------
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)        # "full": save nothing
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _attn_layer_fwd(lp, h, cfg: ModelConfig, mlp_kind: str,
+                    capture_cache: bool):
+    """One attention layer.  Returns (h, aux, cache_slice_or_None)."""
+    hin = rmsnorm(lp["ln_attn"], h, cfg.norm_eps)
+    B, S = hin.shape[:2]
+    cache = None
+    if capture_cache:
+        from repro.models.layers import apply_rope, rope_tables
+        q = linear(lp["attn"]["wq"], hin).reshape(
+            B, S, cfg.n_heads, cfg.head_dim)
+        k = linear(lp["attn"]["wk"], hin).reshape(
+            B, S, cfg.n_kv_heads, cfg.head_dim)
+        v = linear(lp["attn"]["wv"], hin).reshape(
+            B, S, cfg.n_kv_heads, cfg.head_dim)
+        cos, sin = rope_tables(jnp.arange(S), cfg.head_dim, cfg.rope_theta)
+        q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+        from repro.kernels.flash_attention import flash_attention
+        q = shard(q, "batch", "seq", "heads", None)
+        k = shard(k, "batch", "seq", "kv_heads", None)
+        v = shard(v, "batch", "seq", "kv_heads", None)
+        attn_out = flash_attention(q, k, v, causal=True)
+        attn_out = linear(lp["attn"]["wo"], attn_out.reshape(B, S, cfg.q_dim))
+        cache = (k, v)
+    else:
+        attn_out = attention_full(lp["attn"], hin, cfg)
+    h = h + attn_out
+    hin = rmsnorm(lp["ln_mlp"], h, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if mlp_kind == "swiglu":
+        h = h + mlp_swiglu(lp["mlp"], hin)
+    else:
+        out, aux = moe_block(lp["moe"], hin, cfg)
+        h = h + out
+    return h, aux, cache
+
+
+def _ssm_layer_fwd(lp, h, cfg: ModelConfig, capture_cache: bool):
+    hin = rmsnorm(lp["ln"], h, cfg.norm_eps)
+    if capture_cache:
+        out, state = ssm_mod.ssm_block_full(lp["ssm"], hin, cfg,
+                                            return_state=True)
+    else:
+        out = ssm_mod.ssm_block_full(lp["ssm"], hin, cfg)
+        state = None
+    return h + out, state
+
+
+def _shared_block_fwd(sp, h, h_embed, cfg: ModelConfig,
+                      capture_cache: bool, pos_offset: int = 0):
+    """Zamba2 shared attn+MLP block on concat([h, h_embed])."""
+    x2 = jnp.concatenate([h, h_embed], axis=-1)
+    hin = rmsnorm(sp["ln_attn"], x2, cfg.norm_eps)
+    B, S = hin.shape[:2]
+    cache = None
+    if capture_cache:
+        from repro.models.layers import apply_rope, rope_tables
+        q = linear(sp["attn"]["wq"], hin).reshape(
+            B, S, cfg.n_heads, cfg.head_dim)
+        k = linear(sp["attn"]["wk"], hin).reshape(
+            B, S, cfg.n_kv_heads, cfg.head_dim)
+        v = linear(sp["attn"]["wv"], hin).reshape(
+            B, S, cfg.n_kv_heads, cfg.head_dim)
+        cos, sin = rope_tables(jnp.arange(S), cfg.head_dim, cfg.rope_theta)
+        q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+        from repro.kernels.flash_attention import flash_attention
+        attn_out = flash_attention(q, k, v, causal=True)
+        attn_out = linear(sp["attn"]["wo"],
+                          attn_out.reshape(B, S, cfg.q_dim))
+        cache = (k, v)
+    else:
+        attn_out = attention_full(sp["attn"], hin, cfg)
+    h = h + attn_out
+    hin = rmsnorm(sp["ln_mlp"], jnp.concatenate([h, h_embed], axis=-1),
+                  cfg.norm_eps)
+    h = h + mlp_swiglu(sp["mlp"], hin)
+    return h, cache
+
+
+def lm_forward(params: PyTree, cfg: ModelConfig, tokens, *,
+               patch_embeds=None, return_cache: bool = False):
+    """tokens: (B, S) int32 -> (logits fp32, aux_loss, cache|None)."""
+    dtype = jnp.dtype(cfg.dtype)
+    h = embed(params["embed"], tokens, dtype)
+    if patch_embeds is not None:
+        P = patch_embeds.shape[1]
+        h = jnp.concatenate([patch_embeds.astype(dtype), h[:, P:]], axis=1)
+    h = shard(h, "batch", "seq", None)
+    fam = cfg.family
+    aux_total = jnp.zeros((), jnp.float32)
+    cache: Dict[str, Any] = {}
+
+    if fam in ("dense", "vlm", "moe"):
+        def make_body(mlp_kind):
+            def body(carry, lp):
+                h, aux = carry
+                h, a, c = _attn_layer_fwd(lp, h, cfg, mlp_kind,
+                                          return_cache)
+                return (h, aux + a), c
+            return _remat(body, cfg)
+
+        if fam == "moe" and cfg.moe.dense_first_n:
+            (h, aux_total), c = jax.lax.scan(
+                make_body("swiglu"), (h, aux_total),
+                params["dense_layers"])
+            if return_cache:
+                cache["dense_layers"] = c
+        mlp_kind = "moe" if fam == "moe" else "swiglu"
+        (h, aux_total), c = jax.lax.scan(
+            make_body(mlp_kind), (h, aux_total), params["layers"])
+        if return_cache:
+            cache["layers"] = c
+
+    elif fam == "ssm":
+        def body(h, lp):
+            h, st = _ssm_layer_fwd(lp, h, cfg, return_cache)
+            return h, st
+        h, states = jax.lax.scan(_remat(body, cfg), h, params["layers"])
+        if return_cache:
+            cache["layers"] = states
+
+    elif fam == "hybrid":
+        hcfg = cfg.hybrid
+        h_embed = h
+
+        def group_body(h, xs):
+            gi, gp = xs
+
+            def ssm_body(hh, lp):
+                hh, st = _ssm_layer_fwd(lp, hh, cfg, return_cache)
+                return hh, st
+            h, states = jax.lax.scan(_remat(ssm_body, cfg), h,
+                                     gp["ssm_layers"])
+            sp = jax.tree.map(
+                lambda a: a[gi % hcfg.n_shared_blocks], params["shared"])
+            h, kv = _shared_block_fwd(sp, h, h_embed, cfg, return_cache)
+            return h, (states, kv)
+
+        h, (g_states, g_kv) = jax.lax.scan(
+            group_body, h,
+            (jnp.arange(hcfg.n_groups), params["groups"]))
+
+        def tail_body(hh, lp):
+            hh, st = _ssm_layer_fwd(lp, hh, cfg, return_cache)
+            return hh, st
+        h, t_states = jax.lax.scan(_remat(tail_body, cfg), h,
+                                   params["tail"])
+        if return_cache:
+            cache["groups"] = g_states
+            cache["shared_kv"] = g_kv
+            cache["tail"] = t_states
+    else:
+        raise ValueError(fam)
+
+    h = rmsnorm(params["ln_final"], h, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], h)
+    else:
+        logits = jnp.einsum("...d,dv->...v", h.astype(jnp.float32),
+                            params["lm_head"]["w"].astype(jnp.float32))
+    logits = shard(logits, "batch", "seq", "vocab")
+    return logits, aux_total, (cache if return_cache else None)
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int,
+               mode: str = "shape") -> Tuple[PyTree, PyTree]:
+    """Returns (cache, logical_axes) — zeros (mode='init') or
+    ShapeDtypeStructs (mode='shape')."""
+    dtype = jnp.dtype(cfg.dtype)
+    kv_axes = kv_cache_axes(cfg)
+
+    def mk(shape, dt):
+        if mode == "init":
+            return jnp.zeros(shape, dt)
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    def kv_pair(n_layers):
+        shape = (n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+        ax = ("layers",) + kv_axes
+        return (mk(shape, dtype), mk(shape, dtype)), (ax, ax)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        c, a = kv_pair(cfg.n_layers)
+        return {"layers": c}, {"layers": a}
+    if fam == "moe":
+        cache, axes = {}, {}
+        if cfg.moe.dense_first_n:
+            c, a = kv_pair(cfg.moe.dense_first_n)
+            cache["dense_layers"], axes["dense_layers"] = c, a
+        c, a = kv_pair(cfg.n_layers - cfg.moe.dense_first_n)
+        cache["layers"], axes["layers"] = c, a
+        return cache, axes
+    if fam == "ssm":
+        st = ssm_mod.init_ssm_state(cfg, batch, dtype)
+        sax = ssm_mod.ssm_state_axes(cfg)
+        L = cfg.n_layers
+        cache = jax.tree.map(
+            lambda x: mk((L,) + x.shape, x.dtype), st)
+        axes = jax.tree.map(lambda a: ("layers",) + a, sax,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        return {"layers": cache}, {"layers": axes}
+    if fam == "hybrid":
+        h = cfg.hybrid
+        st = ssm_mod.init_ssm_state(cfg, batch, dtype)
+        sax = ssm_mod.ssm_state_axes(cfg)
+        lead_g = (h.n_groups, h.ssm_per_group)
+        cache = {
+            "groups": jax.tree.map(
+                lambda x: mk(lead_g + x.shape, x.dtype), st),
+            "tail": jax.tree.map(
+                lambda x: mk((h.tail_ssm,) + x.shape, x.dtype), st),
+        }
+        axes = {
+            "groups": jax.tree.map(
+                lambda a: ("layers", "layers2") + a, sax,
+                is_leaf=lambda x: isinstance(x, tuple)),
+            "tail": jax.tree.map(
+                lambda a: ("layers",) + a, sax,
+                is_leaf=lambda x: isinstance(x, tuple)),
+        }
+        kvs = (h.n_groups, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+        kax = ("layers",) + kv_axes
+        cache["shared_kv"] = (mk(kvs, dtype), mk(kvs, dtype))
+        axes["shared_kv"] = (kax, kax)
+        return cache, axes
+    raise ValueError(fam)
+
+
+def pad_cache(cfg: ModelConfig, cache: PyTree, max_len: int) -> PyTree:
+    """Grow the seq axis of every KV cache leaf (captured at prefill length)
+    to ``max_len`` so decode can append.  SSM states are length-free."""
+    def pad_kv(pair):
+        k, v = pair
+        extra = max_len - k.shape[2]
+        if extra <= 0:
+            return (k, v)
+        padw = ((0, 0), (0, 0), (0, extra), (0, 0), (0, 0))
+        return (jnp.pad(k, padw), jnp.pad(v, padw))
+
+    fam = cfg.family
+    out = dict(cache)
+    if fam in ("dense", "vlm", "moe"):
+        for key in ("dense_layers", "layers"):
+            if key in out and out[key] is not None:
+                out[key] = pad_kv(out[key])
+    elif fam == "hybrid":
+        out["shared_kv"] = pad_kv(out["shared_kv"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Single-token decode
+# ---------------------------------------------------------------------------
+
+def lm_decode(params: PyTree, cfg: ModelConfig, token, pos, cache):
+    """token: (B, 1) int32; pos: (B,) int32 — valid cache length per row.
+
+    Returns (logits (B, 1, V) fp32, new_cache).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    h = embed(params["embed"], token, dtype)
+    h = shard(h, "batch", None, None)
+    fam = cfg.family
+    new_cache: Dict[str, Any] = {}
+
+    if fam in ("dense", "vlm", "moe"):
+        def make_body(mlp_kind):
+            def body(h, xs):
+                lp, (ck, cv) = xs
+                hin = rmsnorm(lp["ln_attn"], h, cfg.norm_eps)
+                attn_out, ck, cv = attention_decode(
+                    lp["attn"], hin, ck, cv, pos, cfg)
+                h = h + attn_out
+                hin = rmsnorm(lp["ln_mlp"], h, cfg.norm_eps)
+                if mlp_kind == "swiglu":
+                    h = h + mlp_swiglu(lp["mlp"], hin)
+                else:
+                    out, _ = moe_block(lp["moe"], hin, cfg)
+                    h = h + out
+                return h, (ck, cv)
+            return body
+
+        if fam == "moe" and cfg.moe.dense_first_n:
+            h, c = jax.lax.scan(make_body("swiglu"), h,
+                                (params["dense_layers"],
+                                 cache["dense_layers"]))
+            new_cache["dense_layers"] = c
+        mlp_kind = "moe" if fam == "moe" else "swiglu"
+        h, c = jax.lax.scan(make_body(mlp_kind), h,
+                            (params["layers"], cache["layers"]))
+        new_cache["layers"] = c
+
+    elif fam == "ssm":
+        def body(h, xs):
+            lp, st = xs
+            hin = rmsnorm(lp["ln"], h, cfg.norm_eps)
+            out, st = ssm_mod.ssm_block_decode(lp["ssm"], hin, st, cfg)
+            return h + out, st
+        h, states = jax.lax.scan(body, h,
+                                 (params["layers"], cache["layers"]))
+        new_cache["layers"] = states
+
+    elif fam == "hybrid":
+        hcfg = cfg.hybrid
+        h_embed = h
+
+        def group_body(h, xs):
+            gi, gp, gst, (ck, cv) = xs
+
+            def ssm_body(hh, xs2):
+                lp, st = xs2
+                hin = rmsnorm(lp["ln"], hh, cfg.norm_eps)
+                out, st = ssm_mod.ssm_block_decode(lp["ssm"], hin, st, cfg)
+                return hh + out, st
+            h, states = jax.lax.scan(ssm_body, h,
+                                     (gp["ssm_layers"], gst))
+            sp = jax.tree.map(
+                lambda a: a[gi % hcfg.n_shared_blocks], params["shared"])
+            x2 = jnp.concatenate([h, h_embed], axis=-1)
+            hin = rmsnorm(sp["ln_attn"], x2, cfg.norm_eps)
+            attn_out, ck, cv = attention_decode(
+                sp["attn"], hin, ck, cv, pos, cfg)
+            h = h + attn_out
+            hin = rmsnorm(sp["ln_mlp"],
+                          jnp.concatenate([h, h_embed], axis=-1),
+                          cfg.norm_eps)
+            h = h + mlp_swiglu(sp["mlp"], hin)
+            return h, (states, (ck, cv))
+
+        ck_all, cv_all = cache["shared_kv"]
+        h, (g_states, g_kv) = jax.lax.scan(
+            group_body, h,
+            (jnp.arange(hcfg.n_groups), params["groups"],
+             cache["groups"], (ck_all, cv_all)))
+
+        def tail_body(hh, xs):
+            lp, st = xs
+            hin = rmsnorm(lp["ln"], hh, cfg.norm_eps)
+            out, st = ssm_mod.ssm_block_decode(lp["ssm"], hin, st, cfg)
+            return hh + out, st
+        h, t_states = jax.lax.scan(tail_body, h,
+                                   (params["tail"], cache["tail"]))
+        new_cache["groups"] = g_states
+        new_cache["shared_kv"] = g_kv
+        new_cache["tail"] = t_states
+    else:
+        raise ValueError(fam)
+
+    h = rmsnorm(params["ln_final"], h, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], h)
+    else:
+        logits = jnp.einsum("...d,dv->...v", h.astype(jnp.float32),
+                            params["lm_head"]["w"].astype(jnp.float32))
+    return logits, new_cache

@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamW, adamw  # noqa: F401
+from repro.optim.schedules import cosine_schedule, linear_schedule  # noqa: F401
+from repro.optim.clip import clip_by_global_norm, global_norm  # noqa: F401

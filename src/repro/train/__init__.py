@@ -1,0 +1,1 @@
+from repro.train.step import TrainStep, build_train_step  # noqa: F401

@@ -1,0 +1,15 @@
+"""Shared fixtures.  NOTE: XLA_FLAGS is deliberately NOT set here — smoke
+tests and benchmarks must see the real single CPU device; only the
+dry-run launcher forces 512 placeholder devices."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,209 @@
+"""Behaviour tests for the paper's core: windows, hungarian, refinement,
+metrics, tracker pieces, synthetic data determinism."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.configs.multiscope import MULTISCOPE_PIPELINE, RefineConfig
+from repro.core.detector import iou_matrix, make_targets, nms
+from repro.core.hungarian import hungarian
+from repro.core.metrics import (classify_track, count_accuracy, mota,
+                                pattern_counts)
+from repro.core.refine import TrackRefiner, dbscan_tracks, resample_track
+from repro.core.sort import SortTracker
+from repro.core.windows import (SizeSet, connected_components,
+                                detector_time_model, group_cells,
+                                select_window_sizes)
+from repro.data.video_synth import DATASETS, make_clip
+
+
+# ---------------------------------------------------------------------------
+# Hungarian
+# ---------------------------------------------------------------------------
+
+def _brute_min(cost):
+    n, m = cost.shape
+    k = min(n, m)
+    best = np.inf
+    for cols in itertools.permutations(range(m), k):
+        for rows in itertools.combinations(range(n), k):
+            best = min(best, sum(cost[r, c]
+                                 for r, c in zip(rows, cols)))
+    return best
+
+
+def test_hungarian_optimal():
+    rng = np.random.default_rng(0)
+    for _ in range(60):
+        n, m = rng.integers(1, 6, 2)
+        cost = rng.random((n, m)) * 10
+        pairs = hungarian(cost)
+        tot = sum(cost[r, c] for r, c in pairs)
+        assert abs(tot - _brute_min(cost)) < 1e-9
+        # a valid matching: each row/col used at most once
+        assert len({r for r, _ in pairs}) == len(pairs)
+        assert len({c for _, c in pairs}) == len(pairs)
+
+
+# ---------------------------------------------------------------------------
+# Windows
+# ---------------------------------------------------------------------------
+
+def _sizeset(full=(12, 8), extra=((4, 4), (6, 4))):
+    sizes = [full] + list(extra)
+    tm = detector_time_model(full, 1.0)
+    return SizeSet(sizes, {s: tm(s) for s in sizes})
+
+
+def test_group_cells_covers_all_positives():
+    rng = np.random.default_rng(1)
+    ss = _sizeset()
+    for _ in range(40):
+        grid = (rng.random((8, 12)) < 0.15).astype(np.int8)
+        windows = group_cells(grid, ss, max_windows=8)
+        if grid.sum() == 0:
+            assert windows == []
+            continue
+        cover = np.zeros_like(grid)
+        for (x, y, (w, h)) in windows:
+            cover[y:y + h, x:x + w] = 1
+        assert (cover >= grid).all(), "window set must cover positives"
+
+
+def test_group_cells_never_slower_than_full_frame():
+    rng = np.random.default_rng(2)
+    ss = _sizeset()
+    for _ in range(40):
+        grid = (rng.random((8, 12)) < 0.3).astype(np.int8)
+        windows = group_cells(grid, ss, max_windows=4)
+        if grid.sum():
+            assert ss.est(windows) <= ss.times[ss.full] + 1e-12
+
+
+def test_empty_grid_skips_frame():
+    ss = _sizeset()
+    assert group_cells(np.zeros((8, 12), np.int8), ss) == []
+
+
+def test_connected_components():
+    grid = np.zeros((5, 5), np.int8)
+    grid[0, 0] = grid[0, 1] = 1          # one component
+    grid[4, 4] = 1                       # another
+    comps = connected_components(grid)
+    assert sorted(len(c) for c in comps) == [1, 2]
+
+
+def test_select_window_sizes_includes_full_and_helps():
+    rng = np.random.default_rng(3)
+    grids = []
+    for _ in range(20):
+        g = np.zeros((8, 12), np.int8)
+        # objects cluster in a small area (windows should pay off)
+        y, x = rng.integers(0, 5), rng.integers(0, 9)
+        g[y:y + 2, x:x + 3] = 1
+        grids.append(g)
+    tm = detector_time_model((12, 8), 1.0)
+    S = select_window_sizes(grids, (12, 8), 3, tm)
+    assert S[0] == (12, 8)
+    assert len(S) >= 2                  # found at least one useful size
+    ss = SizeSet(S, {s: tm(s) for s in S})
+    est = sum(ss.est(group_cells(g, ss)) for g in grids)
+    assert est < 20 * tm((12, 8)) * 0.8   # >20% faster than full frames
+
+
+# ---------------------------------------------------------------------------
+# SORT
+# ---------------------------------------------------------------------------
+
+def test_sort_tracks_linear_motion():
+    t = SortTracker()
+    for f in range(10):
+        dets = np.array([[0.1 + 0.05 * f, 0.5, 0.1, 0.1, 0.9],
+                         [0.9 - 0.05 * f, 0.3, 0.1, 0.1, 0.9]],
+                        np.float32)
+        t.step(f, dets)
+    tracks = t.result()
+    assert len(tracks) == 2
+    assert all(len(tr) == 10 for tr in tracks)
+
+
+# ---------------------------------------------------------------------------
+# Refinement
+# ---------------------------------------------------------------------------
+
+def test_refiner_extends_partial_track():
+    rng = np.random.default_rng(4)
+    train_tracks = []
+    for i in range(12):
+        xs = np.linspace(0.0, 1.0, 30)
+        ys = 0.5 + 0.01 * rng.standard_normal(30)
+        tr = np.zeros((30, 6), np.float32)
+        tr[:, 0] = np.arange(30)
+        tr[:, 1] = xs
+        tr[:, 2] = ys
+        train_tracks.append(tr)
+    cfg = RefineConfig(dbscan_eps=20.0, grid_cell=32)
+    refiner = TrackRefiner(cfg, train_tracks, frame_scale=1.0 / 192)
+    partial = np.zeros((5, 6), np.float32)
+    partial[:, 0] = np.arange(5)
+    partial[:, 1] = np.linspace(0.4, 0.6, 5)      # middle section only
+    partial[:, 2] = 0.5
+    out = refiner.refine(partial)
+    assert len(out) == 7                          # start + end appended
+    assert out[0, 1] < 0.15 and out[-1, 1] > 0.85
+
+
+def test_dbscan_merges_redundant_paths():
+    paths = [resample_track(
+        np.stack([np.linspace(0, 1, 10), np.full(10, 0.5)], 1), 20)
+        for _ in range(5)]
+    paths += [resample_track(
+        np.stack([np.full(10, 0.5), np.linspace(0, 1, 10)], 1), 20)]
+    clusters = dbscan_tracks(paths, eps=0.05, min_pts=2)
+    sizes = sorted(len(c) for c in clusters)
+    assert sizes == [1, 5]
+
+
+# ---------------------------------------------------------------------------
+# Metrics
+# ---------------------------------------------------------------------------
+
+def test_count_accuracy_perfect_and_floor():
+    assert count_accuracy(np.array([3, 2]), np.array([3, 2])) == 1.0
+    assert count_accuracy(np.array([9, 0]), np.array([3, 2])) < 0.5
+
+
+def test_mota_perfect_on_ground_truth():
+    clip = make_clip("caldot1", "test", 0)
+    tracks = [np.concatenate(
+        [t.frames[:, None].astype(np.float32), t.boxes,
+         np.full((len(t.frames), 1), t.track_id, np.float32)], axis=1)
+        for t in clip.tracks]
+    assert mota(tracks, clip) == pytest.approx(1.0)
+    assert count_accuracy(pattern_counts(tracks, clip.profile),
+                          clip.pattern_counts()) == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic data
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", DATASETS)
+def test_clip_determinism_and_gt(name):
+    a = make_clip(name, "train", 1)
+    b = make_clip(name, "train", 1)
+    assert len(a.tracks) == len(b.tracks)
+    np.testing.assert_array_equal(a.pattern_counts(), b.pattern_counts())
+    fa = a.render(3, 96, 64)
+    fb = b.render(3, 96, 64)
+    np.testing.assert_array_equal(fa, fb)
+    assert fa.shape == (64, 96, 3)
+
+
+def test_detector_targets_roundtrip():
+    boxes = [np.array([[0.5, 0.5, 0.2, 0.2]], np.float32)]
+    obj, box = make_targets(boxes, 8, 8)
+    assert obj.sum() == 1
+    i, j = np.argwhere(obj[0])[0]
+    assert (i, j) == (4, 4)

@@ -1,0 +1,173 @@
+"""Per-kernel validation: Pallas (interpret=True) and the jnp fallback vs
+the pure-jnp oracle, swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ops import _chunked_jnp, flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.ops import _jnp_fallback
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
+from repro.kernels.ssd_scan.ops import _chunked_jnp as ssd_chunked
+from repro.kernels.ssd_scan.ops import ssd_scan, ssd_step
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+from repro.kernels.proxy_score.kernel import proxy_score_pallas
+from repro.kernels.proxy_score.ref import proxy_score_ref
+from repro.kernels.window_gather.kernel import window_gather_pallas
+from repro.kernels.window_gather.ref import window_gather_ref
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Sq,Skv,Hq,Hkv,D,causal", [
+    (2, 128, 128, 4, 2, 64, True),
+    (1, 64, 256, 4, 4, 32, True),
+    (2, 128, 128, 8, 2, 64, False),
+    (1, 64, 64, 2, 1, 128, True),
+])
+def test_flash_attention(dtype, B, Sq, Skv, Hq, Hkv, D, causal):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (B, Sq, Hq, D), dtype)
+    k = _rand(ks[1], (B, Skv, Hkv, D), dtype)
+    v = _rand(ks[2], (B, Skv, Hkv, D), dtype)
+    ref = attention_ref(q, k, v, causal=causal)
+    chk = _chunked_jnp(q, k, v, causal=causal, sm_scale=1.0 / D ** 0.5,
+                       block_k=64)
+    pal = flash_attention_pallas(q, k, v, causal=causal, block_q=64,
+                                 block_k=64, interpret=True)
+    tol = TOL[dtype]
+    np.testing.assert_allclose(np.asarray(chk, np.float32),
+                               np.asarray(ref, np.float32), atol=tol,
+                               rtol=tol)
+    np.testing.assert_allclose(np.asarray(pal, np.float32),
+                               np.asarray(ref, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_flash_attention_ragged_noncausal():
+    """Whisper-style cross attention: Skv not a block multiple."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = _rand(ks[0], (2, 100, 4, 32), jnp.float32)
+    k = _rand(ks[1], (2, 75, 2, 32), jnp.float32)
+    v = _rand(ks[2], (2, 75, 2, 32), jnp.float32)
+    ref = attention_ref(q, k, v, causal=False)
+    got = flash_attention(q, k, v, causal=False, block_q=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,Hq,Hkv,D,bk", [
+    (2, 256, 8, 2, 64, 64),
+    (3, 128, 4, 4, 32, 128),
+    (1, 512, 16, 8, 128, 256),
+])
+def test_decode_attention(dtype, B, S, Hq, Hkv, D, bk):
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    q = _rand(ks[0], (B, Hq, D), dtype)
+    k = _rand(ks[1], (B, S, Hkv, D), dtype)
+    v = _rand(ks[2], (B, S, Hkv, D), dtype)
+    kvlen = jax.random.randint(ks[3], (B,), 1, S + 1)
+    ref = decode_attention_ref(q, k, v, kvlen)
+    fb = _jnp_fallback(q, k, v, kvlen, sm_scale=1.0 / D ** 0.5)
+    pal = decode_attention_pallas(q, k, v, kvlen, block_k=bk,
+                                  interpret=True)
+    tol = TOL[dtype]
+    np.testing.assert_allclose(np.asarray(fb, np.float32),
+                               np.asarray(ref, np.float32), atol=tol,
+                               rtol=tol)
+    np.testing.assert_allclose(np.asarray(pal, np.float32),
+                               np.asarray(ref, np.float32), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("b,S,H,P,N,Q", [
+    (2, 64, 4, 16, 8, 16),
+    (1, 128, 2, 32, 16, 32),
+    (2, 96, 3, 8, 8, 32),
+])
+def test_ssd_scan(b, S, H, P, N, Q):
+    ks = jax.random.split(jax.random.PRNGKey(3), 6)
+    x = jax.random.normal(ks[0], (b, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S, H))) * 0.5
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, S, N)) * 0.5
+    C = jax.random.normal(ks[4], (b, S, N)) * 0.5
+    D = jax.random.normal(ks[5], (H,)) * 0.1
+    yr, sr = ssd_scan_ref(x, dt, A, B, C, D)
+    yc, sc = ssd_chunked(x, dt, A, B, C, D, Q)
+    yp, sp = ssd_scan_pallas(x, dt, A, B, C, D, chunk=Q, interpret=True)
+    np.testing.assert_allclose(np.asarray(yc), np.asarray(yr), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(yp), np.asarray(yr), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sc), np.asarray(sr), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sp), np.asarray(sr), atol=1e-4)
+
+
+def test_ssd_decode_step_consistency():
+    """scan(S) then one ssd_step == scan(S+1) exactly."""
+    b, S, H, P, N = 1, 32, 2, 8, 8
+    ks = jax.random.split(jax.random.PRNGKey(4), 6)
+    x = jax.random.normal(ks[0], (b, S + 1, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S + 1, H))) * 0.5
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, S + 1, N)) * 0.5
+    C = jax.random.normal(ks[4], (b, S + 1, N)) * 0.5
+    D = jax.random.normal(ks[5], (H,)) * 0.1
+    y_full, s_full = ssd_scan_ref(x, dt, A, B, C, D)
+    _, s_pre = ssd_scan_ref(x[:, :S], dt[:, :S], A, B[:, :S], C[:, :S], D)
+    y1, s1 = ssd_step(s_pre, x[:, S], dt[:, S], A, B[:, S], C[:, S], D)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y_full[:, S]),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s_full),
+                               atol=1e-5)
+
+
+def test_ssd_non_multiple_padding():
+    """ssd_scan pads S to a chunk multiple exactly (dt=0 padding)."""
+    b, S, H, P, N = 1, 25, 2, 8, 8
+    ks = jax.random.split(jax.random.PRNGKey(5), 6)
+    x = jax.random.normal(ks[0], (b, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, S, N)) * 0.5
+    C = jax.random.normal(ks[4], (b, S, N)) * 0.5
+    D = jax.random.normal(ks[5], (H,)) * 0.1
+    yr, sr = ssd_scan_ref(x, dt, A, B, C, D)
+    yo, so = ssd_scan(x, dt, A, B, C, D, chunk=16)
+    np.testing.assert_allclose(np.asarray(yo), np.asarray(yr), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(so), np.asarray(sr), atol=1e-4)
+
+
+@pytest.mark.parametrize("B,Hc,Wc,C", [(2, 7, 13, 32), (1, 4, 4, 16),
+                                       (3, 8, 8, 64)])
+def test_proxy_score(B, Hc, Wc, C):
+    ks = jax.random.split(jax.random.PRNGKey(6), 2)
+    feat = jax.random.normal(ks[0], (B, Hc, Wc, C))
+    w = jax.random.normal(ks[1], (C,))
+    sr, pr = proxy_score_ref(feat, w, 0.3, 0.5)
+    sp, pp = proxy_score_pallas(feat, w, 0.3, 0.5, block_m=32,
+                                interpret=True)
+    np.testing.assert_allclose(np.asarray(sp), np.asarray(sr), atol=1e-6)
+    assert (np.asarray(pp) == np.asarray(pr)).all()
+
+
+@pytest.mark.parametrize("wh,ww", [(64, 96), (32, 32), (96, 64)])
+def test_window_gather(wh, ww):
+    frame = jax.random.normal(jax.random.PRNGKey(7), (160, 256, 3))
+    oc = jnp.array([[0, 0], [1, 2], [2, 3]], jnp.int32)
+    max_cy = (160 - wh) // 32
+    max_cx = (256 - ww) // 32
+    oc = jnp.minimum(oc, jnp.array([max_cy, max_cx]))
+    ref = window_gather_ref(frame, oc * 32, win_h=wh, win_w=ww)
+    pal = window_gather_pallas(frame, oc, win_h=wh, win_w=ww,
+                               interpret=True)
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref))

@@ -1,0 +1,130 @@
+"""Hypothesis property tests over the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hungarian import hungarian, BIG
+from repro.core.windows import (SizeSet, detector_time_model, group_cells)
+from repro.core.refine import resample_track
+from repro.core.metrics import count_accuracy
+from repro.launch.hlo_stats import _parse_shape
+
+
+# ---------------------------------------------------------------------------
+# Hungarian invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 7), st.integers(1, 7), st.integers(0, 10 ** 6))
+def test_hungarian_is_valid_matching(n, m, seed):
+    rng = np.random.default_rng(seed)
+    cost = rng.random((n, m)) * 5
+    pairs = hungarian(cost)
+    assert len(pairs) == min(n, m)
+    assert len({r for r, _ in pairs}) == len(pairs)
+    assert len({c for _, c in pairs}) == len(pairs)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 10 ** 6))
+def test_hungarian_permutation_invariance(n, seed):
+    """Permuting rows permutes the assignment, same total cost."""
+    rng = np.random.default_rng(seed)
+    cost = rng.random((n, n)) * 5
+    perm = rng.permutation(n)
+    t1 = sum(cost[r, c] for r, c in hungarian(cost))
+    t2 = sum(cost[perm][r, c] for r, c in hungarian(cost[perm]))
+    assert abs(t1 - t2) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Window grouping invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 10 ** 6), st.floats(0.02, 0.5))
+def test_windows_cover_and_bounded(seed, density):
+    rng = np.random.default_rng(seed)
+    grid = (rng.random((8, 12)) < density).astype(np.int8)
+    tm = detector_time_model((12, 8), 1.0)
+    sizes = [(12, 8), (4, 4), (6, 4)]
+    ss = SizeSet(sizes, {s: tm(s) for s in sizes})
+    windows = group_cells(grid, ss, max_windows=6)
+    # 1. all windows inside the grid
+    for (x, y, (w, h)) in windows:
+        assert 0 <= x and x + w <= 12
+        assert 0 <= y and y + h <= 8
+        assert (w, h) in sizes
+    # 2. coverage
+    if grid.sum():
+        cover = np.zeros_like(grid)
+        for (x, y, (w, h)) in windows:
+            cover[y:y + h, x:x + w] = 1
+        assert (cover >= grid).all()
+        # 3. never slower than the full frame
+        assert ss.est(windows) <= ss.times[(12, 8)] + 1e-12
+    else:
+        assert windows == []
+
+
+# ---------------------------------------------------------------------------
+# Track resampling
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 30), st.integers(0, 10 ** 6))
+def test_resample_preserves_endpoints(n_pts, seed):
+    rng = np.random.default_rng(seed)
+    pts = np.cumsum(rng.standard_normal((n_pts, 2)) * 0.1, axis=0)
+    out = resample_track(pts, 20)
+    assert out.shape == (20, 2)
+    np.testing.assert_allclose(out[0], pts[0], atol=1e-9)
+    np.testing.assert_allclose(out[-1], pts[-1], atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Metrics
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 30), min_size=1, max_size=8))
+def test_count_accuracy_bounds_and_identity(gt):
+    gt = np.asarray(gt)
+    assert count_accuracy(gt, gt) == 1.0
+    pred = gt + 1
+    a = count_accuracy(pred, gt)
+    assert 0.0 <= a <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# HLO shape parsing
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(1, 64), min_size=0, max_size=4),
+       st.sampled_from(["f32", "bf16", "s32", "s8"]))
+def test_parse_shape_bytes(dims, dtype):
+    bytes_per = {"f32": 4, "bf16": 2, "s32": 4, "s8": 1}[dtype]
+    text = f"{dtype}[{','.join(map(str, dims))}]"
+    total, parsed = _parse_shape(text)
+    expect = int(np.prod(dims)) * bytes_per if dims else bytes_per
+    assert total == expect
+    assert parsed == list(dims)
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline determinism/skippability
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000), st.integers(1, 4))
+def test_token_pipeline_skippable(step, n_shards):
+    from repro.data.tokens import TokenPipeline
+    pipe = TokenPipeline(vocab_size=128, batch=8, seq_len=16, seed=3)
+    a = pipe.batch_at(step)
+    b = pipe.batch_at(step)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    if 8 % n_shards == 0:
+        rows = [pipe.batch_at(step, s, n_shards)["tokens"]
+                for s in range(n_shards)]
+        # shards are disjoint rows of a deterministic global batch
+        assert all(r.shape == (8 // n_shards, 16) for r in rows)
