@@ -1,0 +1,141 @@
+"""Pipeline engine benchmark: per-frame reference vs chunked engine.
+
+Measures frames/sec of both execution paths on the synthetic workload
+(proxy enabled, recurrent tracker, gap=1) and emits a machine-readable
+``BENCH_pipeline.json`` so future PRs have a perf trajectory to regress
+against.  Timing uses ``RunResult.seconds`` — process time plus the
+charged decode ledger — i.e. the same number the tuner optimizes.
+
+    PYTHONPATH=src python -m benchmarks.pipeline_bench
+
+Runs are interleaved and the median is reported (this container's
+process scheduling is noisy); equivalence of extracted tracks between
+the two engines is asserted on every rep.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+DEFAULT_OUT = "BENCH_pipeline.json"
+
+
+def build_workload(n_clips: int = 4, n_frames: int = 48,
+                   train_steps: int = 150):
+    from repro.configs.multiscope import MULTISCOPE_PIPELINE
+    from repro.core import pipeline as pl
+    from repro.core.proxy import ProxyModel
+    from repro.core.tracker import init_tracker
+    from repro.core.train_models import train_detector
+    from repro.data.video_synth import make_split
+
+    cfg = MULTISCOPE_PIPELINE.reduced()
+    clips = make_split("caldot1", "train", n_clips, n_frames=n_frames)
+    det, _ = train_detector("ssd-lite", clips[:2],
+                            [cfg.detector.resolutions[-1]],
+                            steps=train_steps)
+    bank = pl.ModelBank(cfg, {"ssd-lite": det, "ssd-deep": det})
+    res = cfg.proxy.resolutions[-1]
+    proxy = ProxyModel(cfg.proxy.cell, cfg.proxy.base_channels, res)
+    bank.proxies = {res: proxy}
+    bank.sizes_cells = [pl.det_grid(cfg.detector.resolutions[-1]),
+                        (3, 2), (5, 3)]
+    bank.ref_grid = pl.det_grid(cfg.detector.resolutions[-1])
+    bank.tracker_params = init_tracker(cfg.tracker)
+    # calibrate the proxy threshold to the untrained proxy's score
+    # distribution so the plan mixes sub-frame windows and full frames
+    # (the MultiScope operating point)
+    W, H = cfg.detector.resolutions[-1]
+    frame, _ = pl.render_frame(clips[0], 0, W, H)
+    s, _ = proxy.scores(pl._downsample(frame, res))
+    threshold = float(np.quantile(s, 0.85))
+    params = pl.PipelineParams(
+        "ssd-lite", cfg.detector.resolutions[-1], 0.55, gap=1,
+        proxy_res=res, proxy_threshold=threshold, tracker="recurrent",
+        refine=False)
+    return bank, params, clips
+
+
+def run(out_path: str = DEFAULT_OUT, reps: int = 7) -> dict:
+    from repro.core import pipeline as pl
+    from repro.core.detector import detect_jit_entries
+    from repro.core.engine import DEFAULT_CHUNK, run_clip_chunked
+
+    bank, params, clips = build_workload()
+
+    def sweep():
+        """One paired rep: per clip, run BOTH engines back to back so
+        each pair sees the same machine conditions (this container's
+        scheduling is noisy; pairing cancels the drift)."""
+        sa = sb = frames = 0.0
+        same = True
+        for clip in clips:
+            ra = pl.run_clip_frames(bank, params, clip)
+            rb = run_clip_chunked(bank, params, clip)
+            sa += ra.seconds
+            sb += rb.seconds
+            frames += ra.frames_processed
+            same &= len(ra.tracks) == len(rb.tracks) and all(
+                np.array_equal(x, y)
+                for x, y in zip(ra.tracks, rb.tracks))
+        return frames / sa, frames / sb, same
+
+    # warm: jit compiles + render cache for both paths
+    sweep()
+    entries_warm = detect_jit_entries()
+
+    fps_frame, fps_chunk = [], []
+    identical = True
+    for _ in range(reps):
+        fa, fb, same = sweep()
+        fps_frame.append(fa)
+        fps_chunk.append(fb)
+        identical &= same
+
+    ratios = [b / a for a, b in zip(fps_frame, fps_chunk)]
+
+    result = {
+        "benchmark": "pipeline_engine",
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "workload": {
+            "profile": "caldot1", "clips": len(clips),
+            "frames_per_clip": int(clips[0].n_frames),
+            "params": params.describe(), "chunk_size": DEFAULT_CHUNK,
+            "reps": reps,
+        },
+        "fps_per_frame": float(np.median(fps_frame)),
+        "fps_chunked": float(np.median(fps_chunk)),
+        "fps_per_frame_all": [round(f, 2) for f in fps_frame],
+        "fps_chunked_all": [round(f, 2) for f in fps_chunk],
+        "speedup": float(np.median(ratios)),
+        "speedup_all": [round(r, 3) for r in ratios],
+        "tracks_identical": bool(identical),
+        "detector_jit_entries": detect_jit_entries(),
+        "jit_entries_grew_after_warmup":
+            detect_jit_entries() != entries_warm,
+    }
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    assert identical, \
+        "chunked engine diverged from the per-frame path (see " \
+        + out_path + ")"
+    return result
+
+
+def main(out_path: str = DEFAULT_OUT) -> None:
+    r = run(out_path)
+    print(f"per-frame engine : {r['fps_per_frame']:8.1f} frames/sec")
+    print(f"chunked engine   : {r['fps_chunked']:8.1f} frames/sec")
+    print(f"speedup          : {r['speedup']:8.2f}x")
+    print(f"tracks identical : {r['tracks_identical']}")
+    print(f"detector jit entries: {r['detector_jit_entries']}"
+          f" (stable after warmup: "
+          f"{not r['jit_entries_grew_after_warmup']})")
+    print(f"wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

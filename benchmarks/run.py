@@ -22,6 +22,12 @@ def bench_kernels() -> None:
     kernels.main()
 
 
+def bench_pipeline() -> None:
+    print("\n== pipeline engine (per-frame vs chunked) ==")
+    from benchmarks import pipeline_bench
+    pipeline_bench.main()
+
+
 def bench_roofline() -> None:
     print("\n== roofline (from dry-run artifacts) ==")
     from benchmarks import roofline
@@ -55,6 +61,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
     bench_kernels()
+    bench_pipeline()
     bench_roofline()
     bench_paper(args.full)
 

@@ -3,8 +3,12 @@
 Public API:
     tuner.setup / tuner.tune     — Figure 1 workflow (train + θ_best +
                                    greedy joint tuning)
-    pipeline.run_clip            — execute one configuration θ
+    pipeline.run_clip            — execute one configuration θ (staged
+                                   chunked engine; engine="frame" for the
+                                   per-frame reference path)
+    engine.run_clip_chunked      — the chunked engine entry point
     experiment.run_dataset       — the §4 evaluation protocol
     baselines                    — Chameleon / BlazeIt / Miris
 """
-from repro.core.pipeline import ModelBank, PipelineParams, run_clip  # noqa: F401
+from repro.core.pipeline import (ModelBank, PipelineParams,  # noqa: F401
+                                 run_clip, run_clip_frames)

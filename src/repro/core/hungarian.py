@@ -17,42 +17,68 @@ from typing import List, Tuple
 
 import numpy as np
 
+try:                                    # already in the image; optional
+    from scipy.optimize import linear_sum_assignment as _lsa
+except ImportError:                     # pragma: no cover
+    _lsa = None
+
 BIG = 1e9
 
 
 def hungarian(cost: np.ndarray) -> List[Tuple[int, int]]:
     """cost: (n, m) -> list of (row, col) matched pairs (only real pairs;
-    entries with cost >= BIG/2 are treated as forbidden)."""
+    entries with cost >= BIG/2 are treated as forbidden).
+
+    Dispatches to scipy's C implementation when available (it ships in
+    the container); ``_hungarian_np`` is the dependency-free fallback.
+    Both return a min-cost assignment — tie-breaking between equal-cost
+    optima may differ, totals never do."""
     n, m = cost.shape
     if n == 0 or m == 0:
         return []
-    size = max(n, m)
-    a = np.full((size + 1, size + 1), BIG, np.float64)
-    a[1:n + 1, 1:m + 1] = cost
-    u = np.zeros(size + 1)
-    v = np.zeros(size + 1)
-    p = np.zeros(size + 1, np.int64)      # p[j] = row matched to col j
-    way = np.zeros(size + 1, np.int64)
-    for i in range(1, size + 1):
+    if _lsa is not None:
+        rows, cols = _lsa(cost)
+        return [(int(r), int(c)) for r, c in zip(rows, cols)
+                if cost[r, c] < BIG / 2]
+    return _hungarian_np(cost)
+
+
+def _hungarian_np(cost: np.ndarray) -> List[Tuple[int, int]]:
+    """Pure-numpy Jonker-Volgenant: rectangular matrices are solved
+    directly with rows = the SHORT side (transposing when n > m), so a
+    few detections against max_tracks tracks runs min(n, m) augmenting
+    paths instead of max(n, m)."""
+    n, m = cost.shape
+    if n == 0 or m == 0:
+        return []
+    if n > m:
+        return sorted((r, c) for c, r in _hungarian_np(cost.T))
+    a = np.full((n + 1, m + 1), BIG, np.float64)
+    a[1:, 1:] = cost
+    u = np.zeros(n + 1)
+    v = np.zeros(m + 1)
+    p = np.zeros(m + 1, np.int64)         # p[j] = row matched to col j
+    way = np.zeros(m + 1, np.int64)
+    for i in range(1, n + 1):
         p[0] = i
         j0 = 0
-        minv = np.full(size + 1, np.inf)
-        used = np.zeros(size + 1, bool)
+        minv = np.full(m + 1, np.inf)
+        used = np.zeros(m + 1, bool)
         while True:
             used[j0] = True
             i0 = p[j0]
-            delta = np.inf
-            j1 = -1
             cur = a[i0, 1:] - u[i0] - v[1:]
-            for j in range(1, size + 1):
-                if used[j]:
-                    continue
-                if cur[j - 1] < minv[j]:
-                    minv[j] = cur[j - 1]
-                    way[j] = j0
-                if minv[j] < delta:
-                    delta = minv[j]
-                    j1 = j
+            # vectorized column scan: update minv/way over unused columns
+            # and pick the argmin (first index on ties, matching the
+            # scalar loop this replaces — it dominated association cost
+            # at max_tracks=64)
+            free = ~used[1:]
+            take = free & (cur < minv[1:])
+            minv[1:][take] = cur[take]
+            way[1:][take] = j0
+            masked = np.where(free, minv[1:], np.inf)
+            j1 = int(np.argmin(masked)) + 1
+            delta = masked[j1 - 1]
             u[p[used]] += delta
             v[np.flatnonzero(used)] -= delta
             minv[~used] -= delta
@@ -64,9 +90,9 @@ def hungarian(cost: np.ndarray) -> List[Tuple[int, int]]:
             p[j0] = p[j1]
             j0 = j1
     pairs = []
-    for j in range(1, size + 1):
+    for j in range(1, m + 1):
         i = int(p[j])
-        if 1 <= i <= n and 1 <= j <= m and cost[i - 1, j - 1] < BIG / 2:
+        if i >= 1 and cost[i - 1, j - 1] < BIG / 2:
             pairs.append((i - 1, j - 1))
     return pairs
 

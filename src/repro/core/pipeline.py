@@ -6,24 +6,39 @@ executes θ over a clip, measures real wall time (decode/render cost scales
 with detector resolution, matching the paper's ffmpeg observation), and
 returns extracted tracks.
 
+Execution engines: ``run_clip`` dispatches to the staged CHUNKED engine
+(``repro.core.engine``) by default — frames are decoded and proxy-scored
+in chunks of B frames per dispatch, windows are planned for the whole
+chunk on the host, the detector runs on cross-frame batches grouped by
+size class (batch counts padded to power-of-two buckets so jit
+specializations stay one per (arch, size class, bucket)), and detections
+feed the tracker in frame order with candidate embeddings batched per
+chunk.  ``run_clip_frames`` keeps the strictly per-frame reference path;
+both produce identical tracks (asserted by tests/test_engine.py) and the
+same decode-cost ledger / ``RunResult`` counters.
+
 Cell grid convention: the canonical positive-cell grid is the DETECTOR
 resolution divided by ``cell_px`` (16 in the reduced pipeline, 32 at full
 scale).  Proxy models run at their own lower resolution; their cell grids
 are mapped onto the detector grid with max-pooling semantics (a detector
 cell is positive if ANY overlapping proxy cell is positive).  The fixed
 window-size set S is selected once in cell units at a reference detector
-resolution and rescaled fractionally to others.
+resolution and rescaled fractionally to others.  Window crops are block
+DMAs through the ``window_gather`` Pallas kernel (vmapped dynamic_slice
+off-TPU), never host-side slice loops.
 """
 from __future__ import annotations
 
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.configs.multiscope import PipelineConfig
-from repro.core.detector import Detector, nms
+from repro.core.detector import Detector, next_bucket, nms
+from repro.kernels.window_gather import window_gather
 from repro.core.proxy import ProxyModel
 from repro.core.refine import TrackRefiner
 from repro.core.sort import SortTracker
@@ -33,12 +48,13 @@ from repro.data.video_synth import Clip
 
 CELL_PX = 16      # detector-grid cell edge at detector resolution (px)
 
-# bounded render cache: the tuner re-evaluates the same validation frames
-# under many configurations; decode cost must still be CHARGED per run
-# (the paper's decode-at-detector-resolution cost), so every call returns
-# (frame, decode_seconds) and run_clip adds the charged cost to its timing
-# ledger whether or not the pixels came from cache.
-_RENDER_CACHE: Dict[Tuple, Tuple[np.ndarray, float]] = {}
+# bounded LRU render cache: the tuner re-evaluates the same validation
+# frames under many configurations; decode cost must still be CHARGED per
+# run (the paper's decode-at-detector-resolution cost), so every call
+# returns (frame, decode_seconds) and run_clip adds the charged cost to
+# its timing ledger whether or not the pixels came from cache.
+_RENDER_CACHE: "OrderedDict[Tuple, Tuple[np.ndarray, float]]" = \
+    OrderedDict()
 _RENDER_CACHE_MAX = 4096
 
 
@@ -48,12 +64,14 @@ def render_frame(clip: "Clip", f: int, W: int, H: int
     key = (clip.profile.name, clip.split, clip.clip_id, f, W, H)
     hit = _RENDER_CACHE.get(key)
     if hit is not None:
+        _RENDER_CACHE.move_to_end(key)
         return hit
     t0 = time.process_time()
     frame = clip.render(f, W, H)
     cost = time.process_time() - t0
-    if len(_RENDER_CACHE) < _RENDER_CACHE_MAX:
-        _RENDER_CACHE[key] = (frame, cost)
+    _RENDER_CACHE[key] = (frame, cost)
+    if len(_RENDER_CACHE) > _RENDER_CACHE_MAX:
+        _RENDER_CACHE.popitem(last=False)
     return frame, cost
 
 
@@ -97,20 +115,24 @@ def det_grid(res: Tuple[int, int]) -> Tuple[int, int]:
 
 
 def map_proxy_grid(pos: np.ndarray, grid: Tuple[int, int]) -> np.ndarray:
-    """(hp, wp) proxy grid -> (hc, wc) detector grid, max-pool semantics."""
+    """(hp, wp) proxy grid -> (hc, wc) detector grid, max-pool semantics.
+
+    A detector cell (i, j) is positive iff ANY proxy cell in the
+    (possibly overlapping) source span [ys_i, ye_i) x [xs_j, xe_j) is.
+    Vectorized with a 2D integral image: span-any == span-count > 0."""
     wc, hc = grid
     hp, wp = pos.shape
-    out = np.zeros((hc, wc), np.int8)
     ys = np.minimum((np.arange(hc) * hp) // hc, hp - 1)
     ye = np.minimum(((np.arange(hc) + 1) * hp + hp - 1) // hc, hp)
+    ye = np.maximum(ye, ys + 1)
     xs = np.minimum((np.arange(wc) * wp) // wc, wp - 1)
     xe = np.minimum(((np.arange(wc) + 1) * wp + wp - 1) // wc, wp)
-    for i in range(hc):
-        row = pos[ys[i]:max(ye[i], ys[i] + 1)]
-        for j in range(wc):
-            if row[:, xs[j]:max(xe[j], xs[j] + 1)].any():
-                out[i, j] = 1
-    return out
+    xe = np.maximum(xe, xs + 1)
+    acc = np.zeros((hp + 1, wp + 1), np.int64)
+    acc[1:, 1:] = np.cumsum(np.cumsum(pos != 0, axis=0), axis=1)
+    cnt = acc[ye[:, None], xe[None, :]] - acc[ys[:, None], xe[None, :]] \
+        - acc[ye[:, None], xs[None, :]] + acc[ys[:, None], xs[None, :]]
+    return (cnt > 0).astype(np.int8)
 
 
 def scale_sizes(sizes_cells: Sequence[Tuple[int, int]],
@@ -159,12 +181,29 @@ def make_sizeset(bank: ModelBank, params: PipelineParams) -> SizeSet:
     return SizeSet(sizes, times)
 
 
+def _downsample_indices(shape_hw: Tuple[int, int], res: Tuple[int, int]
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """Nearest-neighbor (ys, xs) index vectors — the ONE formula both
+    the per-frame and chunked proxy paths must share (the engines' track
+    bit-identity depends on it)."""
+    W, H = res
+    ys = (np.arange(H) * shape_hw[0]) // H
+    xs = (np.arange(W) * shape_hw[1]) // W
+    return ys, xs
+
+
 def _downsample(frame: np.ndarray, res: Tuple[int, int]) -> np.ndarray:
     """Nearest-neighbor resize (host-side, cheap)."""
-    W, H = res
-    ys = (np.arange(H) * frame.shape[0]) // H
-    xs = (np.arange(W) * frame.shape[1]) // W
+    ys, xs = _downsample_indices(frame.shape[:2], res)
     return frame[np.ix_(ys, xs)]
+
+
+def downsample_chunk(frames: np.ndarray, res: Tuple[int, int]
+                     ) -> np.ndarray:
+    """Batched ``_downsample``: (B, H, W, 3) -> (B, h, w, 3) in one
+    gather, identical per-frame values."""
+    ys, xs = _downsample_indices(frames.shape[1:3], res)
+    return frames[:, ys[:, None], xs[None, :]]
 
 
 @dataclass
@@ -197,7 +236,9 @@ def detect_with_windows(bank: ModelBank, params: PipelineParams,
     if len(windows) == 1 and windows[0][2] == full:
         dets = detector.detect_batch(frame[None], params.det_conf)[0]
         return dets, windows
-    # batch windows by size class (the paper's fixed-size batching)
+    # batch windows by size class (the paper's fixed-size batching);
+    # crops are block gathers through the window_gather kernel, with the
+    # batch dim bucket-padded so jit stays one entry per (size, bucket)
     by_size: Dict[Tuple[int, int], List[Window]] = {}
     for wdw in windows:
         by_size.setdefault(wdw[2], []).append(wdw)
@@ -205,23 +246,43 @@ def detect_with_windows(bank: ModelBank, params: PipelineParams,
     W, H = params.det_res
     for size, wins in by_size.items():
         pw, ph = size[0] * CELL_PX, size[1] * CELL_PX
-        crops = np.stack([
-            frame[y * CELL_PX:y * CELL_PX + ph,
-                  x * CELL_PX:x * CELL_PX + pw]
-            for (x, y, _) in wins])
+        n = len(wins)
+        tbl = np.zeros((next_bucket(n), 2), np.int32)
+        for k, (x, y, _) in enumerate(wins):
+            tbl[k] = (y, x)
+        crops = window_gather(frame, tbl, win_h=ph, win_w=pw,
+                              cell=CELL_PX)
         origins = [(x * CELL_PX / W, y * CELL_PX / H)
                    for (x, y, _) in wins]
-        scales = [(pw / W, ph / H)] * len(wins)
+        scales = [(pw / W, ph / H)] * n
+        # crops stay device-side; detect_batch accepts them directly
         dets = detector.detect_batch(crops, params.det_conf,
-                                     origins=origins, scales=scales)
+                                     origins=origins, scales=scales,
+                                     n_valid=n)
         all_dets.extend(dets)
     merged = np.concatenate(all_dets) if all_dets else \
         np.zeros((0, 5), np.float32)
     return nms(merged), windows
 
 
-def run_clip(bank: ModelBank, params: PipelineParams, clip: Clip
-             ) -> RunResult:
+def run_clip(bank: ModelBank, params: PipelineParams, clip: Clip,
+             engine: str = "chunked") -> RunResult:
+    """Execute θ over a clip.  engine: "chunked" (default — the staged
+    cross-frame engine in repro.core.engine) or "frame" (the per-frame
+    reference path); both produce identical tracks and counters."""
+    if engine == "chunked":
+        from repro.core.engine import run_clip_chunked
+        return run_clip_chunked(bank, params, clip)
+    if engine != "frame":
+        raise ValueError(f"unknown engine {engine!r} "
+                         "(expected 'chunked' or 'frame')")
+    return run_clip_frames(bank, params, clip)
+
+
+def run_clip_frames(bank: ModelBank, params: PipelineParams, clip: Clip
+                    ) -> RunResult:
+    """The strictly per-frame reference path: one proxy dispatch and one
+    detector dispatch per size class PER FRAME."""
     cfg = bank.cfg
     W, H = params.det_res
     proxy = bank.proxies.get(params.proxy_res) \
@@ -256,6 +317,7 @@ def run_clip(bank: ModelBank, params: PipelineParams, clip: Clip
 
 
 def run_split(bank: ModelBank, params: PipelineParams,
-              clips: Sequence[Clip]) -> Tuple[List[RunResult], float]:
-    results = [run_clip(bank, params, c) for c in clips]
+              clips: Sequence[Clip], engine: str = "chunked"
+              ) -> Tuple[List[RunResult], float]:
+    results = [run_clip(bank, params, c, engine=engine) for c in clips]
     return results, sum(r.seconds for r in results)

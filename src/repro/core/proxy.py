@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.detector import _apply_conv, _conv
+from repro.core.detector import _apply_conv, _conv, pad_to_bucket
 from repro.kernels.proxy_score import proxy_score
 from repro.models.common import ParamBuilder, build
 
@@ -118,3 +118,18 @@ class ProxyModel:
         s, p = proxy_scores(self.params, jnp.asarray(frame[None]),
                             self.cell, threshold)
         return np.asarray(s[0]), np.asarray(p[0])
+
+    def scores_batch(self, frames: np.ndarray, threshold: float = 0.5
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """Score a CHUNK of frames in one dispatch.  frames: (B, H, W, 3)
+        -> ((B, Hc, Wc) scores, (B, Hc, Wc) int8 positives).  The batch
+        dim is zero-padded to a power-of-two bucket so jit
+        specializations stay bounded; padding rows are dropped."""
+        n = int(frames.shape[0])
+        if n == 0:
+            hc, wc = self.grid_shape()
+            return (np.zeros((0, hc, wc), np.float32),
+                    np.zeros((0, hc, wc), np.int8))
+        s, p = proxy_scores(self.params, jnp.asarray(
+            pad_to_bucket(frames)), self.cell, threshold)
+        return np.asarray(s[:n]), np.asarray(p[:n])

@@ -56,11 +56,12 @@ class SortTracker:
         self._next_id = 0
 
     def step(self, frame: int, dets: np.ndarray,
-             pixels: Optional[np.ndarray] = None) -> None:
-        """dets: (n, >=4) [cx, cy, w, h, ...] world units.  ``pixels`` is
-        accepted (and ignored) for interface parity with the recurrent
-        tracker."""
-        del pixels
+             pixels: Optional[np.ndarray] = None,
+             det_embeds: Optional[np.ndarray] = None) -> None:
+        """dets: (n, >=4) [cx, cy, w, h, ...] world units.  ``pixels``
+        and ``det_embeds`` are accepted (and ignored) for interface
+        parity with the recurrent tracker."""
+        del pixels, det_embeds
         preds = np.stack([t.predict(frame) for t in self.active]) \
             if self.active else np.zeros((0, 4), np.float32)
         iou = iou_matrix(preds, dets[:, :4]) if len(dets) else \

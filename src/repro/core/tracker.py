@@ -91,13 +91,23 @@ def _conv(x, w, b, stride):
 
 
 @jax.jit
-def embed_dets(params, crops, boxes, t_elapsed):
-    """crops: (N, C, C, 3); boxes: (N, 4); t_elapsed: (N,) -> (N, e)."""
+def crop_embed(params, crops):
+    """crops: (N, C, C, 3) -> (N, e) crop-CNN features.
+
+    The te-INDEPENDENT part of the detection embedding: inference
+    computes it once per detection (batched per chunk by the engine) and
+    derives every te-dependent embedding from it host-side."""
     p = params["crop_cnn"]
     x = _conv(crops, p["w0"], p["b0"], 2)
     x = _conv(x, p["w1"], p["b1"], 2)
     x = x.reshape(x.shape[0], -1)
-    x = jnp.tanh(x @ p["wd"] + p["bd"])
+    return jnp.tanh(x @ p["wd"] + p["bd"])
+
+
+@jax.jit
+def embed_dets(params, crops, boxes, t_elapsed):
+    """crops: (N, C, C, 3); boxes: (N, 4); t_elapsed: (N,) -> (N, e)."""
+    x = crop_embed(params, crops)
     te = t_elapsed.astype(jnp.float32)
     extra = jnp.stack([boxes[:, 0], boxes[:, 1], boxes[:, 2], boxes[:, 3],
                        te / 8.0, jnp.log1p(te)], axis=1)
@@ -196,13 +206,25 @@ def _train_loss(params, crops, boxes, te, prefix_mask, cand_mask, labels,
 def extract_crop(frame: np.ndarray, box: np.ndarray, crop: int
                  ) -> np.ndarray:
     """Nearest-neighbor resample of the box region to (crop, crop, 3)."""
+    return extract_crops(frame, np.asarray(box)[None], crop)[0]
+
+
+def extract_crops(frame: np.ndarray, boxes: np.ndarray, crop: int
+                  ) -> np.ndarray:
+    """Batched ``extract_crop``: (n, >=4) boxes -> (n, crop, crop, 3),
+    one vectorized gather per frame instead of one per detection."""
     H, W = frame.shape[:2]
-    cx, cy, w, h = box[:4]
-    x0, x1 = (cx - w / 2) * W, (cx + w / 2) * W
-    y0, y1 = (cy - h / 2) * H, (cy + h / 2) * H
-    xs = np.clip(np.linspace(x0, x1, crop).astype(np.int64), 0, W - 1)
-    ys = np.clip(np.linspace(y0, y1, crop).astype(np.int64), 0, H - 1)
-    return frame[np.ix_(ys, xs)]
+    n = len(boxes)
+    if n == 0:
+        return np.zeros((0, crop, crop, 3), frame.dtype)
+    b = np.asarray(boxes)[:, :4]
+    x0, x1 = (b[:, 0] - b[:, 2] / 2) * W, (b[:, 0] + b[:, 2] / 2) * W
+    y0, y1 = (b[:, 1] - b[:, 3] / 2) * H, (b[:, 1] + b[:, 3] / 2) * H
+    xs = np.clip(np.linspace(x0, x1, crop, axis=1).astype(np.int64),
+                 0, W - 1)
+    ys = np.clip(np.linspace(y0, y1, crop, axis=1).astype(np.int64),
+                 0, H - 1)
+    return frame[ys[:, :, None], xs[:, None, :]]
 
 
 # ---------------------------------------------------------------------------
@@ -358,13 +380,35 @@ def _pad(n: int, mult: int = 8) -> int:
     return max(mult, ((n + mult - 1) // mult) * mult)
 
 
+def _host_params(params) -> Dict[str, np.ndarray]:
+    """One-time numpy copies of the SMALL heads (det_proj, gru, match).
+
+    Inference runs these host-side: per-frame work is a handful of tiny
+    matmuls on <= max_tracks rows, where jit dispatch + device_put costs
+    orders of magnitude more than the math.  The crop CNN (the only real
+    compute) stays on the accelerator via ``crop_embed``."""
+    out = {}
+    for scope in ("det_proj", "gru", "match"):
+        for k, v in params[scope].items():
+            out[f"{scope}/{k}"] = np.asarray(v)
+    return out
+
+
 class RecurrentTracker:
-    """Online inference: incremental GRU states + Hungarian matching."""
+    """Online inference: incremental GRU states + Hungarian matching.
+
+    Split execution: the crop CNN (``crop_embed``) runs batched on the
+    accelerator — once per chunk under the chunked engine, once per frame
+    on the reference path — while the te-dependent projection, GRU steps
+    and the matching MLP run host-side in numpy (same host/accelerator
+    split as Hungarian itself).  Both engines call the same code, so
+    their tracks are bit-identical."""
 
     def __init__(self, cfg: TrackerConfig, params, max_misses: int = 2,
                  min_hits: int = 2):
         self.cfg = cfg
         self.params = params
+        self.np_params = _host_params(params)
         self.max_misses = max_misses
         self.min_hits = min_hits
         self.active: List[_ActiveTrack] = []
@@ -372,48 +416,84 @@ class RecurrentTracker:
         self._next_id = 0
         self._last_frame: Optional[int] = None
 
+    # -- host-side heads (numpy twins of embed_dets / gru_step /
+    #    match_logits, minus the crop CNN) --------------------------------
+
+    def _det_feats_np(self, x: np.ndarray, boxes: np.ndarray,
+                      te: np.ndarray) -> np.ndarray:
+        """x: (N, e) crop embeddings -> (N, e) detection features."""
+        p = self.np_params
+        extra = np.stack([boxes[:, 0], boxes[:, 1], boxes[:, 2],
+                          boxes[:, 3], te / 8.0, np.log1p(te)],
+                         axis=1).astype(np.float32)
+        d = np.concatenate([x, extra], axis=1)
+        return np.tanh(d @ p["det_proj/w"] + p["det_proj/b"])
+
+    def _gru_np(self, h: np.ndarray, feat: np.ndarray) -> np.ndarray:
+        p = self.np_params
+        hf = np.concatenate([feat, h], axis=-1)
+        z = 1.0 / (1.0 + np.exp(-(hf @ p["gru/wz"] + p["gru/bz"])))
+        r = 1.0 / (1.0 + np.exp(-(hf @ p["gru/wr"] + p["gru/br"])))
+        hf2 = np.concatenate([feat, r * h], axis=-1)
+        cand = np.tanh(hf2 @ p["gru/wh"] + p["gru/bh"])
+        return ((1 - z) * h + z * cand).astype(np.float32)
+
+    def _match_np(self, hs: np.ndarray, tboxes: np.ndarray,
+                  feats: np.ndarray, dboxes: np.ndarray,
+                  te: np.ndarray) -> np.ndarray:
+        p = self.np_params
+        T, N = hs.shape[0], feats.shape[0]
+        d = dboxes[None, :, :] - tboxes[:, None, :]
+        tesafe = np.maximum(te, 1.0)[None, :, None]
+        rel = np.concatenate([d[..., :2], d[..., :2] / tesafe,
+                              d[..., 2:]], axis=-1)
+        pair = np.concatenate([
+            np.broadcast_to(hs[:, None], (T, N, hs.shape[1])),
+            np.broadcast_to(feats[None], (T, N, feats.shape[1])),
+            rel,
+        ], axis=-1)
+        hid = np.tanh(pair @ p["match/w0"] + p["match/b0"])
+        return (hid @ p["match/w1"] + p["match/b1"])[..., 0]
+
     def step(self, frame_idx: int, dets: np.ndarray,
-             frame: np.ndarray) -> None:
-        """dets: (n, >=4) world-unit detections; frame: rendered pixels."""
+             frame: np.ndarray,
+             det_embeds: Optional[np.ndarray] = None) -> None:
+        """dets: (n, >=4) world-unit detections; frame: rendered pixels.
+
+        det_embeds: optional precomputed (n, embed_dim) CROP embeddings
+        (``crop_embed`` outputs — one accelerator dispatch per CHUNK
+        instead of per frame); te-dependent features are derived from
+        them host-side, so the same embeddings serve both the matching
+        candidates and the GRU updates."""
         cfg = self.cfg
         n = len(dets)
         te_scalar = 0.0 if self._last_frame is None else \
             float(frame_idx - self._last_frame)
         self._last_frame = frame_idx
-        if n > 0:
-            C = cfg.crop
-            crops = np.stack([extract_crop(frame, d, C) for d in dets])
+        C = cfg.crop
+        if det_embeds is not None:
+            x = det_embeds
+        elif n > 0:
+            crops = extract_crops(frame, dets, C)
             npad = _pad(n)
             crops_p = np.zeros((npad, C, C, 3), np.float32)
             crops_p[:n] = crops
-            boxes_p = np.zeros((npad, 4), np.float32)
-            boxes_p[:n] = dets[:, :4]
-            te_p = np.full((npad,), te_scalar, np.float32)
-            feats = np.asarray(embed_dets(
-                self.params, jnp.asarray(crops_p), jnp.asarray(boxes_p),
-                jnp.asarray(te_p)))[:n]
+            x = np.asarray(crop_embed(self.params,
+                                      jnp.asarray(crops_p)))[:n]
         else:
-            feats = np.zeros((0, cfg.embed_dim), np.float32)
+            x = np.zeros((0, cfg.embed_dim), np.float32)
+        boxes = dets[:, :4].astype(np.float32) if n > 0 else \
+            np.zeros((0, 4), np.float32)
+        feats = self._det_feats_np(
+            x, boxes, np.full((n,), te_scalar, np.float32))
 
         T = len(self.active)
         pairs = []
         if T > 0 and n > 0:
-            tpad = _pad(T)
-            hs = np.zeros((tpad, cfg.rnn_dim), np.float32)
-            tboxes = np.zeros((tpad, 4), np.float32)
-            for i, t in enumerate(self.active):
-                hs[i] = t.h
-                tboxes[i] = t.boxes[-1]
-            npad = _pad(n)
-            fpad = np.zeros((npad, feats.shape[1]), np.float32)
-            fpad[:n] = feats
-            dboxes = np.zeros((npad, 4), np.float32)
-            dboxes[:n] = dets[:, :4]
-            te_arr = np.full((npad,), max(te_scalar, 1.0), np.float32)
-            logits = np.asarray(match_logits(
-                self.params, jnp.asarray(hs), jnp.asarray(tboxes),
-                jnp.asarray(fpad), jnp.asarray(dboxes),
-                jnp.asarray(te_arr)))[:T, :n]
+            hs = np.stack([t.h for t in self.active])
+            tboxes = np.stack([t.boxes[-1] for t in self.active])
+            te_arr = np.full((n,), max(te_scalar, 1.0), np.float32)
+            logits = self._match_np(hs, tboxes, feats, boxes, te_arr)
             probs = 1.0 / (1.0 + np.exp(-logits))
             cost = np.where(probs >= cfg.match_threshold, 1.0 - probs,
                             BIG)
@@ -432,29 +512,6 @@ class RecurrentTracker:
             t.misses = 0
             matched_t.add(ti)
             matched_d.add(di)
-        if upd_tracks:
-            C = cfg.crop
-            idxs = [di for di, _ in upd_feats]
-            gaps = np.asarray([g for _, g in upd_feats], np.float32)
-            m = len(upd_tracks)
-            mpad = _pad(m)
-            crops_u = np.zeros((mpad, C, C, 3), np.float32)
-            boxes_u = np.zeros((mpad, 4), np.float32)
-            te_u = np.zeros((mpad,), np.float32)
-            for k, di in enumerate(idxs):
-                crops_u[k] = extract_crop(frame, dets[di], C)
-                boxes_u[k] = dets[di, :4]
-                te_u[k] = gaps[k]
-            f_u = embed_dets(self.params, jnp.asarray(crops_u),
-                             jnp.asarray(boxes_u), jnp.asarray(te_u))
-            hs = np.stack([t.h for t in upd_tracks])
-            hs_p = np.zeros((mpad, self.cfg.rnn_dim), np.float32)
-            hs_p[:m] = hs
-            new_h = np.asarray(gru_step(self.params, jnp.asarray(hs_p),
-                                        f_u))[:m]
-            for k, t in enumerate(upd_tracks):
-                t.h = new_h[k]
-
         # age out unmatched
         survivors = []
         for ti, t in enumerate(self.active):
@@ -468,26 +525,26 @@ class RecurrentTracker:
                 survivors.append(t)
         self.active = survivors
 
-        # new tracks
+        # GRU advance: matched-track updates (t_elapsed = within-track
+        # gap, h = track state) and new-track starts (t_elapsed = 0,
+        # h = 0) reuse the crop embeddings — no second CNN pass
         new_idx = [di for di in range(n) if di not in matched_d]
-        if new_idx:
-            C = cfg.crop
-            m = len(new_idx)
-            mpad = _pad(m)
-            crops_u = np.zeros((mpad, C, C, 3), np.float32)
-            boxes_u = np.zeros((mpad, 4), np.float32)
-            te_u = np.zeros((mpad,), np.float32)
+        n_upd = len(upd_tracks)
+        m = n_upd + len(new_idx)
+        if m > 0:
+            rows = [di for di, _ in upd_feats] + new_idx
+            te_u = np.asarray([g for _, g in upd_feats]
+                              + [0.0] * len(new_idx), np.float32)
+            hs_p = np.zeros((m, self.cfg.rnn_dim), np.float32)
+            for k, t in enumerate(upd_tracks):
+                hs_p[k] = t.h
+            f_u = self._det_feats_np(x[rows], boxes[rows], te_u)
+            h_out = self._gru_np(hs_p, f_u)
+            for k, t in enumerate(upd_tracks):
+                t.h = h_out[k]
             for k, di in enumerate(new_idx):
-                crops_u[k] = extract_crop(frame, dets[di], C)
-                boxes_u[k] = dets[di, :4]
-            f_u = np.asarray(embed_dets(
-                self.params, jnp.asarray(crops_u), jnp.asarray(boxes_u),
-                jnp.asarray(te_u)))
-            h0 = np.zeros((mpad, self.cfg.rnn_dim), np.float32)
-            h_new = np.asarray(gru_step(self.params, jnp.asarray(h0),
-                                        jnp.asarray(f_u)))
-            for k, di in enumerate(new_idx):
-                t = _ActiveTrack(self._next_id, h_new[k], [frame_idx],
+                t = _ActiveTrack(self._next_id, h_out[n_upd + k],
+                                 [frame_idx],
                                  [dets[di, :4].astype(np.float32)])
                 self.active.append(t)
                 self._next_id += 1
@@ -501,3 +558,35 @@ class RecurrentTracker:
         tracks = self.finished + self.active
         return [t.as_array() for t in tracks
                 if len(t.frames) >= self.min_hits]
+
+
+def crop_embed_chunk(params, cfg: TrackerConfig,
+                     frames: Sequence[np.ndarray],
+                     dets_per_frame: Sequence[np.ndarray]
+                     ) -> List[np.ndarray]:
+    """Run the crop CNN over every detection in a CHUNK in one
+    bucket-padded ``crop_embed`` dispatch (the chunked engine's stage 4
+    batching).  Returns per-frame (n_i, embed_dim) crop embeddings,
+    bit-identical to per-frame ``RecurrentTracker.step`` computation
+    (conv outputs are per-sample independent of batch padding)."""
+    C = cfg.crop
+    counts = [len(d) for d in dets_per_frame]
+    total = sum(counts)
+    if total == 0:
+        return [np.zeros((0, cfg.embed_dim), np.float32)
+                for _ in counts]
+    from repro.core.detector import next_bucket
+    npad = next_bucket(total, min_bucket=8)
+    crops = np.zeros((npad, C, C, 3), np.float32)
+    k = 0
+    for frame, dets in zip(frames, dets_per_frame):
+        if len(dets):
+            crops[k:k + len(dets)] = extract_crops(frame, dets, C)
+            k += len(dets)
+    x = np.asarray(crop_embed(params, jnp.asarray(crops)))
+    out = []
+    k = 0
+    for n in counts:
+        out.append(x[k:k + n])
+        k += n
+    return out

@@ -158,6 +158,46 @@ def group_cells(grid: np.ndarray, sizeset: SizeSet,
 
 
 # ---------------------------------------------------------------------------
+# Chunk planning (the staged engine's host-side stage 2->3 boundary)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ChunkPlan:
+    """Window plan for one chunk of frames.
+
+    ``windows``  — per-frame planned windows, in ``group_cells`` order
+                   (what the per-frame reference path would have run);
+    ``by_size``  — size class -> [(frame_slot, x_cell, y_cell, win_idx)]
+                   across the whole chunk, the detector's cross-frame
+                   batch grouping.  ``win_idx`` is the window's index in
+                   its frame's ``windows`` list, so per-frame detection
+                   merge order can be reconstructed exactly.
+    """
+    windows: List[List[Window]]
+    by_size: Dict[Size, List[Tuple[int, int, int, int]]]
+
+
+def plan_chunk(grids: Sequence[np.ndarray], sizeset: SizeSet,
+               max_windows: int = 8) -> ChunkPlan:
+    """Plan windows for a whole chunk of positive-cell grids on the host,
+    grouping same-size windows across frames for batched execution."""
+    per_frame = [group_cells(g, sizeset, max_windows) for g in grids]
+    by_size: Dict[Size, List[Tuple[int, int, int, int]]] = {}
+    for slot, wins in enumerate(per_frame):
+        for wi, (x, y, s) in enumerate(wins):
+            by_size.setdefault(s, []).append((slot, x, y, wi))
+    return ChunkPlan(per_frame, by_size)
+
+
+def full_frame_plan(n_frames: int, sizeset: SizeSet) -> ChunkPlan:
+    """The no-proxy plan: one full-frame window per frame."""
+    full = sizeset.full
+    wins: List[List[Window]] = [[(0, 0, full)] for _ in range(n_frames)]
+    return ChunkPlan(wins, {full: [(slot, 0, 0, 0)
+                                   for slot in range(n_frames)]})
+
+
+# ---------------------------------------------------------------------------
 # Offline size-set selection
 # ---------------------------------------------------------------------------
 

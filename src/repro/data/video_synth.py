@@ -139,6 +139,15 @@ class TrackGT:
     boxes: np.ndarray            # (n, 4) fp32 (cx, cy, w, h) world units
 
 
+# static background layers, one per (clip, resolution) — tiny and reused
+# by every frame of a clip (the tuner re-renders the same clips at many
+# resolutions, hence the cap)
+_BG_CACHE: Dict[Tuple, np.ndarray] = {}
+_BG_CACHE_MAX = 256
+_COLOR_CACHE: Dict[Tuple, np.ndarray] = {}
+_COLOR_CACHE_MAX = 8192
+
+
 @dataclass
 class Clip:
     profile: Profile
@@ -146,6 +155,8 @@ class Clip:
     clip_id: int
     n_frames: int
     tracks: List[TrackGT] = field(default_factory=list)
+    _boxes_index: Optional[Dict[int, np.ndarray]] = \
+        field(default=None, repr=False, compare=False)
 
     # -- labels ----------------------------------------------------------------
     def pattern_counts(self) -> np.ndarray:
@@ -157,45 +168,77 @@ class Clip:
 
     def boxes_at(self, frame: int) -> np.ndarray:
         """(n, 5) [cx, cy, w, h, track_id] world units, objects visible
-        in ``frame``."""
-        rows = []
-        for t in self.tracks:
-            idx = np.searchsorted(t.frames, frame)
-            if idx < len(t.frames) and t.frames[idx] == frame:
-                rows.append(np.concatenate(
-                    [t.boxes[idx], [float(t.track_id)]]))
-        if not rows:
-            return np.zeros((0, 5), np.float32)
-        return np.stack(rows).astype(np.float32)
+        in ``frame``.  Indexed once per clip (render calls this for
+        every frame; scanning all tracks each time dominated it)."""
+        if self._boxes_index is None:
+            idx: Dict[int, List[np.ndarray]] = {}
+            for t in self.tracks:
+                for i, f in enumerate(t.frames):
+                    idx.setdefault(int(f), []).append(np.concatenate(
+                        [t.boxes[i], [float(t.track_id)]]))
+            object.__setattr__(self, "_boxes_index", {
+                f: np.stack(rows).astype(np.float32)
+                for f, rows in idx.items()})
+        return self._boxes_index.get(
+            frame, np.zeros((0, 5), np.float32))
 
     # -- rendering ---------------------------------------------------------------
-    def render(self, frame: int, width: int, height: int) -> np.ndarray:
-        """(H, W, 3) float32 in [0, 1].  Cost scales with W*H (the decode
-        cost model).  Deterministic per (profile, split, clip, frame)."""
-        rng = _rng(self.profile.name, self.split, self.clip_id, 7, frame)
-        # textured background: per-profile static gradient + light noise
+    def _background(self, width: int, height: int) -> np.ndarray:
+        """Static scene layer (gradient + clutter): identical for every
+        frame of a clip, so it is built once per (clip, resolution) and
+        copied per frame.  Decode cost still scales with W*H (copy,
+        object draws and per-frame noise are all full-frame)."""
+        key = (self.profile.name, self.split, self.clip_id, width,
+               height)
+        bg = _BG_CACHE.get(key)
+        if bg is not None:
+            return bg
         brng = _rng(self.profile.name, self.split, self.clip_id, 3, 0)
         gx = brng.uniform(0.25, 0.45)
         gy = brng.uniform(0.25, 0.45)
         yy = np.linspace(0, 1, height, dtype=np.float32)[:, None]
         xx = np.linspace(0, 1, width, dtype=np.float32)[None, :]
-        img = (0.35 + gx * xx + gy * yy)[..., None] * np.ones(
+        bg = (0.35 + gx * xx + gy * yy)[..., None] * np.ones(
             3, np.float32)
-        # static clutter rectangles (buildings/markings) — same every frame
+        # static clutter rectangles (buildings/markings)
         for _ in range(self.profile.clutter):
             cx, cy = brng.uniform(0.05, 0.95, 2)
             w, h = brng.uniform(0.04, 0.16, 2)
             col = brng.uniform(0.2, 0.8, 3).astype(np.float32)
-            _draw_rect(img, cx, cy, w, h, col, fill=0.6)
-        # objects
+            _draw_rect(bg, cx, cy, w, h, col, fill=0.6)
+        _BG_CACHE[key] = bg
+        if len(_BG_CACHE) > _BG_CACHE_MAX:
+            _BG_CACHE.pop(next(iter(_BG_CACHE)))
+        return bg
+
+    def _track_color(self, tid: int) -> np.ndarray:
+        key = (self.profile.name, self.split, self.clip_id, tid)
+        col = _COLOR_CACHE.get(key)
+        if col is None:
+            crng = _rng(self.profile.name, self.split, self.clip_id, 11,
+                        tid)
+            col = crng.uniform(0.0, 1.0, 3).astype(np.float32)
+            col[tid % 3] = 1.0               # saturated channel
+            _COLOR_CACHE[key] = col
+            if len(_COLOR_CACHE) > _COLOR_CACHE_MAX:
+                _COLOR_CACHE.pop(next(iter(_COLOR_CACHE)))
+        return col
+
+    def render(self, frame: int, width: int, height: int) -> np.ndarray:
+        """(H, W, 3) float32 in [0, 1].  Cost scales with W*H (the decode
+        cost model).  Deterministic per (profile, split, clip, frame);
+        noise is drawn from the float32 Gaussian stream (a different —
+        still deterministic — stream than the original float64 path, so
+        pixels differ from pre-engine renders)."""
+        rng = _rng(self.profile.name, self.split, self.clip_id, 7, frame)
+        img = self._background(width, height).copy()
+        # objects (per-track colors are constants — cached)
         for box in self.boxes_at(frame):
             cx, cy, w, h, tid = box
-            crng = _rng(self.profile.name, self.split, self.clip_id, 11,
-                        int(tid))
-            col = crng.uniform(0.0, 1.0, 3).astype(np.float32)
-            col[int(tid) % 3] = 1.0          # saturated channel
-            _draw_rect(img, cx, cy, w, h, col, fill=1.0)
-        img += rng.normal(0.0, 0.02, img.shape).astype(np.float32)
+            _draw_rect(img, cx, cy, w, h,
+                       self._track_color(int(tid)), fill=1.0)
+        img += rng.standard_normal(img.shape, dtype=np.float32) \
+            * np.float32(0.02)
         return np.clip(img, 0.0, 1.0)
 
 

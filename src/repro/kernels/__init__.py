@@ -18,7 +18,9 @@ Kernels:
   proxy_score — the paper's proxy head: fused 1x1-conv + sigmoid +
                 threshold producing the binary cell grid.
   window_gather — the paper's spatial skipping: gather 32-aligned windows
-                  from a frame via a scalar-prefetched window table.
+                  from a frame via a scalar-prefetched window table;
+                  window_gather_batch gathers one size class across a
+                  CHUNK of frames (the chunked engine's hot path).
 """
 from __future__ import annotations
 

@@ -20,6 +20,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; accept both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
 
 def _head_kernel(f_ref, w_ref, b_ref, t_ref, score_ref, pos_ref):
     f = f_ref[...].astype(jnp.float32)                  # (bm, C)
@@ -65,7 +69,7 @@ def proxy_score_pallas(feat, w, b, threshold, *, block_m: int = 256,
             jax.ShapeDtypeStruct((rows + pad,), jnp.float32),
             jax.ShapeDtypeStruct((rows + pad,), jnp.int8),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=(pltpu.PARALLEL,)),
         interpret=interpret,
         name="proxy_score",

@@ -1,1 +1,2 @@
-from repro.kernels.window_gather.ops import window_gather  # noqa: F401
+from repro.kernels.window_gather.ops import (window_gather,  # noqa: F401
+                                             window_gather_batch)

@@ -30,6 +30,11 @@ def _gather_kernel(tbl_ref, frame_ref, out_ref):
     out_ref[0] = frame_ref[...]
 
 
+def _gather_batch_kernel(tbl_ref, frames_ref, out_ref):
+    del tbl_ref
+    out_ref[...] = frames_ref[...]
+
+
 @functools.partial(jax.jit, static_argnames=("win_h", "win_w", "cell",
                                              "interpret"))
 def window_gather_pallas(frame, cell_origins, *, win_h: int, win_w: int,
@@ -64,3 +69,46 @@ def window_gather_pallas(frame, cell_origins, *, win_h: int, win_w: int,
         interpret=interpret,
         name="window_gather",
     )(cell_origins.astype(jnp.int32), frame)
+
+
+@functools.partial(jax.jit, static_argnames=("win_h", "win_w", "cell",
+                                             "interpret"))
+def window_gather_batch_pallas(frames, window_table, *, win_h: int,
+                               win_w: int, cell: int = CELL,
+                               interpret: bool = False):
+    """Cross-frame window gather: crop n windows of one size class from a
+    CHUNK of frames in a single pallas_call (the chunked engine's hot
+    path — one call per (size class, bucket) instead of one per frame).
+
+    frames: (B, H, W, C) with H, W multiples of ``cell``; window_table:
+    (n, 3) int32 rows (frame_idx, cy, cx) — cell coordinates of each
+    window's top-left corner in its source frame.  Returns
+    (n, win_h, win_w, C).  The table is scalar-prefetched to SMEM so each
+    32x32xC tile is still a single aimed block DMA, now indexed by frame
+    as well as position.
+    """
+    B, H, W, C = frames.shape
+    assert H % cell == 0 and W % cell == 0, (H, W)
+    assert win_h % cell == 0 and win_w % cell == 0, (win_h, win_w)
+    n = window_table.shape[0]
+    gh, gw = win_h // cell, win_w // cell
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n, gh, gw),
+        in_specs=[
+            pl.BlockSpec(
+                (1, cell, cell, C),
+                lambda i, gy, gx, tbl: (tbl[i, 0], tbl[i, 1] + gy,
+                                        tbl[i, 2] + gx, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, cell, cell, C), lambda i, gy, gx, tbl: (i, gy, gx, 0)),
+    )
+    return pl.pallas_call(
+        _gather_batch_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, win_h, win_w, C), frames.dtype),
+        interpret=interpret,
+        name="window_gather_batch",
+    )(window_table.astype(jnp.int32), frames)

@@ -22,3 +22,20 @@ def window_gather_ref(frame, origins, *, win_h: int, win_w: int):
         return jax.lax.dynamic_slice(frame, (y, x, 0), (win_h, win_w, C))
 
     return jax.vmap(crop)(origins)
+
+
+@functools.partial(jax.jit, static_argnames=("win_h", "win_w"))
+def window_gather_batch_ref(frames, window_table, *, win_h: int,
+                            win_w: int):
+    """frames: (B, H, W, C); window_table: (n, 3) int32 rows
+    (frame_idx, y_px, x_px).  Returns (n, win_h, win_w, C) crops."""
+    B, H, W, C = frames.shape
+
+    def crop(row):
+        b = jnp.clip(row[0], 0, B - 1)
+        y = jnp.clip(row[1], 0, H - win_h)
+        x = jnp.clip(row[2], 0, W - win_w)
+        return jax.lax.dynamic_slice(frames, (b, y, x, 0),
+                                     (1, win_h, win_w, C))[0]
+
+    return jax.vmap(crop)(window_table)

@@ -33,12 +33,18 @@ def _brute_min(cost):
     return best
 
 
-def test_hungarian_optimal():
+@pytest.mark.parametrize("solver", ["dispatch", "numpy"])
+def test_hungarian_optimal(solver):
+    """Covers both the scipy dispatch AND the numpy JV fallback — the
+    fallback is the only path on scipy-free installs and would otherwise
+    never run in CI."""
+    from repro.core.hungarian import _hungarian_np
+    solve = hungarian if solver == "dispatch" else _hungarian_np
     rng = np.random.default_rng(0)
     for _ in range(60):
         n, m = rng.integers(1, 6, 2)
         cost = rng.random((n, m)) * 10
-        pairs = hungarian(cost)
+        pairs = solve(cost)
         tot = sum(cost[r, c] for r, c in pairs)
         assert abs(tot - _brute_min(cost)) < 1e-9
         # a valid matching: each row/col used at most once

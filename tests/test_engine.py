@@ -1,0 +1,129 @@
+"""Equivalence tests for the staged chunked engine: identical tracks,
+window counts, and counters vs the per-frame reference path, plus the
+bucketed jit-specialization bound."""
+import numpy as np
+import pytest
+
+from repro.configs.multiscope import MULTISCOPE_PIPELINE
+from repro.core import pipeline as pl
+from repro.core.detector import detect_jit_entries, next_bucket
+from repro.core.engine import run_clip_chunked
+from repro.core.proxy import ProxyModel
+from repro.core.tracker import init_tracker
+from repro.core.train_models import train_detector
+from repro.data.video_synth import make_split
+
+
+@pytest.fixture(scope="module")
+def engine_bank():
+    cfg = MULTISCOPE_PIPELINE.reduced()
+    clips = make_split("caldot1", "train", 2, n_frames=24)
+    det, _ = train_detector("ssd-lite", clips,
+                            [cfg.detector.resolutions[-1]], steps=60)
+    bank = pl.ModelBank(cfg, {"ssd-lite": det, "ssd-deep": det})
+    res = cfg.proxy.resolutions[-1]
+    proxy = ProxyModel(cfg.proxy.cell, cfg.proxy.base_channels, res)
+    bank.proxies = {res: proxy}
+    bank.sizes_cells = [pl.det_grid(cfg.detector.resolutions[-1]),
+                        (3, 2), (5, 3)]
+    bank.ref_grid = pl.det_grid(cfg.detector.resolutions[-1])
+    bank.tracker_params = init_tracker(cfg.tracker)
+    # a threshold just above the untrained proxy's score median makes the
+    # positive-cell grid SPARSE, so planning emits real sub-frame windows
+    W, H = cfg.detector.resolutions[-1]
+    frame, _ = pl.render_frame(clips[0], 0, W, H)
+    s, _ = proxy.scores(pl._downsample(frame, res))
+    return bank, clips, res, float(np.quantile(s, 0.85))
+
+
+def _assert_same(a, b):
+    assert a.frames_processed == b.frames_processed
+    assert a.detector_windows == b.detector_windows
+    assert a.full_frames == b.full_frames
+    assert a.skipped_frames == b.skipped_frames
+    assert len(a.tracks) == len(b.tracks)
+    for x, y in zip(a.tracks, b.tracks):
+        np.testing.assert_array_equal(x, y)
+
+
+@pytest.mark.parametrize("gap", [1, 4])
+@pytest.mark.parametrize("proxy_on", [False, True])
+def test_engine_equivalence(engine_bank, proxy_on, gap):
+    bank, clips, res, th = engine_bank
+    params = pl.PipelineParams(
+        "ssd-lite", bank.cfg.detector.resolutions[-1], 0.4, gap=gap,
+        proxy_res=res if proxy_on else None, proxy_threshold=th,
+        tracker="sort", refine=False)
+    for clip in clips:
+        _assert_same(pl.run_clip_frames(bank, params, clip),
+                     run_clip_chunked(bank, params, clip))
+
+
+def test_engine_equivalence_recurrent(engine_bank):
+    """The recurrent tracker path: chunk-batched crop embeddings must
+    reproduce the per-frame path bit-exactly."""
+    bank, clips, res, th = engine_bank
+    params = pl.PipelineParams(
+        "ssd-lite", bank.cfg.detector.resolutions[-1], 0.4, gap=1,
+        proxy_res=res, proxy_threshold=th, tracker="recurrent",
+        refine=False)
+    for clip in clips:
+        _assert_same(pl.run_clip_frames(bank, params, clip),
+                     run_clip_chunked(bank, params, clip))
+
+
+def test_engine_skip_and_full_fallback(engine_bank):
+    """Degenerate proxies: impossible threshold skips every frame;
+    negative threshold falls back to full frames — on both engines."""
+    bank, clips, res, _ = engine_bank
+    base = pl.PipelineParams(
+        "ssd-lite", bank.cfg.detector.resolutions[-1], 0.4, gap=2,
+        proxy_res=res, proxy_threshold=0.9999999, tracker="sort",
+        refine=False)
+    a = run_clip_chunked(bank, base, clips[0])
+    assert a.skipped_frames == a.frames_processed
+    _assert_same(pl.run_clip_frames(bank, base, clips[0]), a)
+    import dataclasses
+    low = dataclasses.replace(base, proxy_threshold=-0.1)
+    b = run_clip_chunked(bank, low, clips[0])
+    assert b.skipped_frames == 0 and b.full_frames == b.frames_processed
+    _assert_same(pl.run_clip_frames(bank, low, clips[0]), b)
+
+
+def test_engine_run_clip_dispatch(engine_bank):
+    """pipeline.run_clip routes to the chunked engine by default and to
+    the reference path with engine="frame"."""
+    bank, clips, res, th = engine_bank
+    params = pl.PipelineParams(
+        "ssd-lite", bank.cfg.detector.resolutions[-1], 0.4, gap=2,
+        proxy_res=res, proxy_threshold=th, tracker="sort", refine=False)
+    _assert_same(pl.run_clip(bank, params, clips[0]),
+                 pl.run_clip(bank, params, clips[0], engine="frame"))
+
+
+def test_jit_specializations_bounded(engine_bank):
+    """Bucketed batching keeps detector jit entries fixed across inputs:
+    a second clip adds NO new specializations."""
+    bank, clips, res, th = engine_bank
+    params = pl.PipelineParams(
+        "ssd-lite", bank.cfg.detector.resolutions[-1], 0.4, gap=1,
+        proxy_res=res, proxy_threshold=th, tracker="sort", refine=False)
+    for clip in clips:
+        run_clip_chunked(bank, params, clip)
+    before = detect_jit_entries()
+    for clip in clips:
+        run_clip_chunked(bank, params, clip)
+    assert detect_jit_entries() == before
+    # every specialization is one (size class, power-of-two bucket):
+    # sizes * buckets (+1 warmup batch) bounds the cache size
+    n_sizes = len(pl.make_sizeset(bank, params).sizes)
+    import math
+    n_buckets = int(math.log2(next_bucket(
+        bank.cfg.windows.max_windows * 16))) + 1
+    assert before <= n_sizes * n_buckets + 2
+
+
+def test_next_bucket():
+    assert [next_bucket(n) for n in (1, 2, 3, 4, 5, 8, 9, 17)] == \
+        [1, 2, 4, 4, 8, 8, 16, 32]
+    assert next_bucket(3, min_bucket=8) == 8
