@@ -1,19 +1,30 @@
-"""Pipeline engine benchmark: per-frame reference vs chunked engine.
+"""Pipeline engine benchmark: per-frame reference vs chunked vs
+streaming executor.
 
-Measures frames/sec of both execution paths on the synthetic workload
-(proxy enabled, recurrent tracker, gap=1) and emits a machine-readable
-``BENCH_pipeline.json`` so future PRs have a perf trajectory to regress
-against.  Timing uses ``RunResult.seconds`` — process time plus the
-charged decode ledger — i.e. the same number the tuner optimizes.
+Measures frames/sec of the three scheduling modes on the synthetic
+workload (trained proxy, recurrent tracker, gap=1) and emits a
+machine-readable ``BENCH_pipeline.json`` so future PRs have a perf
+trajectory to regress against.  ``chunk_size`` and ``executor`` fields
+distinguish scheduling modes in that trajectory.  Timing uses
+``RunResult.seconds`` — process time plus the charged decode ledger,
+i.e. the same number the tuner optimizes; wall-clock rates are recorded
+separately (prefetch overlaps decode with compute, which process time
+by design does not reward).
 
-    PYTHONPATH=src python -m benchmarks.pipeline_bench
+    PYTHONPATH=src python -m benchmarks.pipeline_bench [--smoke]
 
 Runs are interleaved and the median is reported (this container's
-process scheduling is noisy); equivalence of extracted tracks between
-the two engines is asserted on every rep.
+process scheduling is noisy); equivalence of extracted tracks across
+all three modes is asserted on every rep.
+
+The proxy threshold comes from the paper's threshold sweep over cached
+validation score grids (``proxy.calibrate_threshold``) on a briefly
+trained proxy — not from the old self-calibration against the untrained
+score distribution.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import time
 
@@ -23,13 +34,15 @@ DEFAULT_OUT = "BENCH_pipeline.json"
 
 
 def build_workload(n_clips: int = 4, n_frames: int = 48,
-                   train_steps: int = 150):
+                   train_steps: int = 150, proxy_steps: int = 80):
     from repro.configs.multiscope import MULTISCOPE_PIPELINE
     from repro.core import pipeline as pl
-    from repro.core.proxy import ProxyModel
+    from repro.core.proxy import (ProxyModel, calibrate_threshold,
+                                  cells_from_detections, proxy_loss)
     from repro.core.tracker import init_tracker
-    from repro.core.train_models import train_detector
+    from repro.core.train_models import _fit, train_detector
     from repro.data.video_synth import make_split
+    import jax.numpy as jnp
 
     cfg = MULTISCOPE_PIPELINE.reduced()
     clips = make_split("caldot1", "train", n_clips, n_frames=n_frames)
@@ -39,18 +52,51 @@ def build_workload(n_clips: int = 4, n_frames: int = 48,
     bank = pl.ModelBank(cfg, {"ssd-lite": det, "ssd-deep": det})
     res = cfg.proxy.resolutions[-1]
     proxy = ProxyModel(cfg.proxy.cell, cfg.proxy.base_channels, res)
+
+    # detector outputs stand in for θ_best labels: train the proxy
+    # briefly, then calibrate its threshold with the paper's sweep over
+    # cached score grids (replaces the old untrained-quantile hack)
+    W, H = cfg.detector.resolutions[-1]
+    hc, wc = proxy.grid_shape()
+    frames_px, labels, score_frames = [], [], []
+    for ci, clip in enumerate(clips[:2]):
+        for f in range(0, clip.n_frames, 2):
+            frame, _ = pl.render_frame(clip, f, W, H)
+            dets = det.detect_batch(frame[None], 0.55)[0]
+            lab = cells_from_detections(dets, hc, wc)
+            small = pl._downsample(frame, res)
+            # hold out every 4th sampled frame of EACH clip (f is
+            # always even, so keying on the sample index — not f —
+            # keeps both clips contributing calibration frames)
+            if (f // 2 + ci) % 4:
+                frames_px.append(small)
+                labels.append(lab)
+            else:                       # held-out calibration frames
+                score_frames.append((small, lab))
+    rng = np.random.default_rng(0)
+    fr = np.stack(frames_px)
+    lb = np.stack(labels)
+
+    def batches():
+        for _ in range(proxy_steps):
+            idx = rng.integers(len(fr), size=8)
+            yield (jnp.asarray(fr[idx]), jnp.asarray(lb[idx]))
+
+    params_p, _ = _fit(
+        lambda p, f_, l_: proxy_loss(p, f_, l_, cfg.proxy.cell),
+        proxy.params, batches(), lr=3e-3)
+    proxy.params = params_p
     bank.proxies = {res: proxy}
     bank.sizes_cells = [pl.det_grid(cfg.detector.resolutions[-1]),
                         (3, 2), (5, 3)]
     bank.ref_grid = pl.det_grid(cfg.detector.resolutions[-1])
     bank.tracker_params = init_tracker(cfg.tracker)
-    # calibrate the proxy threshold to the untrained proxy's score
-    # distribution so the plan mixes sub-frame windows and full frames
-    # (the MultiScope operating point)
-    W, H = cfg.detector.resolutions[-1]
-    frame, _ = pl.render_frame(clips[0], 0, W, H)
-    s, _ = proxy.scores(pl._downsample(frame, res))
-    threshold = float(np.quantile(s, 0.85))
+
+    score_grids = [proxy.scores(s, 0.5)[0] for s, _ in score_frames]
+    label_grids = [l for _, l in score_frames]
+    threshold = calibrate_threshold(score_grids, label_grids,
+                                    cfg.proxy.thresholds,
+                                    min_recall=0.9)
     params = pl.PipelineParams(
         "ssd-lite", cfg.detector.resolutions[-1], 0.55, gap=1,
         proxy_res=res, proxy_threshold=threshold, tracker="recurrent",
@@ -58,43 +104,70 @@ def build_workload(n_clips: int = 4, n_frames: int = 48,
     return bank, params, clips
 
 
-def run(out_path: str = DEFAULT_OUT, reps: int = 7) -> dict:
+def run(out_path: str | None = DEFAULT_OUT, reps: int = 7,
+        smoke: bool = False) -> dict:
     from repro.core import pipeline as pl
     from repro.core.detector import detect_jit_entries
     from repro.core.engine import DEFAULT_CHUNK, run_clip_chunked
+    from repro.core.executor import ExecutorOptions, run_clip_streamed
 
-    bank, params, clips = build_workload()
+    if smoke:
+        bank, params, clips = build_workload(n_clips=2, n_frames=24,
+                                             train_steps=60,
+                                             proxy_steps=40)
+        reps = min(reps, 2)
+    else:
+        bank, params, clips = build_workload()
+    chunk = params.chunk_size or DEFAULT_CHUNK
+    stream_opts = ExecutorOptions()           # prefetch on, the default
 
     def sweep():
-        """One paired rep: per clip, run BOTH engines back to back so
-        each pair sees the same machine conditions (this container's
-        scheduling is noisy; pairing cancels the drift)."""
-        sa = sb = frames = 0.0
+        """One paired rep: per clip, run the three engines back to back
+        so each triple sees the same machine conditions (this
+        container's scheduling is noisy; pairing cancels the drift).
+        Wall seconds accompany process seconds: prefetch buys wall
+        time, not CPU time."""
+        s = {"frame": 0.0, "chunked": 0.0, "streaming": 0.0}
+        w = {"chunked": 0.0, "streaming": 0.0}
+        frames = 0.0
         same = True
         for clip in clips:
             ra = pl.run_clip_frames(bank, params, clip)
+            t0 = time.perf_counter()
             rb = run_clip_chunked(bank, params, clip)
-            sa += ra.seconds
-            sb += rb.seconds
+            w["chunked"] += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            rc = run_clip_streamed(bank, params, clip, stream_opts)
+            w["streaming"] += time.perf_counter() - t0
+            s["frame"] += ra.seconds
+            s["chunked"] += rb.seconds
+            s["streaming"] += rc.seconds
             frames += ra.frames_processed
-            same &= len(ra.tracks) == len(rb.tracks) and all(
-                np.array_equal(x, y)
-                for x, y in zip(ra.tracks, rb.tracks))
-        return frames / sa, frames / sb, same
+            for r in (rb, rc):
+                same &= len(ra.tracks) == len(r.tracks) and all(
+                    np.array_equal(x, y)
+                    for x, y in zip(ra.tracks, r.tracks))
+        fps = {k: frames / v for k, v in s.items()}
+        wall = {k: frames / v for k, v in w.items()}
+        return fps, wall, same
 
-    # warm: jit compiles + render cache for both paths
+    # warm: jit compiles + render cache for all paths
     sweep()
     entries_warm = detect_jit_entries()
 
-    fps_frame, fps_chunk = [], []
+    fps_all = {"frame": [], "chunked": [], "streaming": []}
+    wall_all = {"chunked": [], "streaming": []}
     identical = True
     for _ in range(reps):
-        fa, fb, same = sweep()
-        fps_frame.append(fa)
-        fps_chunk.append(fb)
+        fps, wall, same = sweep()
+        for k, v in fps.items():
+            fps_all[k].append(v)
+        for k, v in wall.items():
+            wall_all[k].append(v)
         identical &= same
 
-    ratios = [b / a for a, b in zip(fps_frame, fps_chunk)]
+    med = {k: float(np.median(v)) for k, v in fps_all.items()}
+    med_wall = {k: float(np.median(v)) for k, v in wall_all.items()}
 
     result = {
         "benchmark": "pipeline_engine",
@@ -102,39 +175,67 @@ def run(out_path: str = DEFAULT_OUT, reps: int = 7) -> dict:
         "workload": {
             "profile": "caldot1", "clips": len(clips),
             "frames_per_clip": int(clips[0].n_frames),
-            "params": params.describe(), "chunk_size": DEFAULT_CHUNK,
-            "reps": reps,
+            "params": params.describe(), "chunk_size": chunk,
+            "reps": reps, "smoke": smoke,
         },
-        "fps_per_frame": float(np.median(fps_frame)),
-        "fps_chunked": float(np.median(fps_chunk)),
-        "fps_per_frame_all": [round(f, 2) for f in fps_frame],
-        "fps_chunked_all": [round(f, 2) for f in fps_chunk],
-        "speedup": float(np.median(ratios)),
-        "speedup_all": [round(r, 3) for r in ratios],
+        # scheduling-mode fields: the perf trajectory distinguishes the
+        # executor mode and chunk size a number was recorded under
+        "executor": "streaming",
+        "chunk_size": chunk,
+        "fps_per_frame": med["frame"],
+        "fps_chunked": med["chunked"],
+        "fps_streaming": med["streaming"],
+        "fps_per_frame_all": [round(f, 2) for f in fps_all["frame"]],
+        "fps_chunked_all": [round(f, 2) for f in fps_all["chunked"]],
+        "fps_streaming_all": [round(f, 2) for f in fps_all["streaming"]],
+        "wall_fps_chunked": med_wall["chunked"],
+        "wall_fps_streaming": med_wall["streaming"],
+        "speedup": float(np.median(
+            [b / a for a, b in zip(fps_all["frame"],
+                                   fps_all["chunked"])])),
+        "speedup_streaming": float(np.median(
+            [b / a for a, b in zip(fps_all["frame"],
+                                   fps_all["streaming"])])),
         "tracks_identical": bool(identical),
         "detector_jit_entries": detect_jit_entries(),
         "jit_entries_grew_after_warmup":
             detect_jit_entries() != entries_warm,
     }
-    with open(out_path, "w") as f:
-        json.dump(result, f, indent=2)
-        f.write("\n")
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=2)
+            f.write("\n")
     assert identical, \
-        "chunked engine diverged from the per-frame path (see " \
-        + out_path + ")"
+        "executor diverged from the per-frame path" \
+        + (f" (see {out_path})" if out_path else "")
     return result
 
 
-def main(out_path: str = DEFAULT_OUT) -> None:
-    r = run(out_path)
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help=f"output JSON path (default {DEFAULT_OUT})")
+    ap.add_argument("--reps", type=int, default=7)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload, no file written unless --out "
+                         "is explicitly set (CI correctness gate)")
+    args = ap.parse_args(argv)
+    # default=None keeps an explicit `--out <default path>` detectable
+    out = args.out if args.out is not None else \
+        (None if args.smoke else DEFAULT_OUT)
+    r = run(out, reps=args.reps, smoke=args.smoke)
     print(f"per-frame engine : {r['fps_per_frame']:8.1f} frames/sec")
     print(f"chunked engine   : {r['fps_chunked']:8.1f} frames/sec")
-    print(f"speedup          : {r['speedup']:8.2f}x")
+    print(f"streaming engine : {r['fps_streaming']:8.1f} frames/sec"
+          f"  (wall {r['wall_fps_streaming']:.1f}/s)")
+    print(f"speedup          : {r['speedup']:8.2f}x chunked, "
+          f"{r['speedup_streaming']:.2f}x streaming")
     print(f"tracks identical : {r['tracks_identical']}")
     print(f"detector jit entries: {r['detector_jit_entries']}"
           f" (stable after warmup: "
           f"{not r['jit_entries_grew_after_warmup']})")
-    print(f"wrote {out_path}")
+    if out:
+        print(f"wrote {out}")
 
 
 if __name__ == "__main__":

@@ -23,9 +23,9 @@ def bench_kernels() -> None:
 
 
 def bench_pipeline() -> None:
-    print("\n== pipeline engine (per-frame vs chunked) ==")
+    print("\n== pipeline engine (per-frame vs chunked vs streaming) ==")
     from benchmarks import pipeline_bench
-    pipeline_bench.main()
+    pipeline_bench.main([])
 
 
 def bench_roofline() -> None:

@@ -4,8 +4,10 @@ BlazeIt's query-driven search vs MultiScope's extract-all-then-filter.
     PYTHONPATH=src python examples/limit_query.py
 
 Find N frames with >= K cars in the bottom half of the jackson dataset.
-MultiScope pre-processes once; the query itself runs in milliseconds over
-extracted tracks, while BlazeIt must touch the detector per query.
+MultiScope pre-processes once — the extract-all pass goes through the
+streaming executor (``executor.run_clips``, decode prefetch on by
+default) — and the query itself runs in milliseconds over extracted
+tracks, while BlazeIt must touch the detector per query.
 """
 import sys
 

@@ -12,7 +12,7 @@ sys.path.insert(0, "src")
 
 from repro.configs.multiscope import MULTISCOPE_PIPELINE  # noqa: E402
 from repro.core import tuner as tuner_mod  # noqa: E402
-from repro.core import pipeline as pl  # noqa: E402
+from repro.core.executor import run_clips  # noqa: E402
 from repro.core.metrics import clip_count_accuracy  # noqa: E402
 from repro.data.video_synth import make_split  # noqa: E402
 
@@ -31,12 +31,12 @@ def main() -> None:
     curve = tuner_mod.tune(system, val)
 
     print("\n== the speed-accuracy curve, applied to the TEST split ==")
+    # the streaming executor runs the whole split: decode prefetch is on
+    # by default, and clip i+1's decode overlaps clip i's compute
     for pt in curve:
-        accs, secs = [], 0.0
-        for clip in test:
-            r = pl.run_clip(system.bank, pt.params, clip)
-            accs.append(clip_count_accuracy(r.tracks, clip))
-            secs += r.seconds
+        results, secs = run_clips(system.bank, pt.params, test)
+        accs = [clip_count_accuracy(r.tracks, clip)
+                for r, clip in zip(results, test)]
         acc = sum(accs) / len(accs)
         print(f"  [{pt.module:10s}] test_acc={acc:.3f} "
               f"test_t={secs:6.2f}s  {pt.params.describe()}")

@@ -3,10 +3,14 @@
 Public API:
     tuner.setup / tuner.tune     — Figure 1 workflow (train + θ_best +
                                    greedy joint tuning)
-    pipeline.run_clip            — execute one configuration θ (staged
-                                   chunked engine; engine="frame" for the
+    pipeline.run_clip            — execute one configuration θ (streaming
+                                   stage-graph executor by default;
+                                   engine="chunked" for the sequential
+                                   scheduler, engine="frame" for the
                                    per-frame reference path)
-    engine.run_clip_chunked      — the chunked engine entry point
+    executor.run_clips           — multi-clip sweep with cross-clip
+                                   decode prefetch and device round-robin
+    engine.run_clip_chunked      — the PR-1 chunked engine entry point
     experiment.run_dataset       — the §4 evaluation protocol
     baselines                    — Chameleon / BlazeIt / Miris
 """

@@ -1,189 +1,41 @@
-"""Staged chunked execution engine: cross-frame batching for the
-MultiScope pipeline.
+"""Chunked execution engine — PR-1 compatibility surface over the
+streaming executor.
 
-The per-frame reference path (``pipeline.run_clip_frames``) pays one
-proxy dispatch and one detector dispatch *per size class per frame*.
-This engine restructures one clip into chunks of B frames and runs four
-stages per chunk:
+PR 1 introduced the staged chunked engine: decode → proxy → windows →
+detector → tracker in chunks of B frames, cross-frame size-class
+batching with power-of-two bucket padding, window crops through the
+``window_gather_batch`` Pallas kernel, and chunk-batched tracker crop
+embeddings.  That stage logic now lives in ``repro.core.executor`` as
+an explicit stage graph (DECODE / PROXY / DETECT / TRACK) with
+pluggable schedulers; this module keeps the original entry point:
 
-  1. DECODE   — render B frames at detector resolution, charging the
-                decode-cost ledger exactly as the per-frame path does;
-  2. PROXY    — one batched ``proxy_scores`` dispatch for the whole chunk
-                (the kernel already takes a batch dim), then host-side
-                grid mapping;
-  3. DETECT   — windows planned for the whole chunk on the host
-                (``windows.plan_chunk``), then the detector runs on
-                CROSS-FRAME batches grouped by size class.  Window crops
-                are block gathers through the ``window_gather_batch``
-                Pallas kernel (vmapped dynamic_slice off-TPU).  Batch
-                counts are zero-padded to power-of-two buckets so jit
-                specializations stay one per (arch, size class, bucket);
-  4. TRACK    — detections feed the tracker in frame order; candidate
-                detection embeddings are batched per chunk
-                (``tracker.embed_dets_chunk``) and bucket-padded.
+  * ``run_clip_chunked`` — the SEQUENTIAL scheduler (no prefetch, no
+    double buffering): every stage of chunk k completes before chunk
+    k+1 starts, exactly the PR-1 semantics.  Tracks are bit-identical
+    to ``pipeline.run_clip_frames`` (tests/test_engine.py) AND to the
+    streaming scheduler (tests/test_executor.py); only scheduling
+    differs.
 
-Because conv/matmul outputs are per-sample independent of batch size and
-zero padding, the engine's tracks are BIT-IDENTICAL to the per-frame
-path's (asserted by tests/test_engine.py); only the dispatch count
-changes.  Timing semantics are unchanged: ``RunResult.seconds`` is
-process time plus the charged decode ledger.
-
-This staging is the structural prerequisite for async prefetch (stage 1
-overlapping stage 3) and multi-device sharding (chunks across devices):
-both slot in at the chunk boundary without touching per-frame logic.
+New code should use ``repro.core.executor`` directly
+(``run_clip_streamed`` / ``run_clips`` / ``ClipExecutor``), which adds
+async decode prefetch, double-buffered device uploads, and shard-aware
+chunk dispatch on top of the same stages.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Optional
 
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.detector import next_bucket, nms
-from repro.core.pipeline import (CELL_PX, ModelBank, PipelineParams,
-                                 RunResult, det_grid, downsample_chunk,
-                                 make_sizeset, map_proxy_grid,
-                                 render_frame)
-from repro.core.sort import SortTracker
-from repro.core.tracker import RecurrentTracker, crop_embed_chunk
-from repro.core.windows import (ChunkPlan, SizeSet, full_frame_plan,
-                                plan_chunk)
+from repro.core.executor import (DEFAULT_CHUNK, ClipExecutor,
+                                 ExecutorOptions)
+from repro.core.pipeline import ModelBank, PipelineParams, RunResult
 from repro.data.video_synth import Clip
-from repro.kernels.window_gather import window_gather_batch
-
-DEFAULT_CHUNK = 16     # frames per chunk (B): one proxy dispatch each
-
-
-def _detect_chunk(bank: ModelBank, params: PipelineParams,
-                  frames: np.ndarray, chunk_size: int, plan: ChunkPlan,
-                  sizeset: SizeSet) -> List[np.ndarray]:
-    """Stage 3: run the detector on cross-frame batches grouped by size
-    class; reassemble per-frame detections in the exact order the
-    per-frame path would have produced them.  The chunk is uploaded to
-    the device at most once (lazily — all-full-frame plans, e.g. with
-    the proxy off, never pay it) and shared by every gather; it is
-    zero-padded to ``chunk_size`` frames so the gather jit sees one
-    (B, H, W, C) shape."""
-    detector = bank.detectors[params.det_arch]
-    W, H = params.det_res
-    frames_dev = None
-    per_window: Dict[Tuple[int, int], np.ndarray] = {}
-    for size, entries in plan.by_size.items():
-        pw, ph = size[0] * CELL_PX, size[1] * CELL_PX
-        n = len(entries)
-        origins = [(x * CELL_PX / W, y * CELL_PX / H)
-                   for (_, x, y, _) in entries]
-        scales = [(pw / W, ph / H)] * n
-        if (pw, ph) == (W, H):
-            # full-frame windows: the crop is the frame itself
-            stack = frames[[slot for (slot, _, _, _) in entries]]
-            dets = detector.detect_batch_bucketed(
-                stack, params.det_conf, origins=origins, scales=scales)
-        else:
-            if frames_dev is None:
-                padded = np.zeros((chunk_size, H, W, 3), np.float32)
-                padded[:frames.shape[0]] = frames
-                frames_dev = jnp.asarray(padded)
-            tbl = np.zeros((next_bucket(n), 3), np.int32)
-            for k, (slot, x, y, _) in enumerate(entries):
-                tbl[k] = (slot, y, x)
-            crops = window_gather_batch(frames_dev, tbl,
-                                        win_h=ph, win_w=pw, cell=CELL_PX)
-            # crops stay device-side: detect_batch feeds them straight
-            # into the detector without a host round-trip
-            dets = detector.detect_batch(
-                crops, params.det_conf, origins=origins,
-                scales=scales, n_valid=n)
-        for (slot, _, _, wi), d in zip(entries, dets):
-            per_window[(slot, wi)] = d
-
-    merged: List[np.ndarray] = []
-    for slot, wins in enumerate(plan.windows):
-        if not wins:
-            merged.append(np.zeros((0, 5), np.float32))
-        elif len(wins) == 1 and wins[0][2] == sizeset.full:
-            # the per-frame fast path applies no cross-window NMS
-            merged.append(per_window[(slot, 0)])
-        else:
-            by_size_frame: Dict[Tuple[int, int], List[int]] = {}
-            for wi, (_, _, s) in enumerate(wins):
-                by_size_frame.setdefault(s, []).append(wi)
-            parts = [per_window[(slot, wi)]
-                     for wis in by_size_frame.values() for wi in wis]
-            merged.append(nms(np.concatenate(parts)))
-    return merged
 
 
 def run_clip_chunked(bank: ModelBank, params: PipelineParams, clip: Clip,
-                     chunk_size: int = DEFAULT_CHUNK) -> RunResult:
+                     chunk_size: Optional[int] = None) -> RunResult:
     """Chunked counterpart of ``pipeline.run_clip_frames``: identical
-    tracks and counters, a fraction of the dispatches."""
-    import time
-
-    cfg = bank.cfg
-    W, H = params.det_res
-    proxy = bank.proxies.get(params.proxy_res) \
-        if params.proxy_res is not None else None
-    sizeset = make_sizeset(bank, params)
-    grid = det_grid(params.det_res)
-    if params.tracker == "recurrent" and bank.tracker_params is not None:
-        tracker: object = RecurrentTracker(cfg.tracker,
-                                           bank.tracker_params)
-    else:
-        tracker = SortTracker()
-    batch_embed = isinstance(tracker, RecurrentTracker)
-
-    frame_ids = list(range(0, clip.n_frames, params.gap))
-    n_windows = full_frames = skipped = 0
-    decode_charged = 0.0
-    t0 = time.process_time()
-    for c0 in range(0, len(frame_ids), chunk_size):
-        ids = frame_ids[c0:c0 + chunk_size]
-        B = len(ids)
-
-        # stage 1: decode at detector resolution, charging the ledger
-        frames = np.empty((B, H, W, 3), np.float32)
-        for k, f in enumerate(ids):
-            t_r = time.process_time()
-            frame, cost = render_frame(clip, f, W, H)
-            decode_charged += cost - (time.process_time() - t_r)
-            frames[k] = frame
-        # stage 2: proxy-score the whole chunk in one dispatch (the
-        # nearest-neighbor downsample is one gather for the chunk)
-        if proxy is not None:
-            pframes = downsample_chunk(frames, proxy.resolution)
-            _, pos = proxy.scores_batch(pframes, params.proxy_threshold)
-            grids = [map_proxy_grid(p, grid) for p in pos]
-            plan = plan_chunk(grids, sizeset, cfg.windows.max_windows)
-        else:
-            plan = full_frame_plan(B, sizeset)
-
-        # stage 3: cross-frame bucketed detection
-        dets_per_frame = _detect_chunk(bank, params, frames, chunk_size,
-                                       plan, sizeset)
-
-        for wins in plan.windows:
-            n_windows += len(wins)
-            if len(wins) == 1 and wins[0][2] == sizeset.full:
-                full_frames += 1
-            if not wins:
-                skipped += 1
-
-        # stage 4: tracker in frame order; the crop CNN runs once for
-        # the whole chunk, te-dependent features derive host-side
-        if batch_embed:
-            embeds = crop_embed_chunk(bank.tracker_params, cfg.tracker,
-                                      frames, dets_per_frame)
-            for k, f in enumerate(ids):
-                tracker.step(f, dets_per_frame[k], frames[k],
-                             det_embeds=embeds[k])
-        else:
-            for k, f in enumerate(ids):
-                tracker.step(f, dets_per_frame[k], frames[k])
-
-    tracks = tracker.result()
-    if params.refine and bank.refiner is not None:
-        tracks = [bank.refiner.refine(t) for t in tracks]
-    seconds = time.process_time() - t0 + max(decode_charged, 0.0)
-    return RunResult(tracks, seconds, len(frame_ids), n_windows,
-                     full_frames, skipped)
+    tracks and counters, a fraction of the dispatches.  ``chunk_size``
+    overrides θ's ``PipelineParams.chunk_size`` (default B=16)."""
+    opts = ExecutorOptions(prefetch=False, double_buffer=False,
+                           chunk_size=chunk_size)
+    return ClipExecutor(bank, params, opts).run(clip)

@@ -1,0 +1,538 @@
+"""Streaming clip executor: the pluggable stage-graph scheduler for the
+chunked MultiScope pipeline.
+
+PR 1 restructured one clip into chunks of B frames with four stages per
+chunk; this module extracts those stages behind an explicit stage graph
+so HOW the stages are scheduled is pluggable and independent of WHAT
+each stage computes:
+
+  DECODE  — render B frames at detector resolution, charging the
+            decode-cost ledger (``pipeline.render_frame``);
+  PROXY   — one batched proxy dispatch for the chunk, host-side grid
+            mapping, window planning (``windows.plan_chunk``);
+  DETECT  — cross-frame size-class batches through the detector, window
+            crops via the ``window_gather_batch`` Pallas kernel, batch
+            dims padded to power-of-two buckets;
+  TRACK   — detections feed the tracker strictly in frame order (the
+            only stage with cross-chunk state), candidate crop
+            embeddings batched per chunk (``tracker.embed_dets_chunk``).
+
+Two schedulers drive the graph:
+
+  * ``SequentialScheduler`` — every stage of chunk k completes before
+    chunk k+1 starts: exactly the PR-1 chunked engine.
+  * ``StreamingScheduler`` — DECODE (and, with double buffering, the
+    device upload) for chunk k+1 runs on a background thread while
+    chunk k is in PROXY/DETECT/TRACK on the caller's thread.  The
+    hand-off queue is bounded by ``prefetch_depth``, so at most that
+    many decoded chunks (and device buffers) are in flight.
+
+Buffer ownership: the decoded host chunk is owned by its ``ChunkTask``;
+the padded device copy (``frames_dev``) is uploaded either eagerly by
+the decode worker (double buffering: the upload of chunk k+1 overlaps
+chunk k's detector work) or lazily by DETECT, is only ever needed for
+sub-frame window gathers, and is donated back (deleted) as soon as
+DETECT finishes so at most ``prefetch_depth`` device buffers exist.
+
+Sharding attaches at the chunk boundary: chunks are independent through
+DETECT, so stages 1-3 round-robin across ``ExecutorOptions.devices``
+(default: all local devices), and a ``jax.sharding.Mesh`` can be passed
+instead to shard each chunk's batch axis via the
+``repro.distributed.sharding.LogicalRules`` helpers.  TRACK is always
+sequenced in frame order on the caller's thread, which is what keeps
+the executor's tracks BIT-IDENTICAL to ``pipeline.run_clip_frames``
+(asserted by tests/test_executor.py) for every chunk size, prefetch
+setting, and device assignment.
+
+The chunk size B is tuner-visible: ``PipelineParams.chunk_size`` (None
+means ``DEFAULT_CHUNK``) is proposed by the tuner's scheduler module
+for sparse/skip-heavy θ and flows through here, ``windows.plan_chunk``
+and ``tracker.embed_dets_chunk`` bucketing.
+
+``RunResult.seconds`` semantics are unchanged: process CPU time plus
+the charged decode ledger.  Decode CPU actually spent is measured with
+``time.thread_time`` in whichever thread renders, so the ledger
+arithmetic is exact even when decode overlaps compute.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.detector import next_bucket, nms
+from repro.core.pipeline import (CELL_PX, ModelBank, PipelineParams,
+                                 RunResult, det_grid, downsample_chunk,
+                                 make_sizeset, map_proxy_grid,
+                                 render_frame)
+from repro.core.sort import SortTracker
+from repro.core.tracker import RecurrentTracker, embed_dets_chunk
+from repro.core.windows import ChunkPlan, full_frame_plan, plan_chunk
+from repro.data.video_synth import Clip
+
+DEFAULT_CHUNK = 16     # frames per chunk (B) when θ does not say
+
+STAGES = ("decode", "proxy", "detect", "track")
+
+
+def effective_chunk(params: PipelineParams,
+                    override: Optional[int] = None) -> int:
+    """The chunk size B for one run: explicit override > θ's
+    ``chunk_size`` > ``DEFAULT_CHUNK``."""
+    if override is not None:
+        return int(override)
+    b = getattr(params, "chunk_size", None)
+    return int(b) if b else DEFAULT_CHUNK
+
+
+@dataclass
+class ExecutorOptions:
+    """Scheduling knobs — orthogonal to θ (they never change tracks).
+
+    ``prefetch``       — decode chunk k+1 on a background thread while
+                         chunk k is in proxy/detect/track;
+    ``prefetch_depth`` — max decoded chunks in flight (bounds host and
+                         device memory);
+    ``double_buffer``  — upload ``frames_dev`` in the decode worker so
+                         the copy overlaps the previous chunk's
+                         detector work (only when a proxy is active:
+                         all-full-frame plans never need the buffer);
+    ``devices``        — stage 1-3 dispatch targets, round-robinned per
+                         chunk (default: ``jax.local_devices()``);
+    ``mesh``           — optional ``jax.sharding.Mesh``; when set, each
+                         chunk's batch axis is sharded through
+                         ``LogicalRules`` instead of whole-chunk
+                         round-robin;
+    ``chunk_size``     — override θ's B (engine compat path).
+    """
+    prefetch: bool = True
+    prefetch_depth: int = 2
+    double_buffer: bool = True
+    devices: Optional[Sequence] = None
+    mesh: Optional[object] = None
+    chunk_size: Optional[int] = None
+
+
+@dataclass
+class ChunkTask:
+    """One chunk's state as it flows through the stage graph."""
+    index: int
+    frame_ids: List[int]
+    frames: Optional[np.ndarray] = None        # (B, H, W, 3) host pixels
+    charged: float = 0.0                       # decode ledger for chunk
+    frames_dev: Optional[object] = None        # padded device buffer
+    plan: Optional[ChunkPlan] = None
+    dets: Optional[List[np.ndarray]] = None    # per-frame detections
+
+
+class _WorkerFailure:
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
+class _RunContext:
+    """Per-clip derived state shared by every stage."""
+
+    def __init__(self, bank: ModelBank, params: PipelineParams,
+                 clip: Clip, options: ExecutorOptions,
+                 device_offset: int = 0):
+        self.bank = bank
+        self.params = params
+        self.clip = clip
+        self.cfg = bank.cfg
+        self.chunk = effective_chunk(params, options.chunk_size)
+        self.W, self.H = params.det_res
+        self.proxy = bank.proxies.get(params.proxy_res) \
+            if params.proxy_res is not None else None
+        self.sizeset = make_sizeset(bank, params)
+        self.grid = det_grid(params.det_res)
+        self.detector = bank.detectors[params.det_arch]
+        if params.tracker == "recurrent" \
+                and bank.tracker_params is not None:
+            self.tracker: object = RecurrentTracker(self.cfg.tracker,
+                                                    bank.tracker_params)
+        else:
+            self.tracker = SortTracker()
+        self.batch_embed = isinstance(self.tracker, RecurrentTracker)
+        self.devices = list(options.devices) if options.devices \
+            else jax.local_devices()
+        self.device_offset = device_offset
+        self.sharding = None
+        if options.mesh is not None:
+            from repro.distributed.sharding import LogicalRules
+            rules = LogicalRules(options.mesh)
+            self.sharding = rules.named_sharding(
+                (self.chunk, self.H, self.W, 3),
+                ("batch", None, None, None))
+        # upload in the decode worker only when the buffer can actually
+        # be used: sub-frame gathers require an active proxy, and the
+        # previous chunk's plan is the cheap predictor of whether this
+        # one will gather at all (skip-heavy θ would otherwise pay a
+        # per-chunk host-to-device copy that DETECT deletes unused)
+        self.predecode_upload = bool(options.double_buffer
+                                     and self.proxy is not None)
+        self.prev_chunk_gathered = False    # benign cross-thread read
+        self.frame_ids = list(range(0, clip.n_frames, params.gap))
+        # ledger + RunResult counters, accumulated by TRACK (the only
+        # stage that is strictly sequenced)
+        self.charged = 0.0
+        self.n_windows = 0
+        self.full_frames = 0
+        self.skipped = 0
+
+    def device_for(self, task: ChunkTask):
+        return self.devices[(self.device_offset + task.index)
+                            % len(self.devices)]
+
+    def upload(self, task: ChunkTask):
+        """Pad the chunk to B frames (one gather jit shape) and place it
+        on this chunk's device / mesh sharding."""
+        padded = np.zeros((self.chunk, self.H, self.W, 3), np.float32)
+        padded[:task.frames.shape[0]] = task.frames
+        if self.sharding is not None:
+            return jax.device_put(padded, self.sharding)
+        if len(self.devices) > 1:
+            return jax.device_put(padded, self.device_for(task))
+        return jnp.asarray(padded)
+
+
+# ---------------------------------------------------------------------------
+# The four stages
+# ---------------------------------------------------------------------------
+
+def stage_decode(ctx: _RunContext, task: ChunkTask) -> ChunkTask:
+    """Render the chunk at detector resolution, charging the ledger.
+
+    ``time.thread_time`` measures the CPU actually spent rendering in
+    THIS thread, so the charge (ledger cost minus actual cost) stays
+    exact whether decode runs inline or on the prefetch worker."""
+    B = len(task.frame_ids)
+    frames = np.empty((B, ctx.H, ctx.W, 3), np.float32)
+    charged = 0.0
+    for k, f in enumerate(task.frame_ids):
+        t_r = time.thread_time()
+        frame, cost = render_frame(ctx.clip, f, ctx.W, ctx.H)
+        charged += cost - (time.thread_time() - t_r)
+        frames[k] = frame
+    task.frames = frames
+    task.charged = charged
+    if ctx.predecode_upload and ctx.prev_chunk_gathered:
+        task.frames_dev = ctx.upload(task)
+    return task
+
+
+def stage_proxy(ctx: _RunContext, task: ChunkTask) -> ChunkTask:
+    """Proxy-score the whole chunk in one dispatch and plan windows."""
+    if ctx.proxy is not None:
+        pframes = downsample_chunk(task.frames, ctx.proxy.resolution)
+        _, pos = ctx.proxy.scores_batch(pframes,
+                                        ctx.params.proxy_threshold)
+        grids = [map_proxy_grid(p, ctx.grid) for p in pos]
+        task.plan = plan_chunk(grids, ctx.sizeset,
+                               ctx.cfg.windows.max_windows,
+                               chunk_size=ctx.chunk)
+    else:
+        task.plan = full_frame_plan(len(task.frame_ids), ctx.sizeset)
+    return task
+
+
+def stage_detect(ctx: _RunContext, task: ChunkTask) -> ChunkTask:
+    """Cross-frame bucketed detection; reassemble per-frame detections
+    in the exact order the per-frame path would have produced them."""
+    detector = ctx.detector
+    W, H = ctx.W, ctx.H
+    plan, frames = task.plan, task.frames
+    frames_dev = task.frames_dev
+    per_window: Dict[Tuple[int, int], np.ndarray] = {}
+    for size, entries in plan.by_size.items():
+        pw, ph = size[0] * CELL_PX, size[1] * CELL_PX
+        n = len(entries)
+        origins = [(x * CELL_PX / W, y * CELL_PX / H)
+                   for (_, x, y, _) in entries]
+        scales = [(pw / W, ph / H)] * n
+        if (pw, ph) == (W, H):
+            # full-frame windows: the crop is the frame itself
+            stack = frames[[slot for (slot, _, _, _) in entries]]
+            dets = detector.detect_batch_bucketed(
+                stack, ctx.params.det_conf, origins=origins,
+                scales=scales)
+        else:
+            if frames_dev is None:       # lazy path (no double buffer)
+                frames_dev = ctx.upload(task)
+            tbl = np.zeros((next_bucket(n), 3), np.int32)
+            for k, (slot, x, y, _) in enumerate(entries):
+                tbl[k] = (slot, y, x)
+            from repro.kernels.window_gather import window_gather_batch
+            crops = window_gather_batch(frames_dev, tbl,
+                                        win_h=ph, win_w=pw, cell=CELL_PX)
+            # crops stay device-side: detect_batch feeds them straight
+            # into the detector without a host round-trip
+            dets = detector.detect_batch(
+                crops, ctx.params.det_conf, origins=origins,
+                scales=scales, n_valid=n)
+        for (slot, _, _, wi), d in zip(entries, dets):
+            per_window[(slot, wi)] = d
+
+    merged: List[np.ndarray] = []
+    for slot, wins in enumerate(plan.windows):
+        if not wins:
+            merged.append(np.zeros((0, 5), np.float32))
+        elif len(wins) == 1 and wins[0][2] == ctx.sizeset.full:
+            # the per-frame fast path applies no cross-window NMS
+            merged.append(per_window[(slot, 0)])
+        else:
+            by_size_frame: Dict[Tuple[int, int], List[int]] = {}
+            for wi, (_, _, s) in enumerate(wins):
+                by_size_frame.setdefault(s, []).append(wi)
+            parts = [per_window[(slot, wi)]
+                     for wis in by_size_frame.values() for wi in wis]
+            merged.append(nms(np.concatenate(parts)))
+    task.dets = merged
+    # steer the decode worker's eager upload (a stale read just means
+    # one lazy upload): this chunk gathered iff any size class was
+    # sub-frame
+    ctx.prev_chunk_gathered = any(
+        (s[0] * CELL_PX, s[1] * CELL_PX) != (W, H)
+        for s in plan.by_size)
+    # donate the device buffer back: DETECT is its last consumer, and
+    # freeing it here bounds in-flight device memory to prefetch_depth
+    if frames_dev is not None:
+        task.frames_dev = None
+        try:
+            frames_dev.delete()
+        except Exception:
+            pass
+    return task
+
+
+def stage_track(ctx: _RunContext, task: ChunkTask) -> ChunkTask:
+    """Feed the tracker strictly in frame order; accumulate counters and
+    the decode ledger.  The crop CNN runs once per chunk."""
+    for wins in task.plan.windows:
+        ctx.n_windows += len(wins)
+        if len(wins) == 1 and wins[0][2] == ctx.sizeset.full:
+            ctx.full_frames += 1
+        if not wins:
+            ctx.skipped += 1
+    ctx.charged += task.charged
+    if ctx.batch_embed:
+        embeds = embed_dets_chunk(ctx.bank.tracker_params,
+                                  ctx.cfg.tracker, task.frames,
+                                  task.dets,
+                                  min_bucket=max(8, ctx.chunk // 2))
+        for k, f in enumerate(task.frame_ids):
+            ctx.tracker.step(f, task.dets[k], task.frames[k],
+                             det_embeds=embeds[k])
+    else:
+        for k, f in enumerate(task.frame_ids):
+            ctx.tracker.step(f, task.dets[k], task.frames[k])
+    task.frames = None
+    return task
+
+
+DEFAULT_STAGES: Dict[str, Callable[[_RunContext, ChunkTask], ChunkTask]] \
+    = {"decode": stage_decode, "proxy": stage_proxy,
+       "detect": stage_detect, "track": stage_track}
+
+
+# ---------------------------------------------------------------------------
+# Schedulers
+# ---------------------------------------------------------------------------
+
+class SequentialScheduler:
+    """Reference scheduling: every stage of chunk k completes before
+    chunk k+1 starts — the PR-1 chunked engine, stage graph edition."""
+
+    def start(self, ctx: _RunContext, tasks: List[ChunkTask],
+              stages: Dict[str, Callable]):
+        return iter(tasks)
+
+    def cancel(self, ctx: _RunContext, handle) -> None:
+        pass                          # nothing runs ahead
+
+    def drain(self, ctx: _RunContext, handle,
+              stages: Dict[str, Callable]) -> None:
+        for task in handle:
+            for name in STAGES:
+                task = stages[name](ctx, task)
+
+
+class StreamingScheduler:
+    """DECODE runs ahead on a background thread with a bounded hand-off
+    queue; PROXY/DETECT/TRACK run on the draining thread in chunk order
+    (the queue preserves it, so TRACK stays frame-ordered)."""
+
+    def __init__(self, depth: int = 2):
+        self.depth = max(1, int(depth))
+
+    def start(self, ctx: _RunContext, tasks: List[ChunkTask],
+              stages: Dict[str, Callable]):
+        q: "queue.Queue" = queue.Queue(maxsize=self.depth)
+        stop = threading.Event()
+
+        def worker():
+            try:
+                for task in tasks:
+                    if stop.is_set():
+                        break
+                    q.put(stages["decode"](ctx, task))
+            except BaseException as exc:      # surfaced by drain()
+                q.put(_WorkerFailure(exc))
+
+        th = threading.Thread(target=worker, daemon=True,
+                              name="multiscope-decode")
+        th.start()
+        return q, th, len(tasks), stop
+
+    def cancel(self, ctx: _RunContext, handle) -> None:
+        """Stop the decode worker and discard whatever it produced.
+        The worker may be blocked in ``q.put`` on the full bounded
+        queue, so keep consuming until it exits — a bare ``join`` would
+        deadlock."""
+        q, th, _, stop = handle
+        stop.set()
+        while th.is_alive():
+            try:
+                q.get(timeout=0.05)
+            except queue.Empty:
+                pass
+        th.join()
+
+    def drain(self, ctx: _RunContext, handle,
+              stages: Dict[str, Callable]) -> None:
+        q, th, n, _ = handle
+        try:
+            for _ in range(n):
+                item = q.get()
+                if isinstance(item, _WorkerFailure):
+                    raise item.exc
+                task = item
+                for name in STAGES[1:]:
+                    task = stages[name](ctx, task)
+        except BaseException:
+            # a stage failed mid-stream: unblock the producer before
+            # propagating, or its q.put on the full queue never returns
+            self.cancel(ctx, handle)
+            raise
+        th.join()
+
+
+# ---------------------------------------------------------------------------
+# The executor
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _ActiveRun:
+    """A clip whose DECODE may already be running ahead."""
+    ctx: _RunContext
+    handle: object
+
+
+class ClipExecutor:
+    """Execute θ over clips through the stage graph.
+
+    ``stages`` lets a caller swap any stage implementation (the
+    pluggable part); ``options`` picks the scheduler and device
+    placement.  ``start``/``finish`` expose the two-phase form so
+    ``run_clips`` can overlap clip i+1's decode with clip i's compute.
+    """
+
+    def __init__(self, bank: ModelBank, params: PipelineParams,
+                 options: Optional[ExecutorOptions] = None,
+                 stages: Optional[Dict[str, Callable]] = None,
+                 scheduler=None):
+        self.bank = bank
+        self.params = params
+        self.options = options or ExecutorOptions()
+        self.stages = dict(DEFAULT_STAGES)
+        if stages:
+            self.stages.update(stages)
+        if scheduler is not None:
+            self.scheduler = scheduler
+        elif self.options.prefetch:
+            self.scheduler = StreamingScheduler(self.options.prefetch_depth)
+        else:
+            self.scheduler = SequentialScheduler()
+
+    def _tasks(self, ctx: _RunContext) -> List[ChunkTask]:
+        ids = ctx.frame_ids
+        return [ChunkTask(i, ids[c0:c0 + ctx.chunk])
+                for i, c0 in enumerate(range(0, len(ids), ctx.chunk))]
+
+    def start(self, clip: Clip, device_offset: int = 0) -> _ActiveRun:
+        ctx = _RunContext(self.bank, self.params, clip, self.options,
+                          device_offset=device_offset)
+        handle = self.scheduler.start(ctx, self._tasks(ctx), self.stages)
+        return _ActiveRun(ctx, handle)
+
+    def cancel(self, run: _ActiveRun) -> None:
+        """Abandon a started run: stop its decode worker and release
+        everything it buffered."""
+        self.scheduler.cancel(run.ctx, run.handle)
+
+    def finish(self, run: _ActiveRun) -> RunResult:
+        ctx = run.ctx
+        t0 = time.process_time()
+        self.scheduler.drain(ctx, run.handle, self.stages)
+        tracks = ctx.tracker.result()
+        if ctx.params.refine and ctx.bank.refiner is not None:
+            tracks = [ctx.bank.refiner.refine(t) for t in tracks]
+        seconds = time.process_time() - t0 + max(ctx.charged, 0.0)
+        return RunResult(tracks, seconds, len(ctx.frame_ids),
+                         ctx.n_windows, ctx.full_frames, ctx.skipped)
+
+    def run(self, clip: Clip) -> RunResult:
+        return self.finish(self.start(clip))
+
+
+def run_clip_streamed(bank: ModelBank, params: PipelineParams,
+                      clip: Clip,
+                      options: Optional[ExecutorOptions] = None
+                      ) -> RunResult:
+    """One clip through the streaming executor (prefetch on by
+    default).  Tracks and counters are bit-identical to
+    ``pipeline.run_clip_frames``."""
+    return ClipExecutor(bank, params, options).run(clip)
+
+
+def run_clips(bank: ModelBank, params: PipelineParams,
+              clips: Sequence[Clip],
+              options: Optional[ExecutorOptions] = None
+              ) -> Tuple[List[RunResult], float]:
+    """Multi-clip sweep (the experiment driver's test-split loop).
+
+    Clips are independent through DETECT, so with prefetch enabled clip
+    i+1's decode worker is started while clip i is still draining, and
+    each clip's chunks round-robin the device list from a per-clip
+    offset — on a multi-device mesh, consecutive clips land on
+    different devices.  TRACK state never crosses clips, and per-clip
+    seconds keep the process-time + ledger semantics (decode CPU spent
+    early is counted once, in whichever window it ran)."""
+    opts = options or ExecutorOptions()
+    ex = ClipExecutor(bank, params, opts)
+    results: List[RunResult] = []
+    if not opts.prefetch or len(clips) <= 1:
+        for i, clip in enumerate(clips):
+            results.append(ex.finish(ex.start(clip, device_offset=i)))
+        return results, sum(r.seconds for r in results)
+    pending: List[_ActiveRun] = [ex.start(clips[0], device_offset=0)]
+    try:
+        for i in range(1, len(clips)):
+            # one clip of decode lookahead: prefetch_depth chunks max
+            pending.append(ex.start(clips[i], device_offset=i))
+            results.append(ex.finish(pending.pop(0)))
+        results.append(ex.finish(pending.pop(0)))
+    except BaseException:
+        # the failed clip's own worker was stopped by drain; clips
+        # started ahead still have live workers that would otherwise
+        # block forever holding decoded chunks and device buffers
+        for run in pending:
+            ex.cancel(run)
+        raise
+    return results, sum(r.seconds for r in results)

@@ -25,23 +25,46 @@ from repro.core import tuner as tuner_mod
 from repro.core.baselines import (BlazeItBaseline, ChameleonBaseline,
                                   MirisBaseline)
 from repro.core.baselines.chameleon import pareto
+from repro.core.executor import run_clips
 from repro.core.metrics import clip_count_accuracy, mota
 from repro.core.tracker import build_examples
 from repro.core.tuner import TunerPoint
 from repro.data.video_synth import Clip, make_split
 
 
+def _streamed_split(bank):
+    """Split-level runner over the streaming executor, shared by every
+    MultiScope-engine test curve (cross-clip decode prefetch + per-clip
+    device round-robin)."""
+    def run(pt, clips):
+        return run_clips(bank, pt.params, clips)[0]
+    return run
+
+
 def _test_curve(run_fn, points: List[TunerPoint],
-                test_clips: Sequence[Clip]) -> List[Dict[str, Any]]:
-    """Apply each selected configuration on the test split."""
+                test_clips: Sequence[Clip],
+                run_split_fn=None) -> List[Dict[str, Any]]:
+    """Apply each selected configuration on the test split.
+
+    ``run_split_fn(pt, clips) -> [RunResult]`` runs a whole split at
+    once — the MultiScope curves use ``executor.run_clips`` so clip
+    i+1's decode prefetches while clip i computes and clips round-robin
+    devices; per-clip ``run_fn`` remains for baselines with their own
+    execution loops."""
     out = []
     for pt in points:
-        accs, secs, results = [], 0.0, []
-        for clip in test_clips:
-            r = run_fn(pt, clip)
-            accs.append(clip_count_accuracy(r.tracks, clip))
-            secs += r.seconds
-            results.append(r)
+        if run_split_fn is not None:
+            results = run_split_fn(pt, test_clips)
+            accs = [clip_count_accuracy(r.tracks, clip)
+                    for r, clip in zip(results, test_clips)]
+            secs = sum(r.seconds for r in results)
+        else:
+            accs, secs, results = [], 0.0, []
+            for clip in test_clips:
+                r = run_fn(pt, clip)
+                accs.append(clip_count_accuracy(r.tracks, clip))
+                secs += r.seconds
+                results.append(r)
         out.append({
             "params": pt.params.describe(), "module": pt.module,
             "val_accuracy": pt.val_accuracy,
@@ -77,9 +100,8 @@ def run_dataset(dataset: str, *, n_train: int = 5, n_val: int = 4,
                           tracker_steps=tracker_steps, log=log)
     ms_curve_val = tuner_mod.tune(sys, val, log=log)
     ms_points = pareto(ms_curve_val)
-    ms_curve = _test_curve(
-        lambda pt, clip: pl.run_clip(sys.bank, pt.params, clip),
-        ms_points, test)
+    ms_curve = _test_curve(None, ms_points, test,
+                           run_split_fn=_streamed_split(sys.bank))
 
     # θ_best labels reused by the baselines (shared substrate, like the
     # paper giving all methods the same pretrained detector)
@@ -95,9 +117,8 @@ def run_dataset(dataset: str, *, n_train: int = 5, n_val: int = 4,
     # ---- Chameleon --------------------------------------------------------------
     cham = ChameleonBaseline(sys.bank)
     cham_points = cham.select(val)
-    cham_curve = _test_curve(
-        lambda pt, clip: pl.run_clip(sys.bank, pt.params, clip),
-        cham_points, test)
+    cham_curve = _test_curve(None, cham_points, test,
+                             run_split_fn=_streamed_split(sys.bank))
 
     # ---- BlazeIt ----------------------------------------------------------------
     blaze = BlazeItBaseline(sys.bank)
@@ -228,9 +249,8 @@ def ablation(sys, val_clips: Sequence[Clip], test_clips: Sequence[Clip],
 
     out = {}
     for name, points in variants.items():
-        out[name] = _test_curve(
-            lambda pt, clip: pl.run_clip(sys.bank, pt.params, clip),
-            points, test_clips)
+        out[name] = _test_curve(None, points, test_clips,
+                                run_split_fn=_streamed_split(sys.bank))
         log(f"[fig7] {name}: {len(points)} pareto points")
     return out
 
@@ -265,10 +285,10 @@ def limit_query_experiment(sys, blaze: BlazeItBaseline,
                 fastest = pt
     ms_params = (fastest or TunerPoint(params, 0, 0)).params
     t0 = time.time()
-    all_tracks = []
-    for ci, clip in enumerate(clips):
-        r = pl.run_clip(sys.bank, ms_params, clip)
-        all_tracks.append(r.tracks)
+    # extract-all runs the whole query set through the streaming
+    # executor: decode of clip i+1 prefetches during clip i's compute
+    results, _ = run_clips(sys.bank, ms_params, clips)
+    all_tracks = [r.tracks for r in results]
     pre_s = time.time() - t0
     # query over tracks (milliseconds)
     t0 = time.time()

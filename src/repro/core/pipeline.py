@@ -6,16 +6,21 @@ executes θ over a clip, measures real wall time (decode/render cost scales
 with detector resolution, matching the paper's ffmpeg observation), and
 returns extracted tracks.
 
-Execution engines: ``run_clip`` dispatches to the staged CHUNKED engine
-(``repro.core.engine``) by default — frames are decoded and proxy-scored
-in chunks of B frames per dispatch, windows are planned for the whole
-chunk on the host, the detector runs on cross-frame batches grouped by
-size class (batch counts padded to power-of-two buckets so jit
-specializations stay one per (arch, size class, bucket)), and detections
-feed the tracker in frame order with candidate embeddings batched per
-chunk.  ``run_clip_frames`` keeps the strictly per-frame reference path;
-both produce identical tracks (asserted by tests/test_engine.py) and the
-same decode-cost ledger / ``RunResult`` counters.
+Execution engines: ``run_clip`` dispatches to the STREAMING stage-graph
+executor (``repro.core.executor``) by default — frames are decoded and
+proxy-scored in chunks of B frames per dispatch (B = θ's tuner-visible
+``chunk_size``), decode for chunk k+1 prefetches on a background thread
+while chunk k is in proxy/detect, device uploads are double-buffered,
+windows are planned for the whole chunk on the host, the detector runs
+on cross-frame batches grouped by size class (batch counts padded to
+power-of-two buckets so jit specializations stay one per (arch, size
+class, bucket)), and detections feed the tracker in frame order with
+candidate embeddings batched per chunk.  engine="chunked" runs the same
+stages on the sequential scheduler (the PR-1 engine);
+``run_clip_frames`` keeps the strictly per-frame reference path.  All
+engines produce identical tracks (asserted by tests/test_engine.py and
+tests/test_executor.py) and the same decode-cost ledger / ``RunResult``
+counters.
 
 Cell grid convention: the canonical positive-cell grid is the DETECTOR
 resolution divided by ``cell_px`` (16 in the reduced pipeline, 32 at full
@@ -29,6 +34,7 @@ off-TPU), never host-side slice loops.
 """
 from __future__ import annotations
 
+import threading
 import time
 from collections import OrderedDict
 from dataclasses import dataclass, field, replace
@@ -52,26 +58,33 @@ CELL_PX = 16      # detector-grid cell edge at detector resolution (px)
 # frames under many configurations; decode cost must still be CHARGED per
 # run (the paper's decode-at-detector-resolution cost), so every call
 # returns (frame, decode_seconds) and run_clip adds the charged cost to
-# its timing ledger whether or not the pixels came from cache.
+# its timing ledger whether or not the pixels came from cache.  The
+# executor's decode prefetch renders from a background thread, so cache
+# access is locked and the recorded cost is THREAD CPU time (identical
+# to process time in the single-threaded paths, and not polluted by
+# concurrently running stages otherwise).
 _RENDER_CACHE: "OrderedDict[Tuple, Tuple[np.ndarray, float]]" = \
     OrderedDict()
 _RENDER_CACHE_MAX = 4096
+_RENDER_LOCK = threading.Lock()
 
 
 def render_frame(clip: "Clip", f: int, W: int, H: int
                  ) -> Tuple[np.ndarray, float]:
     """-> (frame, charged decode seconds)."""
     key = (clip.profile.name, clip.split, clip.clip_id, f, W, H)
-    hit = _RENDER_CACHE.get(key)
-    if hit is not None:
-        _RENDER_CACHE.move_to_end(key)
-        return hit
-    t0 = time.process_time()
+    with _RENDER_LOCK:
+        hit = _RENDER_CACHE.get(key)
+        if hit is not None:
+            _RENDER_CACHE.move_to_end(key)
+            return hit
+    t0 = time.thread_time()
     frame = clip.render(f, W, H)
-    cost = time.process_time() - t0
-    _RENDER_CACHE[key] = (frame, cost)
-    if len(_RENDER_CACHE) > _RENDER_CACHE_MAX:
-        _RENDER_CACHE.popitem(last=False)
+    cost = time.thread_time() - t0
+    with _RENDER_LOCK:
+        _RENDER_CACHE[key] = (frame, cost)
+        if len(_RENDER_CACHE) > _RENDER_CACHE_MAX:
+            _RENDER_CACHE.popitem(last=False)
     return frame, cost
 
 
@@ -86,13 +99,19 @@ class PipelineParams:
     proxy_threshold: float = 0.5
     tracker: str = "recurrent"                     # recurrent | sort
     refine: bool = True
+    # frames per executor chunk (B); None -> executor.DEFAULT_CHUNK.
+    # Scheduling-only: tracks are bit-identical across B, so the tuner's
+    # scheduler module proposes larger chunks for sparse/skip-heavy θ
+    # purely on runtime.
+    chunk_size: Optional[int] = None
 
     def describe(self) -> str:
         p = "off" if self.proxy_res is None else \
             f"{self.proxy_res[0]}x{self.proxy_res[1]}@{self.proxy_threshold}"
+        b = "" if self.chunk_size is None else f" B={self.chunk_size}"
         return (f"det={self.det_arch}@{self.det_res[0]}x{self.det_res[1]}"
                 f" conf={self.det_conf} gap={self.gap} proxy={p}"
-                f" trk={self.tracker}")
+                f" trk={self.tracker}{b}")
 
 
 @dataclass
@@ -266,16 +285,27 @@ def detect_with_windows(bank: ModelBank, params: PipelineParams,
 
 
 def run_clip(bank: ModelBank, params: PipelineParams, clip: Clip,
-             engine: str = "chunked") -> RunResult:
-    """Execute θ over a clip.  engine: "chunked" (default — the staged
-    cross-frame engine in repro.core.engine) or "frame" (the per-frame
-    reference path); both produce identical tracks and counters."""
+             engine: str = "streaming") -> RunResult:
+    """Execute θ over a clip.  engine:
+
+      * "streaming" (default) — the stage-graph executor in
+        ``repro.core.executor`` with async decode prefetch and
+        double-buffered device uploads;
+      * "chunked"             — the same stage graph on the sequential
+        scheduler (the PR-1 engine);
+      * "frame"               — the strictly per-frame reference path.
+
+    All three produce identical tracks and counters (asserted by
+    tests/test_engine.py and tests/test_executor.py)."""
+    if engine == "streaming":
+        from repro.core.executor import run_clip_streamed
+        return run_clip_streamed(bank, params, clip)
     if engine == "chunked":
         from repro.core.engine import run_clip_chunked
         return run_clip_chunked(bank, params, clip)
     if engine != "frame":
-        raise ValueError(f"unknown engine {engine!r} "
-                         "(expected 'chunked' or 'frame')")
+        raise ValueError(f"unknown engine {engine!r} (expected "
+                         "'streaming', 'chunked' or 'frame')")
     return run_clip_frames(bank, params, clip)
 
 
@@ -296,9 +326,13 @@ def run_clip_frames(bank: ModelBank, params: PipelineParams, clip: Clip
     decode_charged = 0.0
     t0 = time.process_time()
     for f in range(0, clip.n_frames, params.gap):
-        t_r = time.process_time()
+        # thread_time brackets match render_frame's cost clock: a
+        # process_time bracket would also count OTHER threads' CPU
+        # (e.g. a concurrent executor's decode worker) and push the
+        # charge negative
+        t_r = time.thread_time()
         frame, cost = render_frame(clip, f, W, H)   # decode @ det res
-        decode_charged += cost - (time.process_time() - t_r)
+        decode_charged += cost - (time.thread_time() - t_r)
         dets, windows = detect_with_windows(
             bank, params, frame, sizeset, proxy, cfg.windows.max_windows)
         n_windows += len(windows)
@@ -317,7 +351,14 @@ def run_clip_frames(bank: ModelBank, params: PipelineParams, clip: Clip
 
 
 def run_split(bank: ModelBank, params: PipelineParams,
-              clips: Sequence[Clip], engine: str = "chunked"
+              clips: Sequence[Clip], engine: str = "streaming"
               ) -> Tuple[List[RunResult], float]:
+    """Run θ over a whole split.  The streaming engine dispatches the
+    split through ``executor.run_clips`` so clip i+1's decode overlaps
+    clip i's compute (and clips round-robin devices on a multi-device
+    host); other engines run clips back to back."""
+    if engine == "streaming":
+        from repro.core.executor import run_clips
+        return run_clips(bank, params, clips)
     results = [run_clip(bank, params, c, engine=engine) for c in clips]
     return results, sum(r.seconds for r in results)

@@ -83,6 +83,69 @@ def proxy_loss(params, frames, cell_labels, cell: int):
     return (bce * y).sum() / n_pos + (bce * (1 - y)).sum() / n_neg
 
 
+def threshold_sweep(score_grids: Sequence[np.ndarray],
+                    label_grids: Sequence[np.ndarray],
+                    thresholds: Sequence[float]
+                    ) -> List[Tuple[float, float, float]]:
+    """The paper's threshold sweep over CACHED validation score grids.
+
+    For each candidate threshold: cell-level recall of the labelled
+    positive cells (labels = θ_best detections rasterized with
+    ``cells_from_detections``) and the positive-cell rate (the proxy's
+    selectivity — what the window planner actually pays for).  Score
+    grids are computed once per resolution and reused across the whole
+    sweep, so adding thresholds costs microseconds, not proxy runs.
+
+    -> [(threshold, recall, positive_rate)] in input threshold order.
+    """
+    out: List[Tuple[float, float, float]] = []
+    for th in thresholds:
+        covered = total = pos = cells = 0
+        for s, y in zip(score_grids, label_grids):
+            p = s > th
+            lab = y > 0
+            covered += int((p & lab).sum())
+            total += int(lab.sum())
+            pos += int(p.sum())
+            cells += p.size
+        out.append((float(th), covered / max(total, 1),
+                    pos / max(cells, 1)))
+    return out
+
+
+def sweep_candidates(score_grids: Sequence[np.ndarray],
+                     base_thresholds: Sequence[float] = (),
+                     quantiles: Sequence[float] = (0.5, 0.75, 0.9)
+                     ) -> List[float]:
+    """Candidate thresholds for the sweep: the configured menu plus
+    quantiles of the cached score distribution.  Trained proxies
+    concentrate scores far from 0.5, and untrained ones sit in a narrow
+    band around it — quantile candidates keep the sweep meaningful for
+    both instead of evaluating a fixed grid that may be all-positive or
+    all-negative."""
+    flat = np.concatenate([np.asarray(s).ravel() for s in score_grids])
+    qs = [float(np.quantile(flat, q)) for q in quantiles]
+    return sorted({round(float(t), 6) for t in
+                   list(base_thresholds) + qs})
+
+
+def calibrate_threshold(score_grids: Sequence[np.ndarray],
+                        label_grids: Sequence[np.ndarray],
+                        thresholds: Sequence[float] = (),
+                        min_recall: float = 0.95) -> float:
+    """Pick the LARGEST threshold (sparsest positive grids, cheapest
+    window plans) whose cell recall stays >= ``min_recall``; fall back
+    to the best-recall candidate when none reaches the target.  This is
+    the trained-proxy calibration the ROADMAP queued — it replaces the
+    old self-calibration against the untrained score distribution."""
+    cand = sweep_candidates(score_grids, thresholds)
+    sweep = threshold_sweep(score_grids, label_grids, cand)
+    ok = [th for th, recall, _ in sweep if recall >= min_recall]
+    if ok:
+        return max(ok)
+    return max(sweep, key=lambda e: (e[1], e[0]))[0]
+
+
 def cells_from_detections(dets: np.ndarray, hc: int, wc: int
                           ) -> np.ndarray:
     """Label a cell 1 if any detection box INTERSECTS it (paper wording).

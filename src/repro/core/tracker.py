@@ -560,15 +560,20 @@ class RecurrentTracker:
                 if len(t.frames) >= self.min_hits]
 
 
-def crop_embed_chunk(params, cfg: TrackerConfig,
+def embed_dets_chunk(params, cfg: TrackerConfig,
                      frames: Sequence[np.ndarray],
-                     dets_per_frame: Sequence[np.ndarray]
-                     ) -> List[np.ndarray]:
+                     dets_per_frame: Sequence[np.ndarray],
+                     min_bucket: int = 8) -> List[np.ndarray]:
     """Run the crop CNN over every detection in a CHUNK in one
-    bucket-padded ``crop_embed`` dispatch (the chunked engine's stage 4
+    bucket-padded ``crop_embed`` dispatch (the executor's TRACK-stage
     batching).  Returns per-frame (n_i, embed_dim) crop embeddings,
     bit-identical to per-frame ``RecurrentTracker.step`` computation
-    (conv outputs are per-sample independent of batch padding)."""
+    (conv outputs are per-sample independent of batch padding).
+
+    ``min_bucket`` is the bucket floor; the executor scales it with the
+    chunk size B so the set of distinct power-of-two buckets — and with
+    it the number of ``crop_embed`` jit specializations — stays bounded
+    as the tuner proposes larger chunks."""
     C = cfg.crop
     counts = [len(d) for d in dets_per_frame]
     total = sum(counts)
@@ -576,7 +581,7 @@ def crop_embed_chunk(params, cfg: TrackerConfig,
         return [np.zeros((0, cfg.embed_dim), np.float32)
                 for _ in counts]
     from repro.core.detector import next_bucket
-    npad = next_bucket(total, min_bucket=8)
+    npad = next_bucket(total, min_bucket=min_bucket)
     crops = np.zeros((npad, C, C, 3), np.float32)
     k = 0
     for frame, dets in zip(frames, dets_per_frame):
@@ -590,3 +595,7 @@ def crop_embed_chunk(params, cfg: TrackerConfig,
         out.append(x[k:k + n])
         k += n
     return out
+
+
+# PR-1 name for ``embed_dets_chunk`` (same signature, kept for compat)
+crop_embed_chunk = embed_dets_chunk

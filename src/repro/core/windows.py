@@ -178,9 +178,18 @@ class ChunkPlan:
 
 
 def plan_chunk(grids: Sequence[np.ndarray], sizeset: SizeSet,
-               max_windows: int = 8) -> ChunkPlan:
+               max_windows: int = 8,
+               chunk_size: Optional[int] = None) -> ChunkPlan:
     """Plan windows for a whole chunk of positive-cell grids on the host,
-    grouping same-size windows across frames for batched execution."""
+    grouping same-size windows across frames for batched execution.
+
+    ``chunk_size`` is the executor's (tuner-visible) B: a plan never
+    spans more frames than one chunk, and frame slots index into the
+    chunk's (B, H, W, 3) buffer — passing it catches mismatched
+    plumbing early instead of as a silent bad gather."""
+    if chunk_size is not None and len(grids) > chunk_size:
+        raise ValueError(f"planning {len(grids)} frames into a chunk "
+                         f"of {chunk_size}")
     per_frame = [group_cells(g, sizeset, max_windows) for g in grids]
     by_size: Dict[Size, List[Tuple[int, int, int, int]]] = {}
     for slot, wins in enumerate(per_frame):

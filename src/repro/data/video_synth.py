@@ -23,6 +23,7 @@ boxes (for MOTA).
 from __future__ import annotations
 
 import math
+import threading
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -141,11 +142,14 @@ class TrackGT:
 
 # static background layers, one per (clip, resolution) — tiny and reused
 # by every frame of a clip (the tuner re-renders the same clips at many
-# resolutions, hence the cap)
+# resolutions, hence the cap).  The executor's decode workers render
+# concurrently (one thread per in-flight clip), so mutations are locked;
+# values are deterministic per key, so racing lookups at worst recompute.
 _BG_CACHE: Dict[Tuple, np.ndarray] = {}
 _BG_CACHE_MAX = 256
 _COLOR_CACHE: Dict[Tuple, np.ndarray] = {}
 _COLOR_CACHE_MAX = 8192
+_CACHE_LOCK = threading.Lock()
 
 
 @dataclass
@@ -190,7 +194,8 @@ class Clip:
         object draws and per-frame noise are all full-frame)."""
         key = (self.profile.name, self.split, self.clip_id, width,
                height)
-        bg = _BG_CACHE.get(key)
+        with _CACHE_LOCK:
+            bg = _BG_CACHE.get(key)
         if bg is not None:
             return bg
         brng = _rng(self.profile.name, self.split, self.clip_id, 3, 0)
@@ -206,22 +211,25 @@ class Clip:
             w, h = brng.uniform(0.04, 0.16, 2)
             col = brng.uniform(0.2, 0.8, 3).astype(np.float32)
             _draw_rect(bg, cx, cy, w, h, col, fill=0.6)
-        _BG_CACHE[key] = bg
-        if len(_BG_CACHE) > _BG_CACHE_MAX:
-            _BG_CACHE.pop(next(iter(_BG_CACHE)))
+        with _CACHE_LOCK:
+            _BG_CACHE[key] = bg
+            if len(_BG_CACHE) > _BG_CACHE_MAX:
+                _BG_CACHE.pop(next(iter(_BG_CACHE)))
         return bg
 
     def _track_color(self, tid: int) -> np.ndarray:
         key = (self.profile.name, self.split, self.clip_id, tid)
-        col = _COLOR_CACHE.get(key)
+        with _CACHE_LOCK:
+            col = _COLOR_CACHE.get(key)
         if col is None:
             crng = _rng(self.profile.name, self.split, self.clip_id, 11,
                         tid)
             col = crng.uniform(0.0, 1.0, 3).astype(np.float32)
             col[tid % 3] = 1.0               # saturated channel
-            _COLOR_CACHE[key] = col
-            if len(_COLOR_CACHE) > _COLOR_CACHE_MAX:
-                _COLOR_CACHE.pop(next(iter(_COLOR_CACHE)))
+            with _CACHE_LOCK:
+                _COLOR_CACHE[key] = col
+                if len(_COLOR_CACHE) > _COLOR_CACHE_MAX:
+                    _COLOR_CACHE.pop(next(iter(_COLOR_CACHE)))
         return col
 
     def render(self, frame: int, width: int, height: int) -> np.ndarray:

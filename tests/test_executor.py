@@ -1,0 +1,210 @@
+"""Equivalence tests for the streaming clip executor: bit-identical
+tracks and decode-ledger counters vs the per-frame reference path for
+every chunk size / scheduler / prefetch setting, plus the tuner's
+chunk-size (scheduler module) proposal path."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.multiscope import MULTISCOPE_PIPELINE
+from repro.core import pipeline as pl
+from repro.core import tuner as tuner_mod
+from repro.core.executor import (DEFAULT_CHUNK, ClipExecutor,
+                                 ExecutorOptions, effective_chunk,
+                                 run_clip_streamed, run_clips)
+from repro.core.proxy import ProxyModel
+from repro.core.tracker import init_tracker
+from repro.core.train_models import train_detector
+from repro.data.video_synth import make_split
+
+
+@pytest.fixture(scope="module")
+def exec_bank():
+    cfg = MULTISCOPE_PIPELINE.reduced()
+    clips = make_split("caldot1", "train", 2, n_frames=24)
+    det, _ = train_detector("ssd-lite", clips,
+                            [cfg.detector.resolutions[-1]], steps=60)
+    bank = pl.ModelBank(cfg, {"ssd-lite": det, "ssd-deep": det})
+    res = cfg.proxy.resolutions[-1]
+    proxy = ProxyModel(cfg.proxy.cell, cfg.proxy.base_channels, res)
+    bank.proxies = {res: proxy}
+    bank.sizes_cells = [pl.det_grid(cfg.detector.resolutions[-1]),
+                        (3, 2), (5, 3)]
+    bank.ref_grid = pl.det_grid(cfg.detector.resolutions[-1])
+    bank.tracker_params = init_tracker(cfg.tracker)
+    # a threshold just above the untrained proxy's score median makes
+    # the positive-cell grid SPARSE, so planning emits real sub-frame
+    # windows (the interesting path for the gather/upload machinery)
+    W, H = cfg.detector.resolutions[-1]
+    frame, _ = pl.render_frame(clips[0], 0, W, H)
+    s, _ = proxy.scores(pl._downsample(frame, res))
+    return bank, clips, res, float(np.quantile(s, 0.85))
+
+
+def _assert_same(a, b):
+    """Tracks bit-identical; decode-ledger counters equal."""
+    assert a.frames_processed == b.frames_processed
+    assert a.detector_windows == b.detector_windows
+    assert a.full_frames == b.full_frames
+    assert a.skipped_frames == b.skipped_frames
+    assert len(a.tracks) == len(b.tracks)
+    for x, y in zip(a.tracks, b.tracks):
+        np.testing.assert_array_equal(x, y)
+
+
+def _params(bank, res, th, **kw):
+    base = dict(det_arch="ssd-lite",
+                det_res=bank.cfg.detector.resolutions[-1],
+                det_conf=0.4, gap=1, proxy_res=res, proxy_threshold=th,
+                tracker="sort", refine=False)
+    base.update(kw)
+    return pl.PipelineParams(**base)
+
+
+# 24-frame clips at gap=1: B=1 degenerates to per-frame chunks, B=7
+# leaves a trailing partial chunk of 3, B=16 leaves one of 8, B=33
+# exceeds the clip (single partial chunk)
+@pytest.mark.parametrize("chunk", [1, 7, 16, 33])
+@pytest.mark.parametrize("prefetch", [False, True])
+def test_executor_equivalence_chunk_sizes(exec_bank, chunk, prefetch):
+    bank, clips, res, th = exec_bank
+    params = _params(bank, res, th, chunk_size=chunk)
+    opts = ExecutorOptions(prefetch=prefetch)
+    for clip in clips:
+        _assert_same(pl.run_clip_frames(bank, params, clip),
+                     run_clip_streamed(bank, params, clip, opts))
+
+
+def test_executor_prefetch_recurrent(exec_bank):
+    """The recurrent tracker under the streaming scheduler: chunked
+    crop embeddings + prefetch must reproduce the per-frame path
+    bit-exactly."""
+    bank, clips, res, th = exec_bank
+    params = _params(bank, res, th, tracker="recurrent")
+    for clip in clips:
+        _assert_same(pl.run_clip_frames(bank, params, clip),
+                     run_clip_streamed(bank, params, clip))
+
+
+def test_executor_empty_detections_clip(exec_bank):
+    """Impossible proxy threshold: every frame skipped, zero detections
+    anywhere — the executor must agree with the reference on the empty
+    case too (no stray uploads, no tracker steps with stale state)."""
+    bank, clips, res, _ = exec_bank
+    params = _params(bank, res, 0.9999999, gap=2, chunk_size=7)
+    r = run_clip_streamed(bank, params, clips[0])
+    assert r.skipped_frames == r.frames_processed
+    assert all(len(t) == 0 for t in r.tracks)
+    _assert_same(pl.run_clip_frames(bank, params, clips[0]), r)
+
+
+def test_executor_run_clips_matches_per_clip(exec_bank):
+    """The multi-clip sweep (cross-clip decode prefetch, per-clip device
+    offsets) returns exactly the per-clip results in order."""
+    bank, clips, res, th = exec_bank
+    params = _params(bank, res, th, tracker="recurrent")
+    results, total = run_clips(bank, params, clips)
+    assert len(results) == len(clips)
+    for clip, r in zip(clips, results):
+        _assert_same(pl.run_clip_frames(bank, params, clip), r)
+    assert total == pytest.approx(sum(r.seconds for r in results))
+
+
+def test_executor_mesh_sharded_upload(exec_bank):
+    """Chunk uploads through LogicalRules mesh sharding (batch axis on
+    the data axis) stay bit-identical."""
+    from repro.launch.mesh import make_host_mesh
+    bank, clips, res, th = exec_bank
+    params = _params(bank, res, th)
+    opts = ExecutorOptions(mesh=make_host_mesh(1, 1))
+    _assert_same(pl.run_clip_frames(bank, params, clips[0]),
+                 run_clip_streamed(bank, params, clips[0], opts))
+
+
+def test_run_clip_streaming_dispatch(exec_bank):
+    """pipeline.run_clip routes to the streaming executor by default;
+    all three engines agree."""
+    bank, clips, res, th = exec_bank
+    params = _params(bank, res, th, gap=2)
+    a = pl.run_clip(bank, params, clips[0])
+    _assert_same(a, pl.run_clip(bank, params, clips[0],
+                                engine="chunked"))
+    _assert_same(a, pl.run_clip(bank, params, clips[0], engine="frame"))
+    with pytest.raises(ValueError):
+        pl.run_clip(bank, params, clips[0], engine="nope")
+
+
+def test_executor_stage_failure_propagates(exec_bank):
+    """A stage exception mid-stream must propagate promptly: the decode
+    worker is blocked in q.put on the full bounded queue when the
+    failure hits, and drain has to unblock it before re-raising (a bare
+    join would deadlock forever)."""
+    bank, clips, res, th = exec_bank
+    params = _params(bank, res, th, chunk_size=1)   # chunks >> depth
+
+    def boom(ctx, task):
+        raise RuntimeError("detect failed")
+
+    ex = ClipExecutor(bank, params, ExecutorOptions(prefetch=True),
+                      stages={"detect": boom})
+    with pytest.raises(RuntimeError, match="detect failed"):
+        ex.run(clips[0])
+
+
+def test_executor_cancel_releases_started_run(exec_bank):
+    """run_clips starts clip i+1's decode ahead; an abandoned run must
+    be cancellable without draining it (its worker would otherwise
+    block forever holding decoded chunks)."""
+    bank, clips, res, th = exec_bank
+    params = _params(bank, res, th, chunk_size=1)
+    ex = ClipExecutor(bank, params, ExecutorOptions(prefetch=True))
+    run = ex.start(clips[0])
+    ex.cancel(run)                       # must return, not hang
+    _, worker_thread, _, _ = run.handle
+    assert not worker_thread.is_alive()
+
+
+def test_effective_chunk_resolution():
+    p = pl.PipelineParams("ssd-lite", (128, 80), 0.4)
+    assert effective_chunk(p) == DEFAULT_CHUNK
+    assert effective_chunk(dataclasses.replace(p, chunk_size=32)) == 32
+    assert effective_chunk(dataclasses.replace(p, chunk_size=32),
+                           override=8) == 8
+
+
+# ---------------------------------------------------------------------------
+# The tuner's scheduler module (chunk-size proposals)
+# ---------------------------------------------------------------------------
+
+def test_tuner_chunk_proposal_gating():
+    p = pl.PipelineParams("ssd-lite", (128, 80), 0.4, gap=1)
+    # dense full-frame θ: nothing to amortize
+    assert tuner_mod.propose_chunk(p) is None
+    # sparse θ (gap >= 2): double B from the default
+    sparse = dataclasses.replace(p, gap=4)
+    c = tuner_mod.propose_chunk(sparse)
+    assert c is not None and c.chunk_size == 2 * DEFAULT_CHUNK
+    # proxy-gated θ proposes too
+    gated = dataclasses.replace(p, proxy_res=(32, 24))
+    assert tuner_mod.propose_chunk(gated).chunk_size == 2 * DEFAULT_CHUNK
+    # doubling continues from θ's current B and stops at the ceiling
+    c2 = tuner_mod.propose_chunk(dataclasses.replace(sparse,
+                                                     chunk_size=32))
+    assert c2.chunk_size == 64
+    assert tuner_mod.propose_chunk(
+        dataclasses.replace(sparse, chunk_size=64)) is None
+
+
+def test_tuner_chunk_proposal_accuracy_neutral(exec_bank):
+    """The chunk-size-tuning path end to end: a scheduler-module
+    candidate evaluated through the tuner must reproduce the current
+    θ's accuracy exactly (tracks are bit-identical across B), so it can
+    only ever win on the runtime tiebreak."""
+    bank, clips, res, th = exec_bank
+    cur = _params(bank, res, th, gap=2)
+    cand = tuner_mod.propose_chunk(cur)
+    assert cand is not None and cand != cur
+    acc_cur, _ = tuner_mod._evaluate(bank, cur, clips)
+    acc_cand, _ = tuner_mod._evaluate(bank, cand, clips)
+    assert acc_cand == pytest.approx(acc_cur, abs=0)

@@ -80,6 +80,40 @@ def test_cells_from_detections_intersection_semantics():
     assert grid.sum() >= 9                                # 3x3 at least
 
 
+def test_proxy_threshold_sweep_and_calibration():
+    """The paper's threshold sweep over cached score grids: recall and
+    positive rate fall monotonically with the threshold, and
+    calibration picks the LARGEST (sparsest) threshold meeting the
+    recall target."""
+    from repro.core.proxy import (calibrate_threshold, sweep_candidates,
+                                  threshold_sweep)
+    rng = np.random.default_rng(0)
+    score_grids, label_grids = [], []
+    for _ in range(8):
+        lab = (rng.random((6, 8)) < 0.2).astype(np.int8)
+        # a decent proxy: labelled cells score visibly higher
+        s = rng.random((6, 8)) * 0.4 + lab * 0.5
+        score_grids.append(s.astype(np.float32))
+        label_grids.append(lab)
+    ths = [0.1, 0.3, 0.45, 0.6, 0.95]
+    sweep = threshold_sweep(score_grids, label_grids, ths)
+    recalls = [r for _, r, _ in sweep]
+    rates = [p for _, _, p in sweep]
+    assert recalls == sorted(recalls, reverse=True)
+    assert rates == sorted(rates, reverse=True)
+    assert recalls[0] == 1.0 and recalls[-1] < 0.5
+    th = calibrate_threshold(score_grids, label_grids, ths,
+                             min_recall=0.95)
+    ok = [t for t, r, _ in threshold_sweep(
+        score_grids, label_grids,
+        sweep_candidates(score_grids, ths)) if r >= 0.95]
+    assert th == max(ok)
+    # unreachable target falls back to the best-recall candidate
+    lo = calibrate_threshold(score_grids, label_grids, [0.99],
+                             min_recall=0.999)
+    assert lo <= th
+
+
 def test_serving_engine_greedy_deterministic():
     import jax.numpy as jnp
     from repro.configs import get_config
