@@ -1,0 +1,196 @@
+"""Track-store query benchmark: extract-once-serve-many in numbers.
+
+Measures the three quantities the query subsystem promises
+(``repro.query``):
+
+  * **cold ingest** — fps of materializing the workload's clips into a
+    ``TrackStore`` through the streaming executor (paid once per θ);
+  * **warm query latency** — median milliseconds per query against the
+    warm store, per query shape (limit / count / duration / tracks);
+    asserted < 1% of the cold ingest time;
+  * **throughput** — queries/sec with N concurrent clients hammering
+    one ``QueryService``.
+
+Also asserted on every run: re-ingesting a materialized split performs
+ZERO detector dispatches, and the store-served limit query returns
+exactly the frames of the original inline scan (the pre-store
+``limit_query_experiment`` loop, replicated here as the reference).
+
+    PYTHONPATH=src python -m benchmarks.query_bench [--smoke]
+
+Emits ``BENCH_query.json`` (CI uploads it as a workflow artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import threading
+import time
+from typing import Dict, List
+
+import numpy as np
+
+DEFAULT_OUT = "BENCH_query.json"
+
+REGION = (0.0, 0.5, 1.0, 1.0)           # bottom half (the Table-2 query)
+MIN_COUNT = 2
+WANT = 8
+
+
+def run(out_path: str | None = DEFAULT_OUT, reps: int = 30,
+        clients: int = 4, smoke: bool = False) -> dict:
+    from benchmarks.pipeline_bench import build_workload
+    from repro.query import QueryService, TrackStore
+
+    if smoke:
+        bank, params, clips = build_workload(n_clips=2, n_frames=24,
+                                             train_steps=60,
+                                             proxy_steps=40)
+        reps = min(reps, 10)
+    else:
+        bank, params, clips = build_workload(n_clips=6, n_frames=48)
+    det = bank.detectors[params.det_arch]
+    fps_clip = clips[0].profile.fps
+    spacing = 2 * fps_clip
+
+    root = tempfile.mkdtemp(prefix="query_bench_")
+    store = TrackStore(root, bank, params)
+    service = QueryService(store)
+
+    try:
+        return _measure(det, store, service, clips, reps, clients,
+                        smoke, spacing, params, out_path)
+    finally:
+        import shutil
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def _measure(det, store, service, clips, reps, clients, smoke, spacing,
+             params, out_path) -> dict:
+    from repro.query import Query, TimeRange
+    from repro.query.ref import reference_limit_scan
+
+    # -- cold ingest ----------------------------------------------------------
+    report = service.warm(clips)
+    assert report.ingested == len(clips)
+    cold_s = report.wall_seconds
+
+    # -- re-ingest: zero model work on a warm split ---------------------------
+    calls_before = det.dispatches
+    report2 = service.warm(clips)
+    assert report2.ingested == 0 and det.dispatches == calls_before, \
+        "re-ingest of a materialized split touched the detector"
+
+    # -- correctness: store-served limit query == inline reference scan ------
+    q_limit = Query.limit_frames(region=REGION, min_count=MIN_COUNT,
+                                 want=WANT, min_spacing=spacing)
+    served = service.query(q_limit, clips)
+    reference = reference_limit_scan(
+        [store.tracks(c) for c in clips], WANT, MIN_COUNT, REGION,
+        spacing)
+    identical = served.frames == reference
+    assert identical, (served.frames, reference)
+
+    # -- warm query latency per query shape -----------------------------------
+    queries = {
+        "limit": q_limit,
+        "count": Query.count_frames(region=REGION, min_count=MIN_COUNT),
+        "duration": Query.duration(region=REGION),
+        "tracks": Query.count_tracks(
+            time_range=TimeRange(0, clips[0].n_frames)),
+    }
+    latency_ms: Dict[str, float] = {}
+    for name, q in queries.items():
+        times = []
+        for _ in range(reps):
+            r = service.query(q, clips)
+            assert r.stats.ingested_clips == 0
+            times.append(r.stats.total_seconds)
+        latency_ms[name] = float(np.median(times) * 1e3)
+    warm_worst_s = max(latency_ms.values()) / 1e3
+
+    # -- concurrent clients ---------------------------------------------------
+    per_client = reps
+    errs: List[BaseException] = []
+
+    def client(k: int):
+        try:
+            names = list(queries)
+            for i in range(per_client):
+                q = queries[names[(k + i) % len(names)]]
+                r = service.query(q, clips)
+                assert r.stats.ingested_clips == 0
+        except BaseException as exc:     # surfaced after join
+            errs.append(exc)
+
+    threads = [threading.Thread(target=client, args=(k,))
+               for k in range(clients)]
+    t0 = time.perf_counter()
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    conc_wall = time.perf_counter() - t0
+    if errs:
+        raise errs[0]
+    qps = clients * per_client / conc_wall
+
+    warm_over_cold = warm_worst_s / cold_s if cold_s > 0 else 0.0
+    result = {
+        "benchmark": "track_store_query",
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "workload": {
+            "profile": "caldot1", "clips": len(clips),
+            "frames_per_clip": int(clips[0].n_frames),
+            "params": params.describe(), "reps": reps,
+            "clients": clients, "smoke": smoke,
+        },
+        "store_fingerprint": store.fingerprint,
+        "cold_ingest_seconds": cold_s,
+        "cold_ingest_fps": report.fps,
+        "reingest_detector_calls": det.dispatches - calls_before,
+        "warm_query_ms": latency_ms,
+        "warm_over_cold_ratio": warm_over_cold,
+        "queries_per_second": qps,
+        "limit_query_identical_to_inline_scan": bool(identical),
+    }
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=2)
+            f.write("\n")
+    assert warm_over_cold < 0.01, \
+        f"warm query {warm_worst_s * 1e3:.1f}ms is not <1% of cold " \
+        f"ingest {cold_s:.2f}s"
+    return result
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help=f"output JSON path (default {DEFAULT_OUT})")
+    ap.add_argument("--reps", type=int, default=30)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload (CI correctness gate)")
+    args = ap.parse_args(argv)
+    out = args.out if args.out is not None else DEFAULT_OUT
+    r = run(out, reps=args.reps, clients=args.clients, smoke=args.smoke)
+    print(f"cold ingest      : {r['cold_ingest_seconds']:8.2f}s "
+          f"({r['cold_ingest_fps']:.1f} fps)")
+    for name, ms in r["warm_query_ms"].items():
+        print(f"warm {name:8s}    : {ms:8.3f} ms")
+    print(f"warm/cold ratio  : {r['warm_over_cold_ratio']:8.5f} "
+          f"(asserted < 0.01)")
+    print(f"throughput       : {r['queries_per_second']:8.1f} q/s "
+          f"at {r['workload']['clients']} clients")
+    print(f"re-ingest det calls: {r['reingest_detector_calls']} "
+          f"(asserted 0)")
+    print(f"identical to inline scan: "
+          f"{r['limit_query_identical_to_inline_scan']}")
+    if out:
+        print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

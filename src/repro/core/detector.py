@@ -225,6 +225,9 @@ class Detector:
         self.arch = arch
         self.params = params if params is not None else init_detector(
             arch, seed)
+        # dispatch counter: the track store's re-ingest guarantee
+        # ("zero detector calls on a warm split") is asserted against it
+        self.dispatches = 0
 
     def detect_batch(self, frames: np.ndarray, conf: float,
                      origins=None, scales=None, max_dets: int = 64,
@@ -234,6 +237,7 @@ class Detector:
         origins/scales: per-frame window placement (see
         decode_detections); default full frame.  n_valid: decode only the
         first n_valid rows (the rest are bucket padding)."""
+        self.dispatches += 1
         scores, boxes = _detect_scores(self.params,
                                        jnp.asarray(frames), self.arch)
         scores = np.asarray(scores)

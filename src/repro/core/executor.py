@@ -99,6 +99,16 @@ class ExecutorOptions:
                          chunk k is in proxy/detect/track;
     ``prefetch_depth`` — max decoded chunks in flight (bounds host and
                          device memory);
+    ``decode_workers`` — size of the decode worker pool per run
+                         (default 1: the single implicit thread).  With
+                         N > 1 workers, chunks decode concurrently and
+                         a reorder gate hands them to the compute
+                         thread strictly in chunk order, so TRACK stays
+                         frame-ordered and tracks stay bit-identical;
+                         in-flight decoded chunks are bounded by
+                         ``prefetch_depth + decode_workers`` (queue
+                         plus at most one chunk held per worker at the
+                         gate);
     ``double_buffer``  — upload ``frames_dev`` in the decode worker so
                          the copy overlaps the previous chunk's
                          detector work (only when a proxy is active:
@@ -113,6 +123,7 @@ class ExecutorOptions:
     """
     prefetch: bool = True
     prefetch_depth: int = 2
+    decode_workers: int = 1
     double_buffer: bool = True
     devices: Optional[Sequence] = None
     mesh: Optional[object] = None
@@ -364,49 +375,87 @@ class SequentialScheduler:
 
 
 class StreamingScheduler:
-    """DECODE runs ahead on a background thread with a bounded hand-off
-    queue; PROXY/DETECT/TRACK run on the draining thread in chunk order
-    (the queue preserves it, so TRACK stays frame-ordered)."""
+    """DECODE runs ahead on a pool of ``workers`` background threads
+    with a bounded hand-off queue; PROXY/DETECT/TRACK run on the
+    draining thread in chunk order.
 
-    def __init__(self, depth: int = 2):
+    With one worker the queue itself preserves chunk order.  With a
+    pool, workers claim chunk indices from a shared iterator and a
+    reorder gate admits each decoded chunk to the queue only when every
+    earlier chunk has been enqueued — so the draining thread (and with
+    it TRACK) still sees chunks strictly in frame order, and tracks
+    stay bit-identical to the single-thread schedule for any pool size
+    (tests/test_executor.py).  A worker holds at most one decoded chunk
+    while waiting at the gate, so in-flight host memory is bounded by
+    ``depth + workers`` chunks."""
+
+    def __init__(self, depth: int = 2, workers: int = 1):
         self.depth = max(1, int(depth))
+        self.workers = max(1, int(workers))
 
     def start(self, ctx: _RunContext, tasks: List[ChunkTask],
               stages: Dict[str, Callable]):
         q: "queue.Queue" = queue.Queue(maxsize=self.depth)
         stop = threading.Event()
+        it = iter(enumerate(tasks))
+        it_lock = threading.Lock()
+        gate = threading.Condition()
+        state = {"next": 0, "failed": False}
 
         def worker():
-            try:
-                for task in tasks:
-                    if stop.is_set():
-                        break
-                    q.put(stages["decode"](ctx, task))
-            except BaseException as exc:      # surfaced by drain()
-                q.put(_WorkerFailure(exc))
+            while not stop.is_set():
+                with it_lock:
+                    nxt = next(it, None)
+                if nxt is None:
+                    return
+                i, task = nxt
+                try:
+                    decoded = stages["decode"](ctx, task)
+                except BaseException as exc:    # surfaced by drain()
+                    with gate:
+                        state["failed"] = True
+                        gate.notify_all()
+                    q.put(_WorkerFailure(exc))
+                    return
+                with gate:
+                    while state["next"] != i and not stop.is_set() \
+                            and not state["failed"]:
+                        gate.wait(0.05)
+                    if stop.is_set() or state["failed"]:
+                        return
+                # this chunk's turn: the bounded put happens outside the
+                # gate (it may block on a full queue), and successors
+                # cannot pass until "next" advances below
+                q.put(decoded)
+                with gate:
+                    state["next"] += 1
+                    gate.notify_all()
 
-        th = threading.Thread(target=worker, daemon=True,
-                              name="multiscope-decode")
-        th.start()
-        return q, th, len(tasks), stop
+        threads = [threading.Thread(target=worker, daemon=True,
+                                    name=f"multiscope-decode-{k}")
+                   for k in range(min(self.workers, max(len(tasks), 1)))]
+        for th in threads:
+            th.start()
+        return q, threads, len(tasks), stop
 
     def cancel(self, ctx: _RunContext, handle) -> None:
-        """Stop the decode worker and discard whatever it produced.
-        The worker may be blocked in ``q.put`` on the full bounded
-        queue, so keep consuming until it exits — a bare ``join`` would
-        deadlock."""
-        q, th, _, stop = handle
+        """Stop the decode workers and discard whatever they produced.
+        A worker may be blocked in ``q.put`` on the full bounded queue,
+        so keep consuming until every thread exits — a bare ``join``
+        would deadlock.  (Gate waiters poll ``stop`` on a timeout.)"""
+        q, threads, _, stop = handle
         stop.set()
-        while th.is_alive():
+        while any(th.is_alive() for th in threads):
             try:
                 q.get(timeout=0.05)
             except queue.Empty:
                 pass
-        th.join()
+        for th in threads:
+            th.join()
 
     def drain(self, ctx: _RunContext, handle,
               stages: Dict[str, Callable]) -> None:
-        q, th, n, _ = handle
+        q, threads, n, _ = handle
         try:
             for _ in range(n):
                 item = q.get()
@@ -416,11 +465,12 @@ class StreamingScheduler:
                 for name in STAGES[1:]:
                     task = stages[name](ctx, task)
         except BaseException:
-            # a stage failed mid-stream: unblock the producer before
-            # propagating, or its q.put on the full queue never returns
+            # a stage failed mid-stream: unblock the producers before
+            # propagating, or a q.put on the full queue never returns
             self.cancel(ctx, handle)
             raise
-        th.join()
+        for th in threads:
+            th.join()
 
 
 # ---------------------------------------------------------------------------
@@ -456,7 +506,8 @@ class ClipExecutor:
         if scheduler is not None:
             self.scheduler = scheduler
         elif self.options.prefetch:
-            self.scheduler = StreamingScheduler(self.options.prefetch_depth)
+            self.scheduler = StreamingScheduler(
+                self.options.prefetch_depth, self.options.decode_workers)
         else:
             self.scheduler = SequentialScheduler()
 
@@ -508,12 +559,15 @@ def run_clips(bank: ModelBank, params: PipelineParams,
     """Multi-clip sweep (the experiment driver's test-split loop).
 
     Clips are independent through DETECT, so with prefetch enabled clip
-    i+1's decode worker is started while clip i is still draining, and
+    i+1's decode workers are started while clip i is still draining, and
     each clip's chunks round-robin the device list from a per-clip
     offset — on a multi-device mesh, consecutive clips land on
-    different devices.  TRACK state never crosses clips, and per-clip
-    seconds keep the process-time + ledger semantics (decode CPU spent
-    early is counted once, in whichever window it ran)."""
+    different devices.  ``options.decode_workers`` pins the decode pool
+    size PER ACTIVE RUN (at most two runs are in flight here, so total
+    decode threads are bounded by ``2 * decode_workers``).  TRACK state
+    never crosses clips, and per-clip seconds keep the process-time +
+    ledger semantics (decode CPU spent early is counted once, in
+    whichever window it ran)."""
     opts = options or ExecutorOptions()
     ex = ClipExecutor(bank, params, opts)
     results: List[RunResult] = []

@@ -35,14 +35,15 @@ def resample_track(boxes: np.ndarray, n: int) -> np.ndarray:
     if total <= 0:
         return np.repeat(pts[:1], n, axis=0)
     targets = np.linspace(0.0, total, n)
-    out = np.empty((n, 2))
-    j = 0
-    for i, d in enumerate(targets):
-        while j < len(seg) - 1 and cum[j + 1] < d:
-            j += 1
-        u = 0.0 if seg[j] == 0 else (d - cum[j]) / seg[j]
-        out[i] = pts[j] * (1 - u) + pts[j + 1] * u
-    return out
+    # per-target segment index: j = #{k in [1, len(seg)-1] : cum[k] < d}
+    # (what the old scan loop computed), one vectorized searchsorted
+    # over the cumulative arc length; outputs are bit-identical because
+    # the interpolation arithmetic below is unchanged
+    j = np.searchsorted(cum[1:len(seg)], targets, side="left")
+    segj = seg[j]
+    with np.errstate(divide="ignore", invalid="ignore"):
+        u = np.where(segj == 0.0, 0.0, (targets - cum[j]) / segj)
+    return pts[j] * (1.0 - u)[:, None] + pts[j + 1] * u[:, None]
 
 
 def track_distance(a: np.ndarray, b: np.ndarray) -> float:

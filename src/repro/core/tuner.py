@@ -154,7 +154,6 @@ def setup(cfg: PipelineConfig, train_clips: Sequence[Clip],
     train_dets: List[Tuple[Clip, int, np.ndarray]] = []
     train_tracks: List[np.ndarray] = []
     tracks_by_clip: List[Tuple[Clip, List[np.ndarray]]] = []
-    frame_cache: Dict[Tuple[int, int], np.ndarray] = {}
     det = bank.detectors[theta_best.det_arch]
     for clip in train_clips:
         res = pl.run_clip(bank, theta_best, clip)
@@ -219,11 +218,10 @@ def setup(cfg: PipelineConfig, train_clips: Sequence[Clip],
     t0 = time.process_time()
 
     def frame_getter_for(clip):
+        # goes through the bounded LRU render cache instead of an
+        # unbounded per-setup dict (same fix as experiment.run_dataset)
         def get(f):
-            key = (id(clip), f)
-            if key not in frame_cache:
-                frame_cache[key] = clip.render(f, *theta_best.det_res)
-            return frame_cache[key]
+            return pl.render_frame(clip, f, *theta_best.det_res)[0]
         return get
 
     examples = []

@@ -1,0 +1,25 @@
+"""Exploratory query subsystem: pre-process once, query many.
+
+MultiScope's serving story (§1, §4.2): the pipeline extracts tracks from
+a dataset ONCE, and an open-ended stream of analyst queries is answered
+from the materialized tracks in milliseconds — the detector is never
+touched again for a warm clip.
+
+  * ``store``   — ``TrackStore``: persistent, versioned materialization
+    of ``executor.run_clips`` outputs, keyed by
+    (dataset, clip, θ-fingerprint), with incremental ingest;
+  * ``ops``     — composable query operators (spatial regions, temporal
+    ranges, per-frame count predicates, track filters, limit-N,
+    aggregations);
+  * ``plan``    — compiles a ``Query`` into a vectorized numpy plan
+    over the store's packed track arrays;
+  * ``service`` — ``QueryService``: thread-safe concurrent queries with
+    transparent ingest of cold clips and per-query latency accounting
+    (ingest vs scan).
+"""
+from repro.query.ops import (CountAtLeast, Limit, Query, Region,  # noqa: F401
+                             TimeRange, TrackFilter)
+from repro.query.plan import CompiledPlan, QueryResult, compile_query  # noqa: F401
+from repro.query.service import QueryService, QueryStats  # noqa: F401
+from repro.query.store import (IngestReport, PackedTracks,  # noqa: F401
+                               TrackStore, theta_fingerprint)

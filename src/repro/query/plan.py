@@ -1,0 +1,190 @@
+"""Query compilation + vectorized execution over packed track arrays.
+
+``compile_query`` folds a ``Query``'s operator conjunction into one
+``CompiledPlan`` (regions intersect, time ranges intersect, track
+filters merge, count thresholds take the max), and the plan scans each
+clip's ``PackedTracks`` with pure numpy:
+
+  1. track mask   — ``lengths >= min_len`` (&& class membership);
+  2. row mask     — track mask gathered onto rows, AND region bounds on
+     the (cx, cy) columns, AND the frame-index window;
+  3. frame counts — ``np.bincount`` of the surviving rows' frame
+     column: per-frame object counts in one pass;
+  4. matching frames — ``counts >= k`` via ``np.flatnonzero``
+     (ascending order for free);
+  5. limit        — greedy spacing filter per clip, early-exiting the
+     clip loop the moment the n-th frame is found.
+
+Every step is O(rows) vectorized; nothing at query time touches pixels,
+models, or per-track Python loops, which is what makes warm queries
+run in milliseconds against multi-clip stores (BENCH_query.json).
+
+The limit-scan semantics replicate the original inline
+``experiment.limit_query_experiment`` loop exactly (clips in order,
+frames ascending, spacing enforced only within a clip), asserted by
+tests/test_query.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.query.ops import (CountAtLeast, Limit, Query, Region,
+                             TimeRange, TrackFilter)
+from repro.query.store import PackedTracks
+
+
+@dataclass
+class QueryResult:
+    """What a plan returns.  ``frames`` is the matching
+    (clip_index, frame) list (limit queries); ``aggregates`` carries the
+    scalar results; ``scanned_clips`` shows the early-exit at work."""
+    frames: List[Tuple[int, int]] = field(default_factory=list)
+    aggregates: Dict[str, float] = field(default_factory=dict)
+    scanned_clips: int = 0
+    n_clips: int = 0
+    stats: Optional[object] = None      # QueryStats, filled by the service
+
+
+@dataclass(frozen=True)
+class CompiledPlan:
+    """The folded conjunction, ready to scan packed arrays."""
+    region: Optional[Region]
+    time_range: Optional[TimeRange]
+    min_len: int
+    classes: Optional[Tuple[int, ...]]
+    min_count: int
+    limit: Optional[Limit]
+    aggregate: str
+
+    def describe(self) -> str:
+        parts = [f"agg={self.aggregate}", f"count>={self.min_count}",
+                 f"len>={self.min_len}"]
+        if self.region is not None:
+            r = self.region
+            parts.append(f"region=[{r.x0},{r.y0},{r.x1},{r.y1}]")
+        if self.time_range is not None:
+            parts.append(f"t=[{self.time_range.start},"
+                         f"{self.time_range.end})")
+        if self.classes is not None:
+            parts.append(f"classes={sorted(self.classes)}")
+        if self.limit is not None:
+            parts.append(f"limit={self.limit.n}"
+                         f"@{self.limit.min_spacing}")
+        return " ".join(parts)
+
+    # -- per-clip kernels -----------------------------------------------------
+
+    def _row_mask(self, packed: PackedTracks, profile) -> np.ndarray:
+        """(N,) rows surviving the track + region + time predicates."""
+        tmask = packed.lengths >= self.min_len
+        if self.classes is not None:
+            tmask &= np.isin(packed.classes(profile),
+                             np.asarray(self.classes, np.int64))
+        mask = tmask[packed.row_track] if packed.n_tracks \
+            else np.zeros(0, bool)
+        rows = packed.rows
+        if self.region is not None:
+            r = self.region
+            cx, cy = rows[:, 1], rows[:, 2]
+            mask &= (cx >= r.x0) & (cx <= r.x1) \
+                & (cy >= r.y0) & (cy <= r.y1)
+        if self.time_range is not None:
+            f = rows[:, 0]
+            mask &= f >= self.time_range.start
+            if self.time_range.end is not None:
+                mask &= f < self.time_range.end
+        return mask
+
+    def _frame_counts(self, packed: PackedTracks, profile) -> np.ndarray:
+        """(n_frames,) surviving track points per frame."""
+        mask = self._row_mask(packed, profile)
+        frames = packed.rows[mask, 0].astype(np.int64)
+        return np.bincount(frames, minlength=packed.n_frames)
+
+    # -- execution ------------------------------------------------------------
+
+    def run(self, entries: Sequence[Tuple[object, PackedTracks]]
+            ) -> QueryResult:
+        """entries: (clip, PackedTracks) in scan order; clip provides
+        ``profile`` (fps, pattern classification) only."""
+        res = QueryResult(n_clips=len(entries))
+        if self.aggregate == "tracks":
+            total = 0
+            for clip, packed in entries:
+                res.scanned_clips += 1
+                mask = self._row_mask(packed, clip.profile)
+                if packed.n_tracks:
+                    total += len(np.unique(packed.row_track[mask]))
+            res.aggregates["tracks"] = total
+            return res
+
+        n_match = 0
+        seconds = 0.0
+        for ci, (clip, packed) in enumerate(entries):
+            if self.limit is not None \
+                    and len(res.frames) >= self.limit.n:
+                break                       # early-exit: clip never scanned
+            res.scanned_clips += 1
+            counts = self._frame_counts(packed, clip.profile)
+            hits = np.flatnonzero(counts >= self.min_count)
+            n_match += len(hits)
+            seconds += len(hits) / max(packed.fps, 1)
+            if self.limit is None:
+                if self.aggregate == "frames":
+                    res.frames.extend((ci, int(f)) for f in hits)
+                continue
+            picked: List[int] = []
+            spacing = self.limit.min_spacing
+            for f in hits:
+                if len(res.frames) >= self.limit.n:
+                    break
+                f = int(f)
+                if all(abs(f - g) >= spacing for g in picked):
+                    res.frames.append((ci, f))
+                    picked.append(f)
+        if self.limit is None:
+            # under a limit the early-exit makes these partial sums;
+            # Query rejects limit+scalar-aggregate, and we don't expose
+            # truncated totals as side-channel aggregates either
+            res.aggregates["count"] = n_match
+            res.aggregates["duration_seconds"] = seconds
+        if self.aggregate in ("count", "duration"):
+            res.frames = []
+        return res
+
+
+def compile_query(q: Query) -> CompiledPlan:
+    """Fold the operator conjunction into one CompiledPlan."""
+    region: Optional[Region] = None
+    time_range: Optional[TimeRange] = None
+    min_len = 1
+    classes: Optional[Tuple[int, ...]] = None
+    min_count = 1
+    for op in q.where:
+        if isinstance(op, Region):
+            region = op if region is None else region.intersect(op)
+        elif isinstance(op, TimeRange):
+            if time_range is None:
+                time_range = op
+            else:
+                start = max(time_range.start, op.start)
+                end = op.end if time_range.end is None else (
+                    time_range.end if op.end is None
+                    else min(time_range.end, op.end))
+                if end is not None and end < start:
+                    end = start     # disjoint ranges: match nothing
+                time_range = TimeRange(start, end)
+        elif isinstance(op, TrackFilter):
+            min_len = max(min_len, op.min_len)
+            if op.classes is not None:
+                classes = tuple(op.classes) if classes is None \
+                    else tuple(set(classes) & set(op.classes))
+        elif isinstance(op, CountAtLeast):
+            min_count = max(min_count, op.k)
+        else:                               # Query.__post_init__ rejects
+            raise TypeError(f"unknown operator {op!r}")
+    return CompiledPlan(region, time_range, min_len, classes, min_count,
+                        q.limit, q.aggregate)

@@ -1,0 +1,40 @@
+"""Reference implementations for differential testing of the query
+plan (the kernels' ``ref.py`` idiom, applied to the query subsystem).
+
+``reference_limit_scan`` is the original inline limit-query loop from
+the pre-store ``experiment.limit_query_experiment`` — per-track Python,
+dict-of-counts per frame — kept verbatim as the single source of truth
+for what the compiled vectorized plan must reproduce.  Both
+tests/test_query.py and benchmarks/query_bench.py assert against it.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+
+def reference_limit_scan(all_tracks: Sequence[Sequence[np.ndarray]],
+                         want: int, min_count: int, region,
+                         spacing: int) -> List[Tuple[int, int]]:
+    """Find ``want`` (clip, frame) pairs with >= ``min_count`` track
+    points inside ``region`` (x0, y0, x1, y1; bounds inclusive),
+    >= ``spacing`` frames apart within a clip; single-detection stub
+    tracks are ignored (§4.2)."""
+    found: List[Tuple[int, int]] = []
+    for ci, tracks in enumerate(all_tracks):
+        per_frame: Dict[int, int] = {}
+        for tr in tracks:
+            if len(tr) < 2:
+                continue
+            for row in tr:
+                cx, cy = row[1], row[2]
+                if region[0] <= cx <= region[2] \
+                        and region[1] <= cy <= region[3]:
+                    per_frame[int(row[0])] = per_frame.get(
+                        int(row[0]), 0) + 1
+        for f, n in sorted(per_frame.items()):
+            if n >= min_count and len(found) < want and not any(
+                    c == ci and abs(f - g) < spacing for c, g in found):
+                found.append((ci, f))
+    return found

@@ -1,0 +1,331 @@
+"""TrackStore: materialize pre-processed tracks once, serve them forever.
+
+The store persists ``executor.run_clips`` outputs keyed by
+``(dataset, clip, θ-fingerprint)``:
+
+  * **θ-fingerprint** — a hash of the TRACK-RELEVANT fields of
+    ``PipelineParams``.  Scheduling-only knobs (``chunk_size``) are
+    excluded: tracks are bit-identical across chunk sizes by
+    construction (tests/test_executor.py), so re-tuning B must not
+    invalidate materialized tracks.  Any change to a field that can
+    change tracks (arch, resolution, confidence, gap, proxy, tracker,
+    refine) yields a new fingerprint, i.e. a new store version; stale
+    versions stay on disk until ``prune()``.
+  * **Layout** — one NPZ per clip under
+    ``root/<dataset>/<fingerprint>/<split>_<clip>_<frames>.npz`` holding
+    the packed track arrays plus the run's cost counters, and one
+    ``meta.json`` per fingerprint directory describing θ.
+  * **Packed representation** — all of a clip's tracks concatenated
+    into one ``(N, 6)`` row array ``[frame, cx, cy, w, h, track_id]``
+    with an offsets array delimiting tracks.  Query plans
+    (``repro.query.plan``) scan these packed arrays with vectorized
+    numpy ops; nothing at query time is per-track Python.
+  * **Incremental ingest** — ``ingest(clips)`` materializes only the
+    clips missing from the current version, streaming them through the
+    executor with cross-clip decode prefetch (``executor.run_clips``).
+    A fully-materialized split re-ingests with ZERO detector calls and
+    zero decodes (asserted by tests/test_query.py).
+
+The store itself is thread-safe (one lock around the in-memory index
+and disk writes); ``QueryService`` layers concurrent query execution
+and transparent cold-clip ingest on top.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.executor import ExecutorOptions, run_clips
+from repro.core.pipeline import ModelBank, PipelineParams, RunResult
+from repro.data.video_synth import Clip
+
+SCHEMA_VERSION = 1
+
+# PipelineParams fields that CANNOT change extracted tracks (pure
+# scheduling knobs; see module docstring).  A denylist, so any field
+# added to θ later is track-relevant — and store-invalidating — by
+# default; a new scheduling-only knob must opt in here explicitly.
+_SCHEDULING_ONLY = ("chunk_size",)
+
+ClipKey = Tuple[str, str, int, int]     # (dataset, split, clip_id, n_frames)
+
+
+def _track_fields(params: PipelineParams) -> Dict[str, object]:
+    return {f.name: getattr(params, f.name)
+            for f in dataclasses.fields(params)
+            if f.name not in _SCHEDULING_ONLY}
+
+
+def theta_fingerprint(params: PipelineParams) -> str:
+    """Stable hex fingerprint of θ's track-relevant fields."""
+    payload = _track_fields(params)
+    payload["schema"] = SCHEMA_VERSION
+    blob = json.dumps(payload, sort_keys=True, default=list)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def clip_key(clip: Clip) -> ClipKey:
+    return (clip.profile.name, clip.split, clip.clip_id, clip.n_frames)
+
+
+@dataclass
+class PackedTracks:
+    """One clip's tracks as packed numpy arrays (the query-scan format).
+
+    ``rows``    — (N, 6) ``[frame, cx, cy, w, h, track_id]``, all tracks
+                  concatenated in track order;
+    ``offsets`` — (T+1,) int64; track i is ``rows[offsets[i]:offsets[i+1]]``.
+
+    Derived arrays used by every plan (row→track map, per-track lengths)
+    are computed once and cached; per-track pattern classification is
+    computed lazily on first class-filtered query (it needs the clip's
+    profile, so it cannot be precomputed dataset-independently).
+    """
+    rows: np.ndarray
+    offsets: np.ndarray
+    n_frames: int
+    fps: int
+    seconds: float = 0.0                    # extraction cost (RunResult)
+    counters: Tuple[int, ...] = ()          # RunResult counter snapshot
+    _row_track: Optional[np.ndarray] = field(default=None, repr=False)
+    _classes: Optional[np.ndarray] = field(default=None, repr=False)
+
+    @property
+    def n_tracks(self) -> int:
+        return len(self.offsets) - 1
+
+    @property
+    def lengths(self) -> np.ndarray:
+        return np.diff(self.offsets)
+
+    @property
+    def row_track(self) -> np.ndarray:
+        """(N,) track index of every row."""
+        if self._row_track is None:
+            self._row_track = np.repeat(
+                np.arange(self.n_tracks, dtype=np.int64), self.lengths)
+        return self._row_track
+
+    def track(self, i: int) -> np.ndarray:
+        return self.rows[self.offsets[i]:self.offsets[i + 1]]
+
+    def tracks(self) -> List[np.ndarray]:
+        return [self.track(i) for i in range(self.n_tracks)]
+
+    def classes(self, profile) -> np.ndarray:
+        """(T,) per-track pattern id (``metrics.classify_track``), -1
+        for unclassifiable stubs.  Cached after the first call."""
+        if self._classes is None:
+            from repro.core.metrics import classify_track
+            out = np.full(self.n_tracks, -1, np.int64)
+            for i in range(self.n_tracks):
+                c = classify_track(self.track(i), profile)
+                if c is not None:
+                    out[i] = c
+            self._classes = out
+        return self._classes
+
+    @classmethod
+    def pack(cls, tracks: Sequence[np.ndarray], clip: Clip,
+             result: Optional[RunResult] = None) -> "PackedTracks":
+        offsets = np.zeros(len(tracks) + 1, np.int64)
+        parts = []
+        for i, t in enumerate(tracks):
+            offsets[i + 1] = offsets[i] + len(t)
+            parts.append(np.asarray(t, np.float32).reshape(len(t), 6))
+        rows = np.concatenate(parts) if parts \
+            else np.zeros((0, 6), np.float32)
+        counters = () if result is None else (
+            result.frames_processed, result.detector_windows,
+            result.full_frames, result.skipped_frames)
+        seconds = 0.0 if result is None else float(result.seconds)
+        return cls(rows, offsets, clip.n_frames, clip.profile.fps,
+                   seconds, counters)
+
+
+@dataclass
+class IngestReport:
+    """What one ``ingest`` call actually did."""
+    requested: int = 0          # clips asked for
+    ingested: int = 0           # clips that ran through the executor
+    cached: int = 0             # clips already materialized
+    frames: int = 0             # frames processed during this ingest
+    seconds: float = 0.0        # summed RunResult.seconds (cost model)
+    wall_seconds: float = 0.0   # wall clock of the executor sweep
+
+    @property
+    def fps(self) -> float:
+        return self.frames / self.wall_seconds if self.wall_seconds > 0 \
+            else 0.0
+
+
+class TrackStore:
+    """Persistent, versioned store of extracted tracks for one θ.
+
+    ``set_params`` re-points the store at a different θ version: the
+    in-memory index is invalidated and subsequent lookups hit the new
+    fingerprint's directory (cold until re-ingested).  All public
+    methods are thread-safe.
+    """
+
+    def __init__(self, root: str, bank: ModelBank,
+                 params: PipelineParams,
+                 options: Optional[ExecutorOptions] = None):
+        self.root = root
+        self.bank = bank
+        self.options = options
+        self._lock = threading.RLock()
+        self._index: Dict[ClipKey, PackedTracks] = {}
+        self.params: Optional[PipelineParams] = None
+        self.fingerprint: Optional[str] = None
+        self.set_params(params)
+
+    # -- versioning -----------------------------------------------------------
+
+    def set_params(self, params: PipelineParams) -> None:
+        """Point the store at θ; a changed fingerprint invalidates the
+        in-memory index (disk versions are kept until ``prune``)."""
+        fp = theta_fingerprint(params)
+        with self._lock:
+            if fp != self.fingerprint:
+                self._index.clear()
+            self.params = params
+            self.fingerprint = fp
+
+    def prune(self) -> List[str]:
+        """Delete on-disk versions whose fingerprint is not current.
+        Returns the removed fingerprints."""
+        removed = []
+        with self._lock:
+            if not os.path.isdir(self.root):
+                return removed
+            for dataset in os.listdir(self.root):
+                dpath = os.path.join(self.root, dataset)
+                if not os.path.isdir(dpath):
+                    continue
+                for fp in os.listdir(dpath):
+                    if fp == self.fingerprint:
+                        continue
+                    vdir = os.path.join(dpath, fp)
+                    for name in os.listdir(vdir):
+                        os.unlink(os.path.join(vdir, name))
+                    os.rmdir(vdir)
+                    removed.append(fp)
+        return removed
+
+    # -- paths ----------------------------------------------------------------
+
+    def _version_dir(self, dataset: str) -> str:
+        return os.path.join(self.root, dataset, self.fingerprint)
+
+    def _clip_path(self, key: ClipKey) -> str:
+        dataset, split, clip_id, n_frames = key
+        return os.path.join(self._version_dir(dataset),
+                            f"{split}_{clip_id}_{n_frames}.npz")
+
+    def _write_meta(self, dataset: str) -> None:
+        vdir = self._version_dir(dataset)
+        os.makedirs(vdir, exist_ok=True)
+        path = os.path.join(vdir, "meta.json")
+        if not os.path.exists(path):
+            with open(path, "w") as f:
+                json.dump({
+                    "fingerprint": self.fingerprint,
+                    "schema": SCHEMA_VERSION,
+                    "params": self.params.describe(),
+                    "theta": _track_fields(self.params),
+                    "created": time.strftime("%Y-%m-%dT%H:%M:%S"),
+                }, f, indent=1, default=list)
+
+    # -- lookup ---------------------------------------------------------------
+
+    def has(self, clip: Clip) -> bool:
+        key = clip_key(clip)
+        with self._lock:
+            if key in self._index:
+                return True
+        return os.path.exists(self._clip_path(key))
+
+    def get(self, clip: Clip) -> Optional[PackedTracks]:
+        """The clip's packed tracks, loading from disk on first touch;
+        None when the clip is cold (not materialized for this θ)."""
+        key = clip_key(clip)
+        with self._lock:
+            hit = self._index.get(key)
+            if hit is not None:
+                return hit
+        path = self._clip_path(key)
+        if not os.path.exists(path):
+            return None
+        with np.load(path) as z:
+            packed = PackedTracks(
+                rows=z["rows"], offsets=z["offsets"],
+                n_frames=int(z["info"][0]), fps=int(z["info"][1]),
+                seconds=float(z["seconds"][0]),
+                counters=tuple(int(v) for v in z["info"][2:]))
+        with self._lock:
+            # racing loaders produce identical values; first write wins
+            return self._index.setdefault(key, packed)
+
+    def tracks(self, clip: Clip) -> List[np.ndarray]:
+        """Convenience: the clip's tracks as the executor returned them
+        (exact roundtrip through the packed arrays)."""
+        packed = self.get(clip)
+        if packed is None:
+            raise KeyError(f"clip {clip_key(clip)} not materialized "
+                           f"for θ {self.fingerprint}")
+        return packed.tracks()
+
+    # -- ingest ---------------------------------------------------------------
+
+    def materialize(self, clip: Clip, result: RunResult) -> PackedTracks:
+        """Pack one executor result and persist it."""
+        key = clip_key(clip)
+        packed = PackedTracks.pack(result.tracks, clip, result)
+        with self._lock:
+            self._write_meta(key[0])
+            path = self._clip_path(key)
+            tmp = path + ".tmp.npz"
+            info = np.asarray(
+                [packed.n_frames, packed.fps, *packed.counters], np.int64)
+            np.savez(tmp, rows=packed.rows, offsets=packed.offsets,
+                     info=info,
+                     seconds=np.asarray([packed.seconds], np.float64))
+            os.replace(tmp, path)       # atomic: readers never see partials
+            self._index[key] = packed
+        return packed
+
+    def ingest(self, clips: Sequence[Clip],
+               log=lambda *_: None) -> IngestReport:
+        """Materialize every clip not yet in the current θ version.
+
+        Cold clips stream through ``executor.run_clips`` — clip i+1's
+        decode prefetches while clip i computes, chunks round-robin
+        devices — warm clips cost one index lookup and zero model
+        calls."""
+        report = IngestReport(requested=len(clips))
+        cold = [c for c in clips if not self.has(c)]
+        report.cached = len(clips) - len(cold)
+        if not cold:
+            return report
+        t0 = time.perf_counter()
+        results, seconds = run_clips(self.bank, self.params, cold,
+                                     self.options)
+        for clip, res in zip(cold, results):
+            self.materialize(clip, res)
+            report.frames += res.frames_processed
+        report.ingested = len(cold)
+        report.seconds = seconds
+        report.wall_seconds = time.perf_counter() - t0
+        log(f"[store] ingested {report.ingested} clips "
+            f"({report.frames} frames, {report.fps:.1f} fps wall), "
+            f"{report.cached} cached")
+        return report

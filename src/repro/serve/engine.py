@@ -1,4 +1,12 @@
-"""Batched serving engine: ragged-prompt prefill + token-by-token decode.
+"""Batched LM serving engine: ragged-prompt prefill + token-by-token
+decode for the seed's transformer stack (``repro.models``).
+
+NOTE: this module is NOT the video-analytics serving path.  MultiScope
+queries are served by ``repro.query`` — a persistent ``TrackStore``
+materializes extracted tracks once and a ``QueryService`` answers
+exploratory queries from the packed arrays in milliseconds; see
+src/repro/query/__init__.py.  This engine serves the auxiliary language
+models only.
 
 Prompts are right-padded to a common length; per-row true lengths drive
 (a) the gather of each row's last-real-token logits after prefill and

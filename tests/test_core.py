@@ -160,6 +160,42 @@ def test_refiner_extends_partial_track():
     assert out[0, 1] < 0.15 and out[-1, 1] > 0.85
 
 
+def test_resample_track_matches_scan_loop():
+    """The searchsorted-vectorized resample must be bit-identical to the
+    original per-target scan loop, zero-length segments included."""
+    def reference(boxes, n):
+        pts = boxes[:, :2].astype(np.float64)
+        if len(pts) == 1:
+            return np.repeat(pts, n, axis=0)
+        seg = np.linalg.norm(np.diff(pts, axis=0), axis=1)
+        cum = np.concatenate([[0.0], np.cumsum(seg)])
+        total = cum[-1]
+        if total <= 0:
+            return np.repeat(pts[:1], n, axis=0)
+        targets = np.linspace(0.0, total, n)
+        out = np.empty((n, 2))
+        j = 0
+        for i, d in enumerate(targets):
+            while j < len(seg) - 1 and cum[j + 1] < d:
+                j += 1
+            u = 0.0 if seg[j] == 0 else (d - cum[j]) / seg[j]
+            out[i] = pts[j] * (1 - u) + pts[j + 1] * u
+        return out
+
+    rng = np.random.default_rng(7)
+    for _ in range(200):
+        m = int(rng.integers(1, 16))
+        pts = rng.random((m, 4)).astype(np.float32)
+        if m > 3 and rng.random() < 0.4:        # repeated points
+            pts[1] = pts[0]
+            pts[m // 2] = pts[m // 2 - 1]
+        if rng.random() < 0.05:                 # fully degenerate
+            pts[:] = pts[0]
+        n = int(rng.integers(2, 12))
+        np.testing.assert_array_equal(resample_track(pts, n),
+                                      reference(pts, n))
+
+
 def test_dbscan_merges_redundant_paths():
     paths = [resample_track(
         np.stack([np.linspace(0, 1, 10), np.full(10, 0.5)], 1), 20)

@@ -158,11 +158,12 @@ def test_executor_cancel_releases_started_run(exec_bank):
     block forever holding decoded chunks)."""
     bank, clips, res, th = exec_bank
     params = _params(bank, res, th, chunk_size=1)
-    ex = ClipExecutor(bank, params, ExecutorOptions(prefetch=True))
+    ex = ClipExecutor(bank, params, ExecutorOptions(prefetch=True,
+                                                    decode_workers=2))
     run = ex.start(clips[0])
     ex.cancel(run)                       # must return, not hang
-    _, worker_thread, _, _ = run.handle
-    assert not worker_thread.is_alive()
+    _, worker_threads, _, _ = run.handle
+    assert not any(t.is_alive() for t in worker_threads)
 
 
 def test_effective_chunk_resolution():
@@ -171,6 +172,56 @@ def test_effective_chunk_resolution():
     assert effective_chunk(dataclasses.replace(p, chunk_size=32)) == 32
     assert effective_chunk(dataclasses.replace(p, chunk_size=32),
                            override=8) == 8
+
+
+# ---------------------------------------------------------------------------
+# Decode worker pool (ExecutorOptions.decode_workers)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("workers", [2, 3])
+def test_executor_decode_worker_pool(exec_bank, workers):
+    """N decode workers + the reorder gate must reproduce the
+    single-thread schedule bit-exactly (chunks reach TRACK in frame
+    order regardless of which worker decoded them first)."""
+    bank, clips, res, th = exec_bank
+    params = _params(bank, res, th, chunk_size=4)   # several chunks
+    opts = ExecutorOptions(prefetch=True, prefetch_depth=2,
+                           decode_workers=workers)
+    for clip in clips:
+        _assert_same(pl.run_clip_frames(bank, params, clip),
+                     run_clip_streamed(bank, params, clip, opts))
+
+
+def test_run_clips_decode_worker_pool(exec_bank):
+    """The pool option threads through the multi-clip sweep."""
+    bank, clips, res, th = exec_bank
+    params = _params(bank, res, th, chunk_size=4)
+    results, _ = run_clips(bank, params, clips,
+                           ExecutorOptions(decode_workers=2))
+    for clip, r in zip(clips, results):
+        _assert_same(pl.run_clip_frames(bank, params, clip), r)
+
+
+def test_executor_pool_failure_propagates(exec_bank):
+    """A mid-stream stage failure with a worker pool: every worker —
+    including ones parked at the reorder gate or blocked on the full
+    queue — must be released before the error propagates."""
+    bank, clips, res, th = exec_bank
+    params = _params(bank, res, th, chunk_size=1)   # chunks >> depth
+
+    def boom(ctx, task):
+        raise RuntimeError("detect failed")
+
+    ex = ClipExecutor(bank, params,
+                      ExecutorOptions(prefetch=True, decode_workers=3),
+                      stages={"detect": boom})
+    with pytest.raises(RuntimeError, match="detect failed"):
+        ex.run(clips[0])
+    # all pool threads must have exited (no leaked decoders)
+    import threading as _t
+    assert not [t for t in _t.enumerate()
+                if t.name.startswith("multiscope-decode")
+                and t.is_alive()]
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,355 @@
+"""Track store + exploratory query engine tests.
+
+Covers the subsystem's three contracts:
+
+  * **materialize once** — packed-array roundtrip is exact, the store
+    persists across process boundaries (fresh store over the same
+    root), re-ingest of a warm split performs zero detector dispatches;
+  * **θ versioning** — track-relevant θ changes invalidate, the
+    scheduling-only ``chunk_size`` does not, ``prune`` drops stale
+    versions;
+  * **query equivalence** — the compiled vectorized plan returns
+    exactly what the original inline ``limit_query_experiment`` scan
+    returned, concurrent queries agree, aggregates match hand
+    computation.
+"""
+import dataclasses
+import threading
+
+import numpy as np
+import pytest
+
+from repro.configs.multiscope import MULTISCOPE_PIPELINE
+from repro.core import pipeline as pl
+from repro.core.executor import run_clips
+from repro.core.proxy import ProxyModel
+from repro.core.tracker import init_tracker
+from repro.core.train_models import train_detector
+from repro.data.video_synth import make_split
+from repro.query import (CountAtLeast, Limit, PackedTracks, Query,
+                         QueryService, Region, TimeRange, TrackFilter,
+                         TrackStore, compile_query, theta_fingerprint)
+from repro.query.ref import reference_limit_scan
+
+
+@pytest.fixture(scope="module")
+def qsys(tmp_path_factory):
+    cfg = MULTISCOPE_PIPELINE.reduced()
+    clips = make_split("caldot1", "test", 3, n_frames=24)
+    det, _ = train_detector("ssd-lite", clips[:2],
+                            [cfg.detector.resolutions[-1]], steps=60)
+    bank = pl.ModelBank(cfg, {"ssd-lite": det, "ssd-deep": det})
+    res = cfg.proxy.resolutions[-1]
+    proxy = ProxyModel(cfg.proxy.cell, cfg.proxy.base_channels, res)
+    bank.proxies = {res: proxy}
+    bank.sizes_cells = [pl.det_grid(cfg.detector.resolutions[-1]),
+                        (3, 2), (5, 3)]
+    bank.ref_grid = pl.det_grid(cfg.detector.resolutions[-1])
+    bank.tracker_params = init_tracker(cfg.tracker)
+    W, H = cfg.detector.resolutions[-1]
+    frame, _ = pl.render_frame(clips[0], 0, W, H)
+    s, _ = proxy.scores(pl._downsample(frame, res))
+    params = pl.PipelineParams(
+        "ssd-lite", cfg.detector.resolutions[-1], 0.4, gap=1,
+        proxy_res=res, proxy_threshold=float(np.quantile(s, 0.85)),
+        tracker="sort", refine=False)
+    root = str(tmp_path_factory.mktemp("trackstore"))
+    store = TrackStore(root, bank, params)
+    store.ingest(clips)
+    return bank, params, clips, store, root
+
+
+# ---------------------------------------------------------------------------
+# Packing
+# ---------------------------------------------------------------------------
+
+def _fake_tracks():
+    t0 = np.array([[0, 0.1, 0.2, 0.05, 0.05, 0],
+                   [2, 0.2, 0.3, 0.05, 0.05, 0],
+                   [4, 0.3, 0.4, 0.05, 0.05, 0]], np.float32)
+    t1 = np.array([[1, 0.8, 0.9, 0.04, 0.04, 1],
+                   [2, 0.7, 0.8, 0.04, 0.04, 1]], np.float32)
+    return [t0, t1]
+
+
+class _FakeClip:
+    class profile:
+        name = "fake"
+        fps = 8
+    split, clip_id, n_frames = "test", 0, 8
+
+
+def test_pack_roundtrip():
+    tracks = _fake_tracks()
+    packed = PackedTracks.pack(tracks, _FakeClip())
+    assert packed.n_tracks == 2
+    assert packed.rows.shape == (5, 6)
+    np.testing.assert_array_equal(packed.lengths, [3, 2])
+    np.testing.assert_array_equal(packed.row_track, [0, 0, 0, 1, 1])
+    for orig, rt in zip(tracks, packed.tracks()):
+        np.testing.assert_array_equal(orig, rt)
+
+
+def test_pack_empty():
+    packed = PackedTracks.pack([], _FakeClip())
+    assert packed.n_tracks == 0
+    assert packed.rows.shape == (0, 6)
+    assert compile_query(Query()).run([(_FakeClip(), packed)]) \
+        .aggregates["count"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Store: persistence, incremental ingest, versioning
+# ---------------------------------------------------------------------------
+
+def test_store_matches_executor_output(qsys):
+    bank, params, clips, store, _ = qsys
+    results, _ = run_clips(bank, params, clips)
+    for clip, r in zip(clips, results):
+        stored = store.tracks(clip)
+        assert len(stored) == len(r.tracks)
+        for a, b in zip(r.tracks, stored):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_store_persists_across_instances(qsys):
+    bank, params, clips, _, root = qsys
+    fresh = TrackStore(root, bank, params)
+    assert all(fresh.has(c) for c in clips)
+    report = fresh.ingest(clips)
+    assert report.ingested == 0 and report.cached == len(clips)
+    packed = fresh.get(clips[0])
+    assert packed is not None and packed.n_frames == clips[0].n_frames
+
+
+def test_reingest_zero_detector_calls(qsys):
+    """The acceptance guarantee: a materialized split re-ingests with
+    zero detector dispatches (and zero clips run)."""
+    bank, params, clips, store, _ = qsys
+    det = bank.detectors[params.det_arch]
+    before = det.dispatches
+    report = store.ingest(clips)
+    assert report.ingested == 0
+    assert det.dispatches == before
+
+
+def test_fingerprint_versioning(qsys):
+    bank, params, clips, _, root = qsys
+    # scheduling-only fields do NOT change the fingerprint
+    assert theta_fingerprint(params) == theta_fingerprint(
+        dataclasses.replace(params, chunk_size=32))
+    # track-relevant fields DO
+    changed = dataclasses.replace(params, det_conf=params.det_conf + 0.1)
+    assert theta_fingerprint(params) != theta_fingerprint(changed)
+    store = TrackStore(root, bank, params)
+    assert store.has(clips[0])
+    store.set_params(changed)               # new version: everything cold
+    assert not store.has(clips[0])
+    store.set_params(params)                # back: warm again, from disk
+    assert store.has(clips[0])
+
+
+def test_prune_drops_stale_versions(qsys, tmp_path):
+    bank, params, clips, _, _ = qsys
+    root = str(tmp_path / "store")
+    a = TrackStore(root, bank, params)
+    a.ingest(clips[:1])
+    changed = dataclasses.replace(params, gap=2)
+    a.set_params(changed)
+    a.ingest(clips[:1])
+    a.set_params(params)
+    removed = a.prune()
+    assert removed == [theta_fingerprint(changed)]
+    assert a.has(clips[0])                  # current version untouched
+    a.set_params(changed)
+    assert not a.has(clips[0])              # stale version gone from disk
+
+
+# ---------------------------------------------------------------------------
+# Plan: vectorized ops over handcrafted tracks
+# ---------------------------------------------------------------------------
+
+def _entries():
+    return [(_FakeClip(), PackedTracks.pack(_fake_tracks(), _FakeClip()))]
+
+
+def test_plan_region_and_count():
+    # track 0 lives upper-left, track 1 lower-right
+    q = Query((TrackFilter(min_len=2), Region(0.0, 0.0, 0.5, 0.5),
+               CountAtLeast(1)), aggregate="count")
+    assert compile_query(q).run(_entries()).aggregates["count"] == 3
+    q2 = Query((Region(0.6, 0.6, 1.0, 1.0),), aggregate="count")
+    assert compile_query(q2).run(_entries()).aggregates["count"] == 2
+
+
+def test_plan_time_range_and_track_len():
+    q = Query((TimeRange(2, None),), aggregate="count")
+    assert compile_query(q).run(_entries()).aggregates["count"] == 2
+    # min_len=3 drops the 2-row track entirely
+    q2 = Query((TrackFilter(min_len=3),), aggregate="count")
+    assert compile_query(q2).run(_entries()).aggregates["count"] == 3
+    q3 = Query((TrackFilter(min_len=3),), aggregate="tracks")
+    assert compile_query(q3).run(_entries()).aggregates["tracks"] == 1
+
+
+def test_plan_limit_spacing_and_early_exit():
+    entries = _entries() * 3                # 3 identical "clips"
+    q = Query((CountAtLeast(1),), limit=Limit(3, min_spacing=2))
+    res = compile_query(q).run(entries)
+    # frames 0,1,2,4 match; spacing 2 keeps 0,2,4 -> limit hits in clip 0
+    assert res.frames == [(0, 0), (0, 2), (0, 4)]
+    assert res.scanned_clips == 1 and res.n_clips == 3
+
+
+def test_plan_duration():
+    q = Query((CountAtLeast(1),), aggregate="duration")
+    res = compile_query(q).run(_entries())
+    # frames 0,1,2,4 have >=1 point; fps=8
+    assert res.aggregates["duration_seconds"] == pytest.approx(4 / 8)
+
+
+def test_query_validation():
+    with pytest.raises(ValueError):
+        Query(aggregate="nope")
+    with pytest.raises(TypeError):
+        Query(("region",))
+    with pytest.raises(ValueError):
+        Limit(0)
+    # a limited scan early-exits, so scalar aggregates under it would
+    # be silently truncated — rejected at construction
+    with pytest.raises(ValueError):
+        Query((CountAtLeast(1),), limit=Limit(3), aggregate="count")
+    # disjoint regions fold into a match-nothing plan, not an error
+    q = Query((Region(0.0, 0.0, 0.2, 0.2), Region(0.8, 0.8, 1.0, 1.0)),
+              aggregate="count")
+    assert compile_query(q).run(_entries()).aggregates["count"] == 0
+    # disjoint time ranges likewise
+    q2 = Query((TimeRange(0, 2), TimeRange(3, 5)), aggregate="count")
+    assert compile_query(q2).run(_entries()).aggregates["count"] == 0
+    # and a limit query exposes no (partial) scalar aggregates
+    q3 = Query((CountAtLeast(1),), limit=Limit(2))
+    assert "count" not in compile_query(q3).run(_entries()).aggregates
+
+
+# ---------------------------------------------------------------------------
+# Service: inline-scan equivalence, concurrency, prefetch
+# ---------------------------------------------------------------------------
+
+def test_service_limit_query_matches_inline_scan(qsys):
+    """Acceptance: warm-store QueryService limit query == the original
+    inline limit_query_experiment scan, for several query shapes."""
+    bank, params, clips, store, _ = qsys
+    service = QueryService(store)
+    all_tracks = [store.tracks(c) for c in clips]
+    for want, min_count, region, spacing in [
+            (8, 1, (0.0, 0.5, 1.0, 1.0), 4),
+            (3, 2, (0.0, 0.0, 1.0, 1.0), 0),
+            (5, 1, (0.25, 0.0, 0.75, 1.0), 2)]:
+        q = Query.limit_frames(region=region, min_count=min_count,
+                               want=want, min_spacing=spacing)
+        res = service.query(q, clips)
+        assert res.stats.ingested_clips == 0
+        assert res.frames == reference_limit_scan(
+            all_tracks, want, min_count, region, spacing)
+
+
+def test_service_aggregates_match_manual(qsys):
+    bank, params, clips, store, _ = qsys
+    service = QueryService(store)
+    region = (0.0, 0.5, 1.0, 1.0)
+    res = service.query(Query.count_frames(region=region), clips)
+    manual = 0
+    for c in clips:
+        per_frame = {}
+        for tr in store.tracks(c):
+            if len(tr) < 2:
+                continue
+            for row in tr:
+                if region[0] <= row[1] <= region[2] \
+                        and region[1] <= row[2] <= region[3]:
+                    per_frame[int(row[0])] = per_frame.get(
+                        int(row[0]), 0) + 1
+        manual += sum(1 for n in per_frame.values() if n >= 1)
+    assert res.aggregates["count"] == manual
+
+
+def test_service_class_partition(qsys):
+    """Per-class track counts partition the classifiable tracks."""
+    bank, params, clips, store, _ = qsys
+    service = QueryService(store)
+    n_patterns = clips[0].profile.patterns()
+    total = service.query(Query.count_tracks(min_track_len=2), clips) \
+        .aggregates["tracks"]
+    by_class = sum(
+        service.query(Query.count_tracks(classes=(c,), min_track_len=2),
+                      clips).aggregates["tracks"]
+        for c in range(n_patterns))
+    unclassified = service.query(
+        Query.count_tracks(classes=(-1,), min_track_len=2), clips) \
+        .aggregates["tracks"]
+    assert by_class + unclassified == total
+
+
+def test_service_concurrent_queries_agree(qsys):
+    bank, params, clips, store, _ = qsys
+    service = QueryService(store)
+    q = Query.limit_frames(region=(0.0, 0.5, 1.0, 1.0), min_count=1,
+                           want=6, min_spacing=2)
+    expected = service.query(q, clips).frames
+    results, errs = [], []
+
+    def client():
+        try:
+            for _ in range(5):
+                results.append(service.query(q, clips).frames)
+        except BaseException as exc:
+            errs.append(exc)
+
+    threads = [threading.Thread(target=client) for _ in range(4)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert not errs
+    assert len(results) == 20
+    assert all(r == expected for r in results)
+    rep = service.latency_report()
+    assert rep["queries"] == 21 and rep["warm_queries"] == 21
+
+
+def test_service_warm_query_bypasses_ingest_lock(qsys):
+    """A query over materialized clips must not queue behind an
+    in-flight ingest of other clips (no head-of-line blocking)."""
+    bank, params, clips, store, _ = qsys
+    service = QueryService(store)
+    q = Query.count_frames(min_count=1)
+    expected = service.query(q, clips).aggregates
+    with service._ingest_lock:          # simulate a long-running ingest
+        done = []
+
+        def warm_client():
+            done.append(service.query(q, clips).aggregates)
+
+        th = threading.Thread(target=warm_client)
+        th.start()
+        th.join(timeout=10.0)           # must finish while lock is held
+        assert done == [expected]
+
+
+def test_service_cold_then_warm_split(qsys, tmp_path):
+    """First query pays ingest, repeats are pure scan; prefetch warms in
+    the background."""
+    bank, params, clips, _, _ = qsys
+    store = TrackStore(str(tmp_path / "cold"), bank, params)
+    service = QueryService(store)
+    q = Query.count_frames(min_count=1)
+    cold = service.query(q, clips[:2])
+    assert cold.stats.ingested_clips == 2
+    assert cold.stats.ingest_seconds > 0
+    warm = service.query(q, clips[:2])
+    assert warm.stats.ingested_clips == 0
+    assert warm.aggregates == cold.aggregates
+    th = service.prefetch(clips)            # remaining clip in background
+    th.join()
+    res = service.query(q, clips)
+    assert res.stats.ingested_clips == 0
