@@ -1,20 +1,28 @@
 """Track-store query benchmark: extract-once-serve-many in numbers.
 
-Measures the three quantities the query subsystem promises
-(``repro.query``):
+Measures the quantities the query subsystem promises (``repro.query``):
 
   * **cold ingest** — fps of materializing the workload's clips into a
     ``TrackStore`` through the streaming executor (paid once per θ);
   * **warm query latency** — median milliseconds per query against the
-    warm store, per query shape (limit / count / duration / tracks);
-    asserted < 1% of the cold ingest time;
+    warm store, per query shape (limit / count / duration / tracks),
+    asserted < 1% of the cold ingest time — PLUS the indexed-vs-scan
+    split: the same count query answered from the precomputed
+    histograms vs forced through the full row scan
+    (``use_index=False``), on a clip set 3× the PR-3 workload;
+  * **index pruning** — a selective query whose summaries skip clips
+    outright (``skipped_clips``/``scanned_clips`` recorded);
+  * **eviction** — a ``StoreBudget`` below the store's footprint is
+    installed, LRU eviction brings it under budget (counters
+    recorded), and a re-query of evicted clips returns bit-identical
+    answers through transparent re-ingest;
   * **throughput** — queries/sec with N concurrent clients hammering
     one ``QueryService``.
 
 Also asserted on every run: re-ingesting a materialized split performs
-ZERO detector dispatches, and the store-served limit query returns
-exactly the frames of the original inline scan (the pre-store
-``limit_query_experiment`` loop, replicated here as the reference).
+ZERO detector dispatches, the store-served limit query returns exactly
+the frames of the original inline scan, and every indexed answer
+equals its full-scan twin.
 
     PYTHONPATH=src python -m benchmarks.query_bench [--smoke]
 
@@ -34,6 +42,9 @@ import numpy as np
 DEFAULT_OUT = "BENCH_query.json"
 
 REGION = (0.0, 0.5, 1.0, 1.0)           # bottom half (the Table-2 query)
+# far corner: provably disjoint from caldot1's highway bands, so the
+# index skips every clip without touching a row
+SELECTIVE_REGION = (0.0, 0.0, 0.02, 0.02)
 MIN_COUNT = 2
 WANT = 8
 
@@ -49,7 +60,9 @@ def run(out_path: str | None = DEFAULT_OUT, reps: int = 30,
                                              proxy_steps=40)
         reps = min(reps, 10)
     else:
-        bank, params, clips = build_workload(n_clips=6, n_frames=48)
+        # 3x the PR-3 workload (6 clips x 48 frames): the indexed path
+        # must hold its latency as the store grows
+        bank, params, clips = build_workload(n_clips=18, n_frames=48)
     det = bank.detectors[params.det_arch]
     fps_clip = clips[0].profile.fps
     spacing = 2 * fps_clip
@@ -66,9 +79,18 @@ def run(out_path: str | None = DEFAULT_OUT, reps: int = 30,
         shutil.rmtree(root, ignore_errors=True)
 
 
+def _median_ms(service, q, clips, reps, use_index=True) -> float:
+    times = []
+    for _ in range(reps):
+        r = service.query(q, clips, use_index=use_index)
+        assert r.stats.ingested_clips == 0
+        times.append(r.stats.total_seconds)
+    return float(np.median(times) * 1e3)
+
+
 def _measure(det, store, service, clips, reps, clients, smoke, spacing,
              params, out_path) -> dict:
-    from repro.query import Query, TimeRange
+    from repro.query import Query, StoreBudget, TimeRange
     from repro.query.ref import reference_limit_scan
 
     # -- cold ingest ----------------------------------------------------------
@@ -81,6 +103,7 @@ def _measure(det, store, service, clips, reps, clients, smoke, spacing,
     report2 = service.warm(clips)
     assert report2.ingested == 0 and det.dispatches == calls_before, \
         "re-ingest of a materialized split touched the detector"
+    reingest_calls_warm = det.dispatches - calls_before
 
     # -- correctness: store-served limit query == inline reference scan ------
     q_limit = Query.limit_frames(region=REGION, min_count=MIN_COUNT,
@@ -91,8 +114,11 @@ def _measure(det, store, service, clips, reps, clients, smoke, spacing,
         spacing)
     identical = served.frames == reference
     assert identical, (served.frames, reference)
+    assert served.frames == service.query(
+        q_limit, clips, use_index=False).frames
 
     # -- warm query latency per query shape -----------------------------------
+    q_count = Query.count_frames(min_count=MIN_COUNT)   # histogram-served
     queries = {
         "limit": q_limit,
         "count": Query.count_frames(region=REGION, min_count=MIN_COUNT),
@@ -102,13 +128,50 @@ def _measure(det, store, service, clips, reps, clients, smoke, spacing,
     }
     latency_ms: Dict[str, float] = {}
     for name, q in queries.items():
-        times = []
-        for _ in range(reps):
-            r = service.query(q, clips)
-            assert r.stats.ingested_clips == 0
-            times.append(r.stats.total_seconds)
-        latency_ms[name] = float(np.median(times) * 1e3)
+        latency_ms[name] = _median_ms(service, q, clips, reps)
     warm_worst_s = max(latency_ms.values()) / 1e3
+
+    # -- indexed vs scan: same count query, histogram vs row scan -------------
+    r_idx = service.query(q_count, clips)
+    r_scan = service.query(q_count, clips, use_index=False)
+    assert r_idx.aggregates == r_scan.aggregates
+    # every clip is either skipped by its summary or histogram-served;
+    # the row scan is never needed for this predicate
+    assert r_idx.indexed_clips == r_idx.scanned_clips
+    assert r_idx.indexed_clips + r_idx.skipped_clips == len(clips)
+    count_indexed_ms = _median_ms(service, q_count, clips, reps)
+    count_scan_ms = _median_ms(service, q_count, clips, reps,
+                               use_index=False)
+
+    # -- index pruning: selective region skips whole clips --------------------
+    q_sel = Query.count_frames(region=SELECTIVE_REGION)
+    r_sel = service.query(q_sel, clips)
+    r_sel_scan = service.query(q_sel, clips, use_index=False)
+    assert r_sel.aggregates == r_sel_scan.aggregates
+    assert r_sel.skipped_clips >= 1, \
+        "selective predicate failed to skip any clip via the index"
+    selective_ms = _median_ms(service, q_sel, clips, reps)
+
+    # -- eviction: budget below footprint, re-query bit-identically -----------
+    q_requery = Query.count_frames(min_count=1)     # needs every clip
+    count_before = service.query(q_requery, clips).aggregates
+    bytes_before = store.disk_bytes()
+    budget_bytes = int(bytes_before * 0.6)
+    evicted = store.set_budget(StoreBudget(max_bytes=budget_bytes))
+    bytes_after = store.disk_bytes()
+    assert evicted >= 1 and bytes_after <= budget_bytes, \
+        f"eviction failed: {evicted} evicted, {bytes_after} bytes " \
+        f"against a {budget_bytes} budget"
+    survivors = [c for c in clips if store.has(c)]
+    r_surv = service.query(q_requery, survivors)
+    assert r_surv.stats.ingested_clips == 0     # survivors stay warm
+    calls0 = det.dispatches
+    r_requery = service.query(q_requery, clips)  # transparent re-ingest
+    assert r_requery.aggregates == count_before, \
+        "re-query after eviction changed the answer"
+    reingest_calls = det.dispatches - calls0
+    assert r_requery.stats.ingested_clips >= 1
+    store.set_budget(None)                      # unbounded again
 
     # -- concurrent clients ---------------------------------------------------
     per_client = reps
@@ -137,6 +200,9 @@ def _measure(det, store, service, clips, reps, clients, smoke, spacing,
     qps = clients * per_client / conc_wall
 
     warm_over_cold = warm_worst_s / cold_s if cold_s > 0 else 0.0
+    latency_ms["count_indexed"] = count_indexed_ms
+    latency_ms["count_scan"] = count_scan_ms
+    latency_ms["selective_skip"] = selective_ms
     result = {
         "benchmark": "track_store_query",
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
@@ -149,11 +215,28 @@ def _measure(det, store, service, clips, reps, clients, smoke, spacing,
         "store_fingerprint": store.fingerprint,
         "cold_ingest_seconds": cold_s,
         "cold_ingest_fps": report.fps,
-        "reingest_detector_calls": det.dispatches - calls_before,
+        "reingest_detector_calls": reingest_calls_warm,
         "warm_query_ms": latency_ms,
         "warm_over_cold_ratio": warm_over_cold,
         "queries_per_second": qps,
         "limit_query_identical_to_inline_scan": bool(identical),
+        "index": {
+            "count_indexed_ms": count_indexed_ms,
+            "count_scan_ms": count_scan_ms,
+            "indexed_clips": int(r_idx.indexed_clips),
+            "selective_skipped_clips": int(r_sel.skipped_clips),
+            "selective_scanned_clips": int(r_sel.scanned_clips),
+            "indexed_equals_scan": True,        # asserted above
+        },
+        "eviction": {
+            "budget_bytes": budget_bytes,
+            "bytes_before": bytes_before,
+            "bytes_after": bytes_after,
+            "evicted_clips": evicted,
+            "evicted_bytes": int(store.evicted_bytes),
+            "requery_reingest_detector_calls": int(reingest_calls),
+            "requery_identical": True,          # asserted above
+        },
     }
     if out_path:
         with open(out_path, "w") as f:
@@ -162,6 +245,13 @@ def _measure(det, store, service, clips, reps, clients, smoke, spacing,
     assert warm_over_cold < 0.01, \
         f"warm query {warm_worst_s * 1e3:.1f}ms is not <1% of cold " \
         f"ingest {cold_s:.2f}s"
+    if not smoke:
+        # the acceptance bar: the histogram path must not lose to the
+        # row scan even on the 3x clip set (timing assert kept out of
+        # smoke/CI where jitter dominates sub-ms medians)
+        assert count_indexed_ms <= count_scan_ms * 1.10, \
+            f"indexed count {count_indexed_ms:.3f}ms slower than " \
+            f"scan {count_scan_ms:.3f}ms"
     return result
 
 
@@ -179,11 +269,20 @@ def main(argv=None) -> None:
     print(f"cold ingest      : {r['cold_ingest_seconds']:8.2f}s "
           f"({r['cold_ingest_fps']:.1f} fps)")
     for name, ms in r["warm_query_ms"].items():
-        print(f"warm {name:8s}    : {ms:8.3f} ms")
+        print(f"warm {name:14s}: {ms:8.3f} ms")
     print(f"warm/cold ratio  : {r['warm_over_cold_ratio']:8.5f} "
           f"(asserted < 0.01)")
     print(f"throughput       : {r['queries_per_second']:8.1f} q/s "
           f"at {r['workload']['clients']} clients")
+    idx = r["index"]
+    print(f"index            : count {idx['count_indexed_ms']:.3f}ms "
+          f"indexed vs {idx['count_scan_ms']:.3f}ms scan; selective "
+          f"query skipped {idx['selective_skipped_clips']}/"
+          f"{r['workload']['clips']} clips")
+    ev = r["eviction"]
+    print(f"eviction         : {ev['evicted_clips']} clips "
+          f"({ev['evicted_bytes']} B) to fit {ev['budget_bytes']} B; "
+          f"re-query identical: {ev['requery_identical']}")
     print(f"re-ingest det calls: {r['reingest_detector_calls']} "
           f"(asserted 0)")
     print(f"identical to inline scan: "

@@ -21,8 +21,8 @@ from repro.core import tuner as tuner_mod  # noqa: E402
 from repro.core.baselines import BlazeItBaseline  # noqa: E402
 from repro.core.experiment import limit_query_experiment  # noqa: E402
 from repro.data.video_synth import make_split  # noqa: E402
-from repro.query import (Query, QueryService, TimeRange,  # noqa: E402
-                         TrackStore)
+from repro.query import (Query, QueryService, StoreBudget,  # noqa: E402
+                         TimeRange, TrackStore)
 
 
 def main() -> None:
@@ -83,6 +83,27 @@ def main() -> None:
             print(f"  {desc}: {val_str}  "
                   f"({r.stats.scan_seconds * 1e3:.2f}ms, "
                   f"ingested {r.stats.ingested_clips} clips)")
+
+        # -- the index at work: a selective region is answered without
+        # scanning (or even loading) the clips it provably misses
+        sel = Query.count_frames(region=(0.0, 0.0, 0.02, 0.02))
+        r = service.query(sel, query_clips)
+        print(f"\n== secondary indexes ==\n"
+              f"  far-corner count query: skipped "
+              f"{r.skipped_clips}/{r.n_clips} clips via summaries, "
+              f"scanned {r.scanned_clips} "
+              f"({r.stats.scan_seconds * 1e3:.2f}ms)")
+        r = service.query(Query.count_frames(min_count=2), query_clips)
+        print(f"  unregioned count query: {r.indexed_clips} clips "
+              f"answered straight from histograms")
+
+        # -- and a size budget: evict LRU clips, re-query transparently
+        budget = int(store.disk_bytes() * 0.5)
+        evicted = store.set_budget(StoreBudget(max_bytes=budget))
+        r = service.query(Query.count_frames(min_count=2), query_clips)
+        print(f"  after a {budget} B budget: {evicted} clips evicted, "
+              f"re-query re-ingested {r.stats.ingested_clips} and "
+              f"matches: {r.aggregates}")
 
 
 if __name__ == "__main__":

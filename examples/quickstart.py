@@ -71,8 +71,13 @@ def main() -> None:
             r = service.query(q, test)
             answer = r.frames if q.aggregate == "frames" \
                 else int(r.aggregates["count"])
+            # skipped = clips the per-clip index summaries proved
+            # irrelevant; indexed = clips answered from precomputed
+            # count histograms without touching a row
             print(f"  {desc}: {answer} "
-                  f"({r.stats.scan_seconds * 1e3:.2f}ms)")
+                  f"({r.stats.scan_seconds * 1e3:.2f}ms, "
+                  f"{r.skipped_clips} skipped / {r.indexed_clips} "
+                  f"indexed of {r.n_clips})")
 
 
 if __name__ == "__main__":

@@ -7,19 +7,31 @@ touched again for a warm clip.
 
   * ``store``   — ``TrackStore``: persistent, versioned materialization
     of ``executor.run_clips`` outputs, keyed by
-    (dataset, clip, θ-fingerprint), with incremental ingest;
+    (dataset, clip, θ-fingerprint), with incremental ingest and an
+    optional ``StoreBudget`` (LRU/TTL eviction of clip NPZs; evicted
+    clips keep their index summaries and re-ingest on next touch);
+  * ``index``   — secondary indexes built at materialize time:
+    per-frame count histograms (min_len buckets), per-track bounding
+    boxes, and per-clip ``ClipSummary`` digests persisted in the
+    version's ``index.json`` (they survive eviction);
   * ``ops``     — composable query operators (spatial regions, temporal
     ranges, per-frame count predicates, track filters, limit-N,
-    aggregations);
-  * ``plan``    — compiles a ``Query`` into a vectorized numpy plan
-    over the store's packed track arrays;
-  * ``service`` — ``QueryService``: thread-safe concurrent queries with
-    transparent ingest of cold clips and per-query latency accounting
-    (ingest vs scan).
+    aggregations, an optional dataset scope);
+  * ``plan``    — compiles a ``Query`` into a two-phase plan: consult
+    the index to skip whole clips or answer count/limit queries from
+    histograms, fall back to the vectorized row scan otherwise —
+    bit-identical either way (tests/test_query_index.py);
+  * ``service`` — ``QueryService``: thread-safe concurrent queries over
+    one store or a ``{dataset: store}`` mapping, with transparent
+    ingest of cold clips and per-query latency accounting
+    (ingest vs scan, median + p95).
 """
+from repro.query.index import (MIN_LEN_BUCKETS, ClipSummary,  # noqa: F401
+                               build_index, summarize)
 from repro.query.ops import (CountAtLeast, Limit, Query, Region,  # noqa: F401
                              TimeRange, TrackFilter)
-from repro.query.plan import CompiledPlan, QueryResult, compile_query  # noqa: F401
+from repro.query.plan import CompiledPlan, QueryResult, compile_query  # noqa: F401,E501
 from repro.query.service import QueryService, QueryStats  # noqa: F401
 from repro.query.store import (IngestReport, PackedTracks,  # noqa: F401
-                               TrackStore, theta_fingerprint)
+                               StoreBudget, TrackStore,
+                               theta_fingerprint)

@@ -19,6 +19,14 @@ Frame-level operators:
   * ``CountAtLeast(k)`` — a frame matches when at least ``k`` surviving
     track points land on it.
 
+Scoping:
+  * ``Query.datasets`` — an optional tuple of dataset (profile) names;
+    a scoped query only considers clips of those datasets.  This is how
+    one ``QueryService`` fronting several stores routes a query: clips
+    outside the scope are dropped BEFORE the scan, preserving the
+    remaining clips' scan order and their indices into the caller's
+    clip list.  ``q.scoped("caldot1")`` derives a scoped copy.
+
 Result shaping:
   * ``Limit(n, min_spacing)`` — stop after ``n`` matching frames,
     scanning clips in order and frames in ascending order, skipping
@@ -31,6 +39,7 @@ Result shaping:
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
@@ -106,15 +115,25 @@ Op = object     # Region | TimeRange | TrackFilter | CountAtLeast
 
 @dataclass(frozen=True)
 class Query:
-    """A conjunction of operators + limit + aggregation mode."""
+    """A conjunction of operators + limit + aggregation mode + an
+    optional dataset scope."""
     where: Tuple[Op, ...] = field(default_factory=tuple)
     limit: Optional[Limit] = None
     aggregate: str = "frames"
+    datasets: Optional[Tuple[str, ...]] = None
 
     def __post_init__(self):
         if self.aggregate not in AGGREGATES:
             raise ValueError(f"unknown aggregate {self.aggregate!r} "
                              f"(expected one of {AGGREGATES})")
+        if self.datasets is not None:
+            if isinstance(self.datasets, str):
+                raise TypeError("datasets must be a tuple of names, "
+                                "not a bare string")
+            object.__setattr__(self, "datasets", tuple(self.datasets))
+            if not all(isinstance(d, str) for d in self.datasets):
+                raise TypeError(f"dataset names must be strings: "
+                                f"{self.datasets!r}")
         if self.limit is not None and self.aggregate != "frames":
             # the limit scan early-exits, so a scalar aggregate computed
             # under it would be a silently truncated count
@@ -124,6 +143,10 @@ class Query:
             if not isinstance(op, (Region, TimeRange, TrackFilter,
                                    CountAtLeast)):
                 raise TypeError(f"unknown operator {op!r}")
+
+    def scoped(self, *datasets: str) -> "Query":
+        """A copy of this query restricted to the named datasets."""
+        return dataclasses.replace(self, datasets=tuple(datasets))
 
     # -- convenience constructors ---------------------------------------------
 

@@ -1,23 +1,47 @@
-"""Query compilation + vectorized execution over packed track arrays.
+"""Query compilation + two-phase vectorized execution over packed
+track arrays.
 
 ``compile_query`` folds a ``Query``'s operator conjunction into one
 ``CompiledPlan`` (regions intersect, time ranges intersect, track
-filters merge, count thresholds take the max), and the plan scans each
-clip's ``PackedTracks`` with pure numpy:
+filters merge, count thresholds take the max).  Execution is
+two-phase, per clip, in scan order:
+
+  **Phase 1 — consult the index** (``repro.query.index``):
+
+  1. skip test    — the clip's ``ClipSummary`` proves it cannot
+     contribute (query region disjoint from the union track bbox, time
+     window outside the frame span, ``min_count`` above the per-frame
+     maximum, ``min_len`` above the longest track).  Skipped clips cost
+     O(1), are never loaded (summaries survive eviction), and don't
+     count toward ``scanned_clips``;
+  2. histogram answer — when the predicate is indexed (min_len is a
+     histogram bucket, no class filter, region absent or provably a
+     no-op because it contains the bucket's union bbox), per-frame
+     counts come straight from the precomputed histogram row — zero
+     rows touched, bit-identical to the scan by construction.
+
+  **Phase 2 — fall back to the row scan** (the PR-3 path):
 
   1. track mask   — ``lengths >= min_len`` (&& class membership);
   2. row mask     — track mask gathered onto rows, AND region bounds on
      the (cx, cy) columns, AND the frame-index window;
   3. frame counts — ``np.bincount`` of the surviving rows' frame
      column: per-frame object counts in one pass;
-  4. matching frames — ``counts >= k`` via ``np.flatnonzero``
-     (ascending order for free);
-  5. limit        — greedy spacing filter per clip, early-exiting the
-     clip loop the moment the n-th frame is found.
 
-Every step is O(rows) vectorized; nothing at query time touches pixels,
-models, or per-track Python loops, which is what makes warm queries
-run in milliseconds against multi-clip stores (BENCH_query.json).
+  then (either phase) matching frames are ``counts >= k`` via
+  ``np.flatnonzero`` (ascending order for free), and limit queries run
+  the greedy spacing filter per clip, early-exiting the clip loop the
+  moment the n-th frame is found.
+
+``run(..., use_index=False)`` disables phase 1 entirely — the
+differential tests (tests/test_query_index.py) assert both modes give
+bit-identical results on every query shape, and the benchmark's
+indexed-vs-scan mode measures the gap.
+
+Every step is O(rows) vectorized (O(1) when the index answers);
+nothing at query time touches pixels, models, or per-track Python
+loops, which is what makes warm queries run in milliseconds against
+multi-clip stores (BENCH_query.json).
 
 The limit-scan semantics replicate the original inline
 ``experiment.limit_query_experiment`` loop exactly (clips in order,
@@ -26,11 +50,13 @@ tests/test_query.py.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.query.index import MIN_LEN_BUCKETS, ClipSummary, bbox_is_empty
 from repro.query.ops import (CountAtLeast, Limit, Query, Region,
                              TimeRange, TrackFilter)
 from repro.query.store import PackedTracks
@@ -40,12 +66,25 @@ from repro.query.store import PackedTracks
 class QueryResult:
     """What a plan returns.  ``frames`` is the matching
     (clip_index, frame) list (limit queries); ``aggregates`` carries the
-    scalar results; ``scanned_clips`` shows the early-exit at work."""
+    scalar results; ``scanned_clips``/``skipped_clips``/``indexed_clips``
+    show the early-exit and the index at work."""
     frames: List[Tuple[int, int]] = field(default_factory=list)
     aggregates: Dict[str, float] = field(default_factory=dict)
-    scanned_clips: int = 0
+    scanned_clips: int = 0      # clips that touched packed arrays
+    skipped_clips: int = 0      # clips proven irrelevant by summary
+    indexed_clips: int = 0      # clips answered from the histogram
     n_clips: int = 0
     stats: Optional[object] = None      # QueryStats, filled by the service
+
+
+def _normalize(entry) -> Tuple[object, Optional[PackedTracks],
+                               Optional[ClipSummary]]:
+    """Entries are (clip, packed) or (clip, packed, summary)."""
+    if len(entry) == 2:
+        clip, packed = entry
+        return clip, packed, None
+    clip, packed, summary = entry
+    return clip, packed, summary
 
 
 @dataclass(frozen=True)
@@ -58,6 +97,7 @@ class CompiledPlan:
     min_count: int
     limit: Optional[Limit]
     aggregate: str
+    datasets: Optional[Tuple[str, ...]] = None      # service-level scope
 
     def describe(self) -> str:
         parts = [f"agg={self.aggregate}", f"count>={self.min_count}",
@@ -73,9 +113,83 @@ class CompiledPlan:
         if self.limit is not None:
             parts.append(f"limit={self.limit.n}"
                          f"@{self.limit.min_spacing}")
+        if self.datasets is not None:
+            parts.append(f"datasets={sorted(self.datasets)}")
         return " ".join(parts)
 
-    # -- per-clip kernels -----------------------------------------------------
+    # -- phase 1: index consultation ------------------------------------------
+
+    def _floor_bucket(self) -> int:
+        """Index of the largest bucket <= min_len.  Sound for pruning:
+        the bucket's surviving set is a SUPERSET of the plan's, so its
+        max_count/bbox bound the plan's from above."""
+        bi = 0
+        for i, b in enumerate(MIN_LEN_BUCKETS):
+            if b <= self.min_len:
+                bi = i
+        return bi
+
+    def can_skip(self, summary: Optional[ClipSummary]) -> bool:
+        """True when the summary PROVES the clip contributes nothing to
+        this plan (sound for every aggregate: no surviving row means no
+        frame, no second, no track)."""
+        if summary is None:
+            return False
+        if summary.n_rows == 0:
+            return True
+        if self.min_len > summary.max_len:
+            return True                 # no track long enough
+        bi = self._floor_bucket()
+        if self.aggregate != "tracks" \
+                and self.min_count > summary.max_count[bi]:
+            # no frame can reach the count — but the "tracks" aggregate
+            # ignores count predicates, so the test is unsound there
+            return True
+        if self.time_range is not None:
+            t = self.time_range
+            if t.start > summary.max_frame:
+                return True
+            if t.end is not None and t.end <= summary.min_frame:
+                return True
+        if self.region is not None:
+            r = self.region
+            if math.isnan(r.x0):
+                return True             # folded-disjoint sentinel region
+            bb = summary.bbox[bi]
+            if bbox_is_empty(bb):
+                return True             # no surviving track anywhere
+            if r.x1 < bb[0] or bb[2] < r.x0 \
+                    or r.y1 < bb[1] or bb[3] < r.y0:
+                return True             # region disjoint from every track
+        return False
+
+    def _indexed_counts(self, packed: PackedTracks) -> Optional[np.ndarray]:
+        """Per-frame counts straight from the histogram, or None when
+        the predicate is not indexed (class filter, off-bucket min_len,
+        region that actually filters rows)."""
+        if self.classes is not None or packed.hist is None:
+            return None
+        if self.min_len not in MIN_LEN_BUCKETS:
+            return None
+        bi = MIN_LEN_BUCKETS.index(self.min_len)
+        if self.region is not None:
+            bb = packed.summary.bbox[bi]
+            if not bbox_is_empty(bb):
+                r = self.region
+                if not (r.x0 <= bb[0] and r.y0 <= bb[1]
+                        and bb[2] <= r.x1 and bb[3] <= r.y1):
+                    return None         # region filters: needs the scan
+            # empty bbox: every histogram row is zero, region moot
+        counts = packed.hist[bi].astype(np.int64)   # astype = fresh copy
+        if self.time_range is not None:
+            t = self.time_range
+            if t.start > 0:
+                counts[:min(t.start, len(counts))] = 0
+            if t.end is not None and t.end < len(counts):
+                counts[t.end:] = 0
+        return counts
+
+    # -- phase 2: per-clip scan kernels ---------------------------------------
 
     def _row_mask(self, packed: PackedTracks, profile) -> np.ndarray:
         """(N,) rows surviving the track + region + time predicates."""
@@ -106,29 +220,44 @@ class CompiledPlan:
 
     # -- execution ------------------------------------------------------------
 
-    def run(self, entries: Sequence[Tuple[object, PackedTracks]]
+    def run(self, entries: Sequence, use_index: bool = True
             ) -> QueryResult:
-        """entries: (clip, PackedTracks) in scan order; clip provides
-        ``profile`` (fps, pattern classification) only."""
+        """entries: (clip, PackedTracks[, ClipSummary]) in scan order;
+        clip provides ``profile`` (fps, pattern classification) only.
+        ``packed`` may be None only for clips the summary can skip
+        (evicted clips the planner proved irrelevant)."""
         res = QueryResult(n_clips=len(entries))
-        if self.aggregate == "tracks":
-            total = 0
-            for clip, packed in entries:
-                res.scanned_clips += 1
-                mask = self._row_mask(packed, clip.profile)
-                if packed.n_tracks:
-                    total += len(np.unique(packed.row_track[mask]))
-            res.aggregates["tracks"] = total
-            return res
-
         n_match = 0
         seconds = 0.0
-        for ci, (clip, packed) in enumerate(entries):
+        total_tracks = 0
+        for ci, entry in enumerate(entries):
+            clip, packed, summary = _normalize(entry)
             if self.limit is not None \
                     and len(res.frames) >= self.limit.n:
-                break                       # early-exit: clip never scanned
+                break                   # early-exit: clip never scanned
+            if self.datasets is not None \
+                    and clip.profile.name not in self.datasets:
+                continue                # out of scope: contributes nothing
+            if summary is None and packed is not None:
+                summary = packed.summary
+            if use_index and self.can_skip(summary):
+                res.skipped_clips += 1
+                continue
+            if packed is None:
+                raise RuntimeError(
+                    f"clip {ci} is cold and the index cannot skip it")
             res.scanned_clips += 1
-            counts = self._frame_counts(packed, clip.profile)
+            if self.aggregate == "tracks":
+                mask = self._row_mask(packed, clip.profile)
+                if packed.n_tracks:
+                    total_tracks += len(
+                        np.unique(packed.row_track[mask]))
+                continue
+            counts = self._indexed_counts(packed) if use_index else None
+            if counts is not None:
+                res.indexed_clips += 1
+            else:
+                counts = self._frame_counts(packed, clip.profile)
             hits = np.flatnonzero(counts >= self.min_count)
             n_match += len(hits)
             seconds += len(hits) / max(packed.fps, 1)
@@ -145,7 +274,9 @@ class CompiledPlan:
                 if all(abs(f - g) >= spacing for g in picked):
                     res.frames.append((ci, f))
                     picked.append(f)
-        if self.limit is None:
+        if self.aggregate == "tracks":
+            res.aggregates["tracks"] = total_tracks
+        elif self.limit is None:
             # under a limit the early-exit makes these partial sums;
             # Query rejects limit+scalar-aggregate, and we don't expose
             # truncated totals as side-channel aggregates either
@@ -187,4 +318,4 @@ def compile_query(q: Query) -> CompiledPlan:
         else:                               # Query.__post_init__ rejects
             raise TypeError(f"unknown operator {op!r}")
     return CompiledPlan(region, time_range, min_len, classes, min_count,
-                        q.limit, q.aggregate)
+                        q.limit, q.aggregate, q.datasets)

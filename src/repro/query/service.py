@@ -1,13 +1,28 @@
-"""QueryService: concurrent exploratory queries over a TrackStore.
+"""QueryService: concurrent exploratory queries over one or MANY
+TrackStores.
 
-The service is the subsystem's front door.  Any number of threads may
-call ``query`` concurrently; each call
+The service is the subsystem's front door.  It fronts either a single
+``TrackStore`` or a mapping ``{dataset_name: TrackStore}`` — a query's
+clips are routed to the store owning their dataset (``profile.name``),
+results are merged back in the caller's scan order, and
+``Query.datasets`` optionally scopes a query to a subset of datasets
+(clips outside the scope are dropped before the scan; surviving frames
+keep their indices into the caller's clip list).
 
-  1. **warms** the clips it needs — cold clips are ingested through the
-     store (one ingest at a time; concurrent queries needing the same
-     cold clips wait on the ingest lock and then find them warm instead
-     of extracting twice);
-  2. **scans** the packed track arrays through the compiled plan.
+Any number of threads may call ``query`` concurrently; each call
+
+  1. **consults the index** — each clip's persisted ``ClipSummary``
+     (which survives eviction) is tested against the compiled plan;
+     clips the summary proves irrelevant are neither warmed nor
+     scanned, so a selective query over a partially-evicted store
+     re-ingests nothing it does not actually need;
+  2. **warms** the clips it still needs — cold clips are ingested
+     through their store (one ingest at a time; concurrent queries
+     needing the same cold clips wait on the ingest lock and then find
+     them warm instead of extracting twice);
+  3. **scans** the packed track arrays through the compiled plan
+     (two-phase: histogram answers when the predicate is indexed, row
+     scan otherwise — see ``repro.query.plan``).
 
 Every result carries a ``QueryStats`` with the latency split into
 ingest vs scan time — the exploratory-analytics contract in numbers:
@@ -28,12 +43,19 @@ import threading
 import time
 from collections import deque
 from dataclasses import dataclass
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Deque, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.data.video_synth import Clip
 from repro.query.ops import Query
-from repro.query.plan import QueryResult, compile_query
+from repro.query.plan import CompiledPlan, QueryResult, compile_query
 from repro.query.store import IngestReport, TrackStore
+
+# A query whose working set was evicted mid-flight (θ swap or a budget
+# smaller than the set) retries warm→get this many times before
+# failing loudly instead of livelocking.
+_WARM_ATTEMPTS = 3
 
 
 @dataclass
@@ -50,13 +72,42 @@ class QueryStats:
 
 
 class QueryService:
-    """Thread-safe query answering with transparent cold-clip ingest."""
+    """Thread-safe query answering with transparent cold-clip ingest,
+    over one store or a ``{dataset: store}`` mapping."""
 
-    def __init__(self, store: TrackStore, history: int = 256):
-        self.store = store
+    def __init__(self, stores, history: int = 256):
+        if isinstance(stores, TrackStore):
+            self.stores: Dict[str, TrackStore] = {}
+            self.default_store: Optional[TrackStore] = stores
+        elif isinstance(stores, Mapping):
+            self.stores = dict(stores)
+            self.default_store = None
+        else:
+            raise TypeError(f"stores must be a TrackStore or a mapping "
+                            f"of dataset name to TrackStore, got "
+                            f"{type(stores).__name__}")
         self._ingest_lock = threading.Lock()
         self._hist_lock = threading.Lock()
         self._history: Deque[QueryStats] = deque(maxlen=history)
+
+    @property
+    def store(self) -> TrackStore:
+        """Back-compat single-store accessor."""
+        if self.default_store is not None:
+            return self.default_store
+        if len(self.stores) == 1:
+            return next(iter(self.stores.values()))
+        raise AttributeError("service fronts multiple stores; use "
+                             "store_for(clip) or .stores")
+
+    def store_for(self, clip: Clip) -> TrackStore:
+        """The store owning the clip's dataset."""
+        st = self.stores.get(clip.profile.name, self.default_store)
+        if st is None:
+            raise KeyError(f"no store for dataset "
+                           f"{clip.profile.name!r} (have "
+                           f"{sorted(self.stores)})")
+        return st
 
     # -- ingest ---------------------------------------------------------------
 
@@ -68,10 +119,38 @@ class QueryService:
         ingest lock, so queries over materialized clips keep their
         millisecond latency while a large background ingest (e.g. a
         ``prefetch`` of another split) is in flight."""
-        if all(self.store.has(c) for c in clips):
-            return IngestReport(requested=len(clips), cached=len(clips))
+        total = IngestReport(requested=len(clips))
+        # ONE group per store (keyed by identity, per-store clip order
+        # preserved): each store ingests its whole share as a single
+        # batch, keeping cross-clip decode prefetch and the
+        # batch-protected eviction semantics even for interleaved
+        # multi-dataset clip lists
+        groups: Dict[int, Tuple[TrackStore, List[Clip]]] = {}
+        for clip in clips:
+            st = self.store_for(clip)
+            groups.setdefault(id(st), (st, []))[1].append(clip)
+        cold_groups = []
+        for st, cs in groups.values():
+            if all(st.has(c) for c in cs):
+                total.cached += len(cs)
+            else:
+                cold_groups.append((st, cs))
+        if not cold_groups:
+            return total
         with self._ingest_lock:
-            return self.store.ingest(clips, log=log)
+            for st, cs in cold_groups:
+                r = st.ingest(cs, log=log)
+                total.ingested += r.ingested
+                total.cached += r.cached
+                total.frames += r.frames
+                total.seconds += r.seconds
+                total.wall_seconds += r.wall_seconds
+                total.evicted += r.evicted
+                total.evicted_bytes += r.evicted_bytes
+                # store_bytes is a per-store snapshot, not a delta:
+                # one batch per store makes summing them correct
+                total.store_bytes += r.store_bytes
+        return total
 
     def prefetch(self, clips: Sequence[Clip],
                  log=lambda *_: None) -> threading.Thread:
@@ -86,47 +165,96 @@ class QueryService:
 
     # -- queries --------------------------------------------------------------
 
+    def _gather(self, plan: CompiledPlan,
+                selected: Sequence[Tuple[int, Clip]], use_index: bool,
+                stats: "QueryStats", log) -> List[tuple]:
+        """Warm (index-aware) and collect (clip, packed, summary)
+        entries for the scan.  Summaries (and the skip decisions made
+        from them) are re-read on every attempt, and an attempt only
+        counts as successful if no store's θ-fingerprint moved while it
+        ran — a set_params racing the query can therefore trigger a
+        retry but never a silently mixed-θ answer.  Retries when
+        eviction or a θ swap races the warm-up; raises after
+        ``_WARM_ATTEMPTS``."""
+        def skippable(s):
+            return use_index and plan.can_skip(s)
+
+        for _ in range(_WARM_ATTEMPTS):
+            stores = {id(self.store_for(c)): self.store_for(c)
+                      for _, c in selected}
+            fps = {sid: st.fingerprint for sid, st in stores.items()}
+            summaries = [self.store_for(c).summary(c)
+                         for _, c in selected]
+            need = [c for (_, c), s in zip(selected, summaries)
+                    if not skippable(s)]
+            report = self.warm(need, log=log)
+            stats.ingested_clips += report.ingested
+            entries, missing = [], []
+            for (_, c), s in zip(selected, summaries):
+                packed = None
+                if not skippable(s):
+                    packed = self.store_for(c).get(c)
+                    if packed is None:
+                        missing.append(c)
+                entries.append((c, packed, s))
+            stable = all(st.fingerprint == fps[sid]
+                         for sid, st in stores.items())
+            if not missing and stable:
+                return entries
+        raise RuntimeError(
+            f"clips still cold after {_WARM_ATTEMPTS} warm attempts "
+            f"(θ kept changing mid-query, or the store budget is too "
+            f"small for this query's working set)")
+
     def query(self, q: Query, clips: Sequence[Clip],
-              log=lambda *_: None) -> QueryResult:
-        """Answer ``q`` over ``clips`` (scan order = list order)."""
+              log=lambda *_: None, use_index: bool = True) -> QueryResult:
+        """Answer ``q`` over ``clips`` (scan order = list order;
+        ``q.datasets`` drops out-of-scope clips first).  Frame indices
+        in the result refer to positions in ``clips``.
+        ``use_index=False`` forces the full row scan — the differential
+        baseline the indexed path is tested against."""
         stats = QueryStats()
         plan = compile_query(q)
         stats.plan = plan.describe()
+        selected = [(i, c) for i, c in enumerate(clips)
+                    if q.datasets is None
+                    or c.profile.name in q.datasets]
         t0 = time.perf_counter()
-        report = self.warm(clips, log=log)
+        entries = self._gather(plan, selected, use_index, stats, log)
         stats.ingest_seconds = time.perf_counter() - t0
-        stats.ingested_clips = report.ingested
         t0 = time.perf_counter()
-        entries = [(clip, self.store.get(clip)) for clip in clips]
-        missing = [i for i, (_, p) in enumerate(entries) if p is None]
-        if missing:                  # ingest raced a set_params; be loud
-            raise RuntimeError(f"clips {missing} cold after ingest "
-                               f"(θ changed mid-query?)")
-        result = plan.run(entries)
+        result = plan.run(entries, use_index=use_index)
+        # plan indices are positions in `selected`; map back to `clips`
+        result.frames = [(selected[j][0], f) for j, f in result.frames]
         stats.scan_seconds = time.perf_counter() - t0
         result.stats = stats
         with self._hist_lock:
             self._history.append(stats)
         log(f"[query] {stats.plan}: ingest={stats.ingest_seconds:.3f}s "
             f"({stats.ingested_clips} clips) "
-            f"scan={stats.scan_seconds * 1e3:.2f}ms")
+            f"scan={stats.scan_seconds * 1e3:.2f}ms "
+            f"(skipped {result.skipped_clips}, indexed "
+            f"{result.indexed_clips} of {result.n_clips})")
         return result
 
     # -- reporting ------------------------------------------------------------
 
     def latency_report(self) -> Dict[str, float]:
-        """Aggregate ingest/scan split over the recorded history."""
+        """Aggregate ingest/scan split over the recorded history.
+        Median and p95 use linear interpolation (an even-length history
+        averages the two middle scans rather than reporting the upper
+        one)."""
         with self._hist_lock:
             hist: List[QueryStats] = list(self._history)
         if not hist:
             return {"queries": 0}
-        scans = sorted(s.scan_seconds for s in hist)
-        mid = len(scans) // 2
+        scans = np.asarray(sorted(s.scan_seconds for s in hist))
         return {
             "queries": len(hist),
             "ingest_seconds_total": sum(s.ingest_seconds for s in hist),
             "scan_seconds_total": sum(s.scan_seconds for s in hist),
-            "scan_seconds_median": scans[mid],
+            "scan_seconds_median": float(np.median(scans)),
+            "scan_seconds_p95": float(np.percentile(scans, 95)),
             "warm_queries": sum(1 for s in hist
                                 if s.ingested_clips == 0),
         }

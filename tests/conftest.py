@@ -13,3 +13,41 @@ import pytest  # noqa: E402
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def qsys(tmp_path_factory):
+    """One trained bank + params + 3 ingested clips + warm TrackStore,
+    shared by tests/test_query.py and tests/test_query_index.py (the
+    detector training dominates the cost, so build it once a session)."""
+    import repro.core.pipeline as pl
+    from repro.configs.multiscope import MULTISCOPE_PIPELINE
+    from repro.core.proxy import ProxyModel
+    from repro.core.tracker import init_tracker
+    from repro.core.train_models import train_detector
+    from repro.data.video_synth import make_split
+    from repro.query import TrackStore
+
+    cfg = MULTISCOPE_PIPELINE.reduced()
+    clips = make_split("caldot1", "test", 3, n_frames=24)
+    det, _ = train_detector("ssd-lite", clips[:2],
+                            [cfg.detector.resolutions[-1]], steps=60)
+    bank = pl.ModelBank(cfg, {"ssd-lite": det, "ssd-deep": det})
+    res = cfg.proxy.resolutions[-1]
+    proxy = ProxyModel(cfg.proxy.cell, cfg.proxy.base_channels, res)
+    bank.proxies = {res: proxy}
+    bank.sizes_cells = [pl.det_grid(cfg.detector.resolutions[-1]),
+                        (3, 2), (5, 3)]
+    bank.ref_grid = pl.det_grid(cfg.detector.resolutions[-1])
+    bank.tracker_params = init_tracker(cfg.tracker)
+    W, H = cfg.detector.resolutions[-1]
+    frame, _ = pl.render_frame(clips[0], 0, W, H)
+    s, _ = proxy.scores(pl._downsample(frame, res))
+    params = pl.PipelineParams(
+        "ssd-lite", cfg.detector.resolutions[-1], 0.4, gap=1,
+        proxy_res=res, proxy_threshold=float(np.quantile(s, 0.85)),
+        tracker="sort", refine=False)
+    root = str(tmp_path_factory.mktemp("trackstore"))
+    store = TrackStore(root, bank, params)
+    store.ingest(clips)
+    return bank, params, clips, store, root

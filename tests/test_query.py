@@ -19,44 +19,14 @@ import threading
 import numpy as np
 import pytest
 
-from repro.configs.multiscope import MULTISCOPE_PIPELINE
-from repro.core import pipeline as pl
 from repro.core.executor import run_clips
-from repro.core.proxy import ProxyModel
-from repro.core.tracker import init_tracker
-from repro.core.train_models import train_detector
-from repro.data.video_synth import make_split
 from repro.query import (CountAtLeast, Limit, PackedTracks, Query,
                          QueryService, Region, TimeRange, TrackFilter,
                          TrackStore, compile_query, theta_fingerprint)
 from repro.query.ref import reference_limit_scan
 
-
-@pytest.fixture(scope="module")
-def qsys(tmp_path_factory):
-    cfg = MULTISCOPE_PIPELINE.reduced()
-    clips = make_split("caldot1", "test", 3, n_frames=24)
-    det, _ = train_detector("ssd-lite", clips[:2],
-                            [cfg.detector.resolutions[-1]], steps=60)
-    bank = pl.ModelBank(cfg, {"ssd-lite": det, "ssd-deep": det})
-    res = cfg.proxy.resolutions[-1]
-    proxy = ProxyModel(cfg.proxy.cell, cfg.proxy.base_channels, res)
-    bank.proxies = {res: proxy}
-    bank.sizes_cells = [pl.det_grid(cfg.detector.resolutions[-1]),
-                        (3, 2), (5, 3)]
-    bank.ref_grid = pl.det_grid(cfg.detector.resolutions[-1])
-    bank.tracker_params = init_tracker(cfg.tracker)
-    W, H = cfg.detector.resolutions[-1]
-    frame, _ = pl.render_frame(clips[0], 0, W, H)
-    s, _ = proxy.scores(pl._downsample(frame, res))
-    params = pl.PipelineParams(
-        "ssd-lite", cfg.detector.resolutions[-1], 0.4, gap=1,
-        proxy_res=res, proxy_threshold=float(np.quantile(s, 0.85)),
-        tracker="sort", refine=False)
-    root = str(tmp_path_factory.mktemp("trackstore"))
-    store = TrackStore(root, bank, params)
-    store.ingest(clips)
-    return bank, params, clips, store, root
+# the shared `qsys` fixture (trained bank + warm store over 3 caldot1
+# clips) lives in conftest.py — tests/test_query_index.py uses it too
 
 
 # ---------------------------------------------------------------------------

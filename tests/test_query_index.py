@@ -1,0 +1,634 @@
+"""Index + eviction + cross-dataset serving tests (PR 4).
+
+Covers the new layers of the query subsystem:
+
+  * **differential correctness** — the two-phase indexed plan returns
+    BIT-IDENTICAL answers to the full row scan and to the naive inline
+    ``ref.reference_query`` loop, across a grid of
+    region × time × min_len × count × limit × aggregate shapes;
+  * **index pruning** — summaries skip whole clips (``skipped_clips``
+    proves it) and histograms answer indexed predicates without
+    touching rows (``indexed_clips``), including on a real
+    executor-extracted store;
+  * **eviction** — ``StoreBudget`` LRU/TTL eviction keeps the store
+    under budget, evicted clips stay summarized (skippable without
+    re-ingest) and re-ingest bit-identically on the next touch;
+  * **bugfix regressions** — the get/has θ-swap race, the prune crash
+    on nested version content, and the even-history median bug.
+"""
+import dataclasses
+import itertools
+import json
+import os
+import shutil
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.pipeline import PipelineParams, RunResult
+from repro.query import (MIN_LEN_BUCKETS, CountAtLeast, Limit,
+                         PackedTracks, Query, QueryService, Region,
+                         StoreBudget, TimeRange, TrackFilter,
+                         TrackStore, compile_query, theta_fingerprint)
+from repro.query.ref import reference_limit_scan, reference_query
+from repro.query.store import clip_key
+
+
+# ---------------------------------------------------------------------------
+# Fake clips + bank-less stores (no models: materialize directly)
+# ---------------------------------------------------------------------------
+
+class _Profile:
+    def __init__(self, name: str, fps: int = 8):
+        self.name, self.fps = name, fps
+
+
+class _Clip:
+    def __init__(self, profile, clip_id: int, n_frames: int,
+                 split: str = "test"):
+        self.profile, self.clip_id = profile, clip_id
+        self.n_frames, self.split = n_frames, split
+
+
+def _params(**kw) -> PipelineParams:
+    base = dict(det_arch="ssd-lite", det_res=(64, 48), det_conf=0.4,
+                gap=1, proxy_res=None, tracker="sort", refine=False)
+    base.update(kw)
+    return PipelineParams(**base)
+
+
+def _result(tracks, n_frames) -> RunResult:
+    return RunResult(tracks=list(tracks), seconds=0.01,
+                     frames_processed=n_frames, detector_windows=0,
+                     full_frames=0, skipped_frames=0)
+
+
+def _make_tracks(rng, n_tracks, n_frames, center, spread=0.08,
+                 max_len=7):
+    tracks = []
+    for t in range(n_tracks):
+        ln = int(rng.integers(1, max_len + 1))
+        start = int(rng.integers(0, max(1, n_frames - ln + 1)))
+        frames = np.arange(start, start + ln, dtype=np.float32)
+        cx = np.clip(center[0] + rng.normal(0, spread, ln), 0, 1)
+        cy = np.clip(center[1] + rng.normal(0, spread, ln), 0, 1)
+        size = np.full(ln, 0.05, np.float32)
+        tracks.append(np.stack(
+            [frames, cx.astype(np.float32), cy.astype(np.float32),
+             size, size, np.full(ln, t, np.float32)], axis=1))
+    return tracks
+
+
+def _fleet(seed=0, dataset="fake"):
+    """A varied set of clips: clustered, empty, spread, early-only."""
+    rng = np.random.default_rng(seed)
+    prof = _Profile(dataset)
+    specs = [
+        (40, _make_tracks(rng, 6, 40, (0.25, 0.25))),   # lower-left
+        (40, _make_tracks(rng, 5, 40, (0.75, 0.75))),   # upper-right
+        (40, []),                                        # empty clip
+        (48, _make_tracks(rng, 8, 48, (0.5, 0.5), spread=0.3)),
+        (40, [t for t in _make_tracks(rng, 4, 9, (0.4, 0.6))]),
+    ]
+    clips = [_Clip(prof, i, nf) for i, (nf, _) in enumerate(specs)]
+    all_tracks = [trs for _, trs in specs]
+    return clips, all_tracks
+
+
+def _fake_store(root, clips, all_tracks, params=None,
+                budget=None) -> TrackStore:
+    store = TrackStore(str(root), None, params or _params(),
+                       budget=budget)
+    for clip, tracks in zip(clips, all_tracks):
+        store.materialize(clip, _result(tracks, clip.n_frames))
+    return store
+
+
+def _entries(clips, all_tracks):
+    return [(c, PackedTracks.pack(t, c))
+            for c, t in zip(clips, all_tracks)]
+
+
+def _query(region, time_range, min_len, min_count, limit=None,
+           aggregate="frames"):
+    where = [TrackFilter(min_len=min_len), CountAtLeast(min_count)]
+    if region is not None:
+        where.append(Region(*region))
+    if time_range is not None:
+        where.append(TimeRange(*time_range))
+    return Query(tuple(where),
+                 None if limit is None else Limit(*limit), aggregate)
+
+
+# ---------------------------------------------------------------------------
+# Differential: indexed == full scan == inline reference, all shapes
+# ---------------------------------------------------------------------------
+
+REGIONS = (None, (0.0, 0.0, 1.0, 1.0), (0.0, 0.0, 0.5, 0.5),
+           (0.6, 0.6, 1.0, 1.0), (0.45, 0.0, 0.55, 1.0),
+           (0.9, 0.02, 0.97, 0.08))
+TIMES = (None, (0, None), (5, 20), (30, None), (0, 4))
+MIN_LENS = (1, 2, 3, 4)          # 4 is off-bucket: exercises fallback
+COUNTS = (1, 2, 4)
+
+
+def test_differential_grid_all_query_shapes():
+    clips, all_tracks = _fleet()
+    entries = _entries(clips, all_tracks)
+    fps = [c.profile.fps for c in clips]
+    skipped = indexed = 0
+    shapes = 0
+    for region, trange, mlen, mcount in itertools.product(
+            REGIONS, TIMES, MIN_LENS, COUNTS):
+        for limit, agg in ((None, "count"), (None, "frames"),
+                           (None, "duration"), (None, "tracks"),
+                           ((5, 0), "frames"), ((3, 3), "frames")):
+            q = _query(region, trange, mlen, mcount, limit, agg)
+            plan = compile_query(q)
+            a = plan.run(entries, use_index=True)
+            b = plan.run(entries, use_index=False)
+            assert a.frames == b.frames, plan.describe()
+            assert a.aggregates == b.aggregates, plan.describe()
+            ref = reference_query(
+                all_tracks, fps, region=region, time_range=trange,
+                min_len=mlen, min_count=mcount, limit=limit,
+                aggregate=agg)
+            assert a.frames == ref["frames"], plan.describe()
+            assert a.aggregates == ref["aggregates"], plan.describe()
+            skipped += a.skipped_clips
+            indexed += a.indexed_clips
+            shapes += 1
+    # both index phases must actually fire somewhere in the grid
+    assert skipped > 0 and indexed > 0
+    assert shapes == len(REGIONS) * len(TIMES) * len(MIN_LENS) \
+        * len(COUNTS) * 6
+
+
+def test_disjoint_region_fold_skips_everything():
+    clips, all_tracks = _fleet()
+    entries = _entries(clips, all_tracks)
+    q = Query((Region(0.0, 0.0, 0.2, 0.2), Region(0.8, 0.8, 1.0, 1.0),
+               CountAtLeast(1)), aggregate="count")
+    res = compile_query(q).run(entries)
+    assert res.aggregates["count"] == 0
+    assert res.skipped_clips == len(entries) and res.scanned_clips == 0
+
+
+def test_selective_region_skips_clips_bit_identically():
+    clips, all_tracks = _fleet()
+    entries = _entries(clips, all_tracks)
+    # lower-left box: the upper-right cluster + empty clip must skip
+    q = _query((0.0, 0.0, 0.35, 0.35), None, 2, 1, aggregate="count")
+    plan = compile_query(q)
+    a = plan.run(entries, use_index=True)
+    b = plan.run(entries, use_index=False)
+    assert a.aggregates == b.aggregates
+    assert a.skipped_clips >= 2
+    assert a.scanned_clips + a.skipped_clips == len(entries)
+    assert b.skipped_clips == 0 and b.scanned_clips == len(entries)
+
+
+def test_histogram_answers_indexed_predicates():
+    clips, all_tracks = _fleet()
+    entries = _entries(clips, all_tracks)
+    for mlen in MIN_LEN_BUCKETS:
+        for trange in (None, (5, 20)):
+            q = _query(None, trange, mlen, 1, aggregate="count")
+            res = compile_query(q).run(entries)
+            # every clip the plan actually scanned came from the hist
+            assert res.indexed_clips == res.scanned_clips > 0
+    # off-bucket min_len and full-coverage region both fall back
+    res = compile_query(_query(None, None, 4, 1, aggregate="count")) \
+        .run(entries)
+    assert res.indexed_clips == 0
+    # a region CONTAINING every track bbox is a provable no-op, so the
+    # histogram still answers
+    res = compile_query(
+        _query((0.0, 0.0, 1.0, 1.0), None, 2, 1, aggregate="count")) \
+        .run(entries)
+    assert res.indexed_clips == res.scanned_clips > 0
+    # ...but a region that actually filters SOME clip's rows forces the
+    # scan for that clip (containment is decided per clip, so others
+    # whose bbox fits inside the region may still go indexed)
+    res = compile_query(
+        _query((0.2, 0.2, 0.8, 0.8), None, 2, 1, aggregate="count")) \
+        .run(entries)
+    assert res.indexed_clips < res.scanned_clips
+
+
+def test_limit_early_exit_still_counts_skips():
+    clips, all_tracks = _fleet()
+    entries = _entries(clips, all_tracks)
+    q = _query(None, None, 1, 1, limit=(100, 0))
+    plan = compile_query(q)
+    a = plan.run(entries, use_index=True)
+    b = plan.run(entries, use_index=False)
+    assert a.frames == b.frames
+    assert a.skipped_clips >= 1          # the empty clip
+
+
+# ---------------------------------------------------------------------------
+# Index persistence: NPZ arrays + index.json summaries
+# ---------------------------------------------------------------------------
+
+def test_index_persisted_in_npz_and_json(tmp_path):
+    clips, all_tracks = _fleet()
+    store = _fake_store(tmp_path / "s", clips, all_tracks)
+    vdir = os.path.join(str(tmp_path / "s"), "fake", store.fingerprint)
+    with np.load(store._clip_path(clip_key(clips[0]))) as z:
+        assert "hist" in z.files and "track_bbox" in z.files
+        assert z["hist"].shape[0] == len(MIN_LEN_BUCKETS)
+    with open(os.path.join(vdir, "index.json")) as f:
+        doc = json.load(f)
+    assert doc["buckets"] == list(MIN_LEN_BUCKETS)
+    assert len(doc["clips"]) == len(clips)
+    # the empty clip serializes empty bboxes as null
+    empty = doc["clips"]["test_2_40"]
+    assert empty["summary"]["n_rows"] == 0
+    assert empty["summary"]["bbox"] == [None] * len(MIN_LEN_BUCKETS)
+
+    # a FRESH store over the same root serves summaries from
+    # index.json without touching a single NPZ
+    fresh = TrackStore(str(tmp_path / "s"), None, _params())
+    for clip, tracks in zip(clips, all_tracks):
+        s = fresh.summary(clip)
+        assert s is not None
+        assert s == PackedTracks.pack(tracks, clip).summary
+        assert clip_key(clip) not in fresh._index    # nothing loaded
+
+
+def test_loaded_clip_roundtrips_index_arrays(tmp_path):
+    clips, all_tracks = _fleet()
+    store = _fake_store(tmp_path / "s", clips, all_tracks)
+    fresh = TrackStore(str(tmp_path / "s"), None, _params())
+    for clip, tracks in zip(clips, all_tracks):
+        a = fresh.get(clip)
+        b = PackedTracks.pack(tracks, clip)
+        np.testing.assert_array_equal(a.hist, b.hist)
+        np.testing.assert_array_equal(a.track_bbox, b.track_bbox)
+
+
+# ---------------------------------------------------------------------------
+# Eviction: LRU / TTL budgets, metadata-preserving
+# ---------------------------------------------------------------------------
+
+def test_lru_eviction_respects_recency(tmp_path):
+    clips, all_tracks = _fleet()
+    store = _fake_store(tmp_path / "s", clips, all_tracks)
+    sizes = {clip_key(c): store._entries[clip_key(c)]["bytes"]
+             for c in clips}
+    store.get(clips[0])                  # clip 0 becomes most recent
+    keep = sizes[clip_key(clips[0])] + sizes[clip_key(clips[-1])]
+    evicted = store.set_budget(StoreBudget(max_bytes=keep))
+    assert evicted == len(clips) - 2
+    assert store.disk_bytes() <= keep
+    assert store.has(clips[0]) and store.has(clips[-1])
+    for c in clips[1:-1]:
+        assert not store.has(c)
+        assert store.summary(c) is not None      # summary survives
+        assert store.get(c) is None
+
+
+def test_lru_freshness_survives_index_json_reload(tmp_path):
+    """A get() on a FRESH store registers an entry before the dataset's
+    bulk index.json load; the later load must not clobber its
+    last_used, or the most-recently-used clip gets evicted first."""
+    clips, all_tracks = _fleet()
+    _fake_store(tmp_path / "s", clips, all_tracks)
+    store = TrackStore(str(tmp_path / "s"), None, _params())
+    store.get(clips[0])                  # registered pre-bulk-load
+    sizes = {clip_key(c): os.path.getsize(store._clip_path(clip_key(c)))
+             for c in clips}
+    keep = sizes[clip_key(clips[0])] + min(
+        sizes[clip_key(c)] for c in clips[1:])
+    store.set_budget(StoreBudget(max_bytes=keep))   # bulk-loads the rest
+    assert store.has(clips[0])           # the touched clip survived
+
+
+def test_ttl_eviction(tmp_path):
+    clips, all_tracks = _fleet()
+    store = _fake_store(tmp_path / "s", clips, all_tracks)
+    time.sleep(0.05)
+    evicted = store.set_budget(StoreBudget(ttl_seconds=0.01))
+    assert evicted == len(clips)
+    assert store.disk_bytes() == 0
+    assert all(store.summary(c) is not None for c in clips)
+
+
+def test_evicted_clip_skipped_without_reingest(tmp_path):
+    """A query whose predicate provably misses an evicted clip must be
+    answered WITHOUT re-ingesting it (the store has no bank here, so
+    any ingest attempt would raise)."""
+    clips, all_tracks = _fleet()
+    store = _fake_store(tmp_path / "s", clips, all_tracks)
+    service = QueryService(store)
+    q = _query((0.55, 0.55, 1.0, 1.0), None, 2, 1, aggregate="count")
+    before = service.query(q, clips).aggregates
+    # evict the lower-left cluster (clip 0): the query skips it anyway
+    with store._lock:
+        store._evict(clip_key(clips[0]))
+        store._flush_index("fake")
+    res = service.query(q, clips)
+    assert res.aggregates == before
+    assert res.stats.ingested_clips == 0
+    assert res.skipped_clips >= 1
+    # a query that DOES need the evicted clip fails loudly (no bank)
+    need = _query((0.0, 0.0, 1.0, 1.0), None, 1, 1, aggregate="count")
+    with pytest.raises(RuntimeError):
+        service.query(need, clips)
+
+
+def test_eviction_then_requery_matches(qsys, tmp_path):
+    """Acceptance: evict under a byte budget, re-query, get the same
+    answers back through transparent re-ingest."""
+    bank, params, clips, _, root = qsys
+    new_root = str(tmp_path / "copy")
+    shutil.copytree(root, new_root)
+    store = TrackStore(new_root, bank, params)
+    service = QueryService(store)
+    q = Query.count_frames(min_count=1)
+    ql = Query.limit_frames(want=6, min_spacing=2)
+    before_count = service.query(q, clips).aggregates
+    before_frames = service.query(ql, clips).frames
+    total = store.disk_bytes()
+    evicted = store.set_budget(StoreBudget(max_bytes=total - 1))
+    assert evicted >= 1
+    assert store.disk_bytes() <= total - 1
+    det = bank.detectors[params.det_arch]
+    calls0 = det.dispatches
+    after_count = service.query(q, clips)
+    after_frames = service.query(ql, clips).frames
+    assert after_count.aggregates == before_count
+    assert after_frames == before_frames
+    assert after_count.stats.ingested_clips == evicted
+    assert det.dispatches > calls0       # re-ingest really ran models
+
+
+def test_ingest_report_eviction_counters(qsys, tmp_path):
+    bank, params, clips, _, root = qsys
+    new_root = str(tmp_path / "copy")
+    shutil.copytree(root, new_root)
+    keep_two = TrackStore(new_root, bank, params).disk_bytes() * 2 // 3
+    store = TrackStore(new_root, bank, params,
+                       budget=StoreBudget(max_bytes=keep_two))
+    # warm ingest of a subset: budget enforcement runs, batch protected
+    report = store.ingest(clips[:2])
+    assert report.ingested == 0 and report.cached == 2
+    assert report.evicted >= 1 and report.evicted_bytes > 0
+    assert report.store_bytes <= keep_two
+    assert all(store.has(c) for c in clips[:2])     # batch survived
+
+
+def test_prune_after_eviction_leaves_only_current(tmp_path):
+    clips, all_tracks = _fleet()
+    root = tmp_path / "s"
+    store = _fake_store(root, clips, all_tracks)
+    # a stale version with NESTED content (the old unlink+rmdir prune
+    # crashed on exactly this) ...
+    stale = os.path.join(str(root), "fake", "deadbeefdeadbeef")
+    os.makedirs(os.path.join(stale, "sub", "dir"))
+    with open(os.path.join(stale, "sub", "dir", "x.npz"), "w") as f:
+        f.write("stale")
+    # ... plus an eviction in the live version
+    with store._lock:
+        store._evict(clip_key(clips[0]))
+        store._flush_index("fake")
+    removed = store.prune()
+    assert removed == ["deadbeefdeadbeef"]
+    left = os.listdir(os.path.join(str(root), "fake"))
+    assert left == [store.fingerprint]
+    vdir = os.path.join(str(root), "fake", store.fingerprint)
+    names = sorted(os.listdir(vdir))
+    assert "index.json" in names and "meta.json" in names
+    assert f"test_{clips[0].clip_id}_40.npz" not in names
+
+
+def test_prune_missing_root(tmp_path):
+    store = TrackStore(str(tmp_path / "never_created"), None, _params())
+    assert store.prune() == []
+
+
+# ---------------------------------------------------------------------------
+# Bugfix regressions: θ-swap race, latency report
+# ---------------------------------------------------------------------------
+
+def test_get_theta_swap_race(tmp_path):
+    """set_params racing get() must not cache (or report) the old θ's
+    clip under the new version's index."""
+    clips, all_tracks = _fleet()
+    _fake_store(tmp_path / "s", clips[:1], all_tracks[:1])
+    store = TrackStore(str(tmp_path / "s"), None, _params())
+    inside, resume = threading.Event(), threading.Event()
+    orig = store._read_clip
+
+    def slow_read(path):
+        inside.set()
+        assert resume.wait(5)
+        return orig(path)
+
+    store._read_clip = slow_read
+    out = []
+    th = threading.Thread(
+        target=lambda: out.append(store.get(clips[0])))
+    th.start()
+    assert inside.wait(5)                # loader is mid-read
+    changed = _params(det_conf=0.9)
+    store.set_params(changed)            # θ swaps under the loader
+    resume.set()
+    th.join(5)
+    assert out == [None]                 # stale-θ read not served
+    assert clip_key(clips[0]) not in store._index
+    assert not store.has(clips[0])       # new θ: cold, not warm
+    store.set_params(_params())          # back to the old θ
+    assert store.get(clips[0]) is not None
+
+
+def test_has_snapshots_fingerprint(tmp_path):
+    """has() must evaluate existence against ONE fingerprint, not mix
+    the index check of one θ with the path of another."""
+    clips, all_tracks = _fleet()
+    store = _fake_store(tmp_path / "s", clips[:1], all_tracks[:1])
+    fp_a = store.fingerprint
+    store.set_params(_params(det_conf=0.9))
+    assert not store.has(clips[0])
+    store.set_params(_params())
+    assert store.fingerprint == fp_a and store.has(clips[0])
+
+
+def test_latency_report_median_and_p95(tmp_path):
+    from repro.query.service import QueryStats
+    clips, all_tracks = _fleet()
+    store = _fake_store(tmp_path / "s", clips[:1], all_tracks[:1])
+    service = QueryService(store)
+    for v in (0.4, 0.1, 0.2, 0.3):       # even-length history
+        service._history.append(QueryStats(scan_seconds=v))
+    rep = service.latency_report()
+    assert rep["queries"] == 4
+    # interpolated median, NOT the upper middle element (0.3)
+    assert rep["scan_seconds_median"] == pytest.approx(0.25)
+    assert rep["scan_seconds_p95"] == pytest.approx(
+        float(np.percentile([0.1, 0.2, 0.3, 0.4], 95)))
+    empty = QueryService(store).latency_report()
+    assert empty == {"queries": 0}
+
+
+# ---------------------------------------------------------------------------
+# Cross-dataset serving
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def two_datasets(tmp_path):
+    clips_a, tracks_a = _fleet(seed=1, dataset="dsA")
+    clips_b, tracks_b = _fleet(seed=2, dataset="dsB")
+    sa = _fake_store(tmp_path / "a", clips_a, tracks_a)
+    sb = _fake_store(tmp_path / "b", clips_b, tracks_b)
+    service = QueryService({"dsA": sa, "dsB": sb})
+    # interleave: scan order must follow the caller's list order
+    clips = [c for pair in zip(clips_a, clips_b) for c in pair]
+    tracks = [t for pair in zip(tracks_a, tracks_b) for t in pair]
+    return service, clips, tracks
+
+
+def test_cross_dataset_scan_order_determinism(two_datasets):
+    service, clips, tracks = two_datasets
+    fps = [c.profile.fps for c in clips]
+    q = _query((0.0, 0.0, 0.6, 0.6), None, 2, 1, limit=(7, 3))
+    res = service.query(q, clips)
+    ref = reference_query(tracks, fps, region=(0.0, 0.0, 0.6, 0.6),
+                          min_len=2, min_count=1, limit=(7, 3))
+    assert res.frames == ref["frames"]
+    # and twice more: deterministic across repeats
+    assert service.query(q, clips).frames == res.frames
+    count = service.query(
+        _query(None, None, 2, 1, aggregate="count"), clips)
+    ref_c = reference_query(tracks, fps, min_len=2, min_count=1,
+                            aggregate="count")
+    assert count.aggregates == ref_c["aggregates"]
+
+
+def test_dataset_scope_routes_and_keeps_indices(two_datasets):
+    service, clips, tracks = two_datasets
+    fps = [c.profile.fps for c in clips]
+    q_all = _query(None, None, 2, 1, aggregate="count")
+    total = service.query(q_all, clips).aggregates["count"]
+    per = {}
+    for ds in ("dsA", "dsB"):
+        per[ds] = service.query(q_all.scoped(ds), clips) \
+            .aggregates["count"]
+    assert per["dsA"] + per["dsB"] == total
+    # scoped limit query: frame indices refer to the ORIGINAL list
+    q = _query(None, None, 1, 1, limit=(5, 0)).scoped("dsA")
+    res = service.query(q, clips)
+    a_tracks = [t if c.profile.name == "dsA" else []
+                for c, t in zip(clips, tracks)]
+    ref = reference_query(a_tracks, fps, min_len=1, min_count=1,
+                          limit=(5, 0))
+    assert res.frames == ref["frames"]
+    assert all(clips[ci].profile.name == "dsA" for ci, _ in res.frames)
+
+
+def test_plan_run_enforces_dataset_scope_directly():
+    """compile_query(q.scoped(...)).run(entries) must honor the scope
+    even without the service's pre-filtering."""
+    clips_a, tracks_a = _fleet(seed=1, dataset="dsA")
+    clips_b, tracks_b = _fleet(seed=2, dataset="dsB")
+    entries = _entries(clips_a, tracks_a) + _entries(clips_b, tracks_b)
+    q = _query(None, None, 2, 1, aggregate="count")
+    total = compile_query(q).run(entries).aggregates["count"]
+    only_a = compile_query(q.scoped("dsA")).run(entries) \
+        .aggregates["count"]
+    only_b = compile_query(q.scoped("dsB")).run(entries) \
+        .aggregates["count"]
+    assert only_a + only_b == total
+    assert only_a == compile_query(q).run(
+        _entries(clips_a, tracks_a)).aggregates["count"]
+
+
+def test_warm_batches_one_ingest_per_store(two_datasets, monkeypatch):
+    """An interleaved multi-dataset clip list must reach each store as
+    ONE ingest batch (cross-clip prefetch + batch-protected eviction),
+    not one degenerate single-clip batch per clip."""
+    from repro.query import IngestReport
+    service, clips, _ = two_datasets
+    calls = []
+    for name in ("dsA", "dsB"):
+        st = service.stores[name]
+        monkeypatch.setattr(st, "has", lambda c: False)
+
+        def fake_ingest(cs, log=None, _name=name):
+            calls.append((_name, len(cs)))
+            return IngestReport(requested=len(cs), cached=len(cs))
+
+        monkeypatch.setattr(st, "ingest", fake_ingest)
+    service.warm(clips)                  # clips alternate dsA/dsB
+    assert sorted(calls) == [("dsA", 5), ("dsB", 5)]
+
+
+def test_unknown_dataset_raises(two_datasets):
+    service, clips, _ = two_datasets
+    stray = _Clip(_Profile("dsC"), 0, 8)
+    with pytest.raises(KeyError):
+        service.query(_query(None, None, 1, 1, aggregate="count"),
+                      [stray])
+    with pytest.raises(AttributeError):
+        service.store                    # ambiguous with two stores
+
+
+# ---------------------------------------------------------------------------
+# Real extracted store: index behavior end-to-end
+# ---------------------------------------------------------------------------
+
+def test_service_skips_clips_via_index_real_store(qsys):
+    bank, params, clips, store, _ = qsys
+    service = QueryService(store)
+    # caldot1 tracks live in two highway bands around x∈[0.35, 0.65];
+    # a far-corner region is provably disjoint from every track bbox
+    q = Query.count_frames(region=(0.0, 0.0, 0.02, 0.02))
+    res = service.query(q, clips)
+    full = service.query(q, clips, use_index=False)
+    assert res.aggregates == full.aggregates
+    assert res.skipped_clips >= 1
+    assert res.scanned_clips < full.scanned_clips
+    # an impossible count threshold also skips via max_count summaries
+    res2 = service.query(Query.count_frames(min_count=10 ** 6), clips)
+    assert res2.skipped_clips == len(clips)
+    assert res2.aggregates["count"] == 0
+
+
+def test_service_histogram_counts_real_store(qsys):
+    bank, params, clips, store, _ = qsys
+    service = QueryService(store)
+    q = Query.count_frames(min_count=1)              # no region: indexed
+    res = service.query(q, clips)
+    full = service.query(q, clips, use_index=False)
+    assert res.aggregates == full.aggregates
+    assert res.indexed_clips == res.scanned_clips
+    assert full.indexed_clips == 0
+
+
+def test_class_filter_falls_back_to_scan(qsys):
+    bank, params, clips, store, _ = qsys
+    service = QueryService(store)
+    q = Query.count_tracks(classes=(0,), min_track_len=2)
+    res = service.query(q, clips)
+    full = service.query(q, clips, use_index=False)
+    assert res.aggregates == full.aggregates
+    assert res.indexed_clips == 0
+
+
+def test_service_limit_matches_reference_with_index(qsys):
+    bank, params, clips, store, _ = qsys
+    service = QueryService(store)
+    all_tracks = [store.tracks(c) for c in clips]
+    for want, min_count, region, spacing in [
+            (8, 1, (0.0, 0.5, 1.0, 1.0), 4),
+            (3, 2, (0.0, 0.0, 1.0, 1.0), 0),
+            (5, 1, (0.0, 0.0, 0.02, 0.02), 2)]:     # skip-everything
+        q = Query.limit_frames(region=region, min_count=min_count,
+                               want=want, min_spacing=spacing)
+        indexed = service.query(q, clips).frames
+        scanned = service.query(q, clips, use_index=False).frames
+        assert indexed == scanned == reference_limit_scan(
+            all_tracks, want, min_count, region, spacing)
