@@ -71,7 +71,6 @@ from repro.core.pipeline import (CELL_PX, ModelBank, PipelineParams,
                                  RunResult, det_grid, downsample_chunk,
                                  make_sizeset, map_proxy_grid,
                                  render_frame)
-from repro.core.sort import SortTracker
 from repro.core.tracker import RecurrentTracker, embed_dets_chunk
 from repro.core.windows import ChunkPlan, full_frame_plan, plan_chunk
 from repro.data.video_synth import Clip
@@ -119,7 +118,15 @@ class ExecutorOptions:
                          chunk's batch axis is sharded through
                          ``LogicalRules`` instead of whole-chunk
                          round-robin;
-    ``chunk_size``     — override θ's B (engine compat path).
+    ``chunk_size``     — override θ's B (engine compat path);
+    ``decode_pool``    — an externally owned ``DecodePool``: decode jobs
+                         are submitted to its persistent shared workers
+                         instead of spawning per-run threads (per-run
+                         reorder gates keep TRACK frame-ordered);
+    ``share_decode_pool`` — let ``run_clips`` create ONE pool shared by
+                         the two in-flight clips (the pool is sized
+                         ``max(2, decode_workers)`` so cross-clip decode
+                         overlap survives the sharing).
     """
     prefetch: bool = True
     prefetch_depth: int = 2
@@ -128,6 +135,8 @@ class ExecutorOptions:
     devices: Optional[Sequence] = None
     mesh: Optional[object] = None
     chunk_size: Optional[int] = None
+    decode_pool: Optional["DecodePool"] = None
+    share_decode_pool: bool = True
 
 
 @dataclass
@@ -148,11 +157,21 @@ class _WorkerFailure:
 
 
 class _RunContext:
-    """Per-clip derived state shared by every stage."""
+    """Per-clip derived state shared by every stage.
+
+    ``frame_ids`` (default: θ's full gap progression over the clip)
+    restricts the run to an explicit frame list — the live-ingestion
+    path (``repro.stream``) runs one appended SEGMENT of an open clip
+    at a time.  ``tracker`` injects an existing tracker instead of a
+    fresh one, so TRACK state (active tracks, GRU hidden state, id
+    counter) carries across segment runs; the stage graph itself never
+    knows whether it is running a whole clip or a resumed slice."""
 
     def __init__(self, bank: ModelBank, params: PipelineParams,
                  clip: Clip, options: ExecutorOptions,
-                 device_offset: int = 0):
+                 device_offset: int = 0,
+                 frame_ids: Optional[Sequence[int]] = None,
+                 tracker: Optional[object] = None):
         self.bank = bank
         self.params = params
         self.clip = clip
@@ -164,12 +183,11 @@ class _RunContext:
         self.sizeset = make_sizeset(bank, params)
         self.grid = det_grid(params.det_res)
         self.detector = bank.detectors[params.det_arch]
-        if params.tracker == "recurrent" \
-                and bank.tracker_params is not None:
-            self.tracker: object = RecurrentTracker(self.cfg.tracker,
-                                                    bank.tracker_params)
+        if tracker is not None:
+            self.tracker: object = tracker
         else:
-            self.tracker = SortTracker()
+            from repro.core.pipeline import make_tracker
+            self.tracker = make_tracker(bank, params)
         self.batch_embed = isinstance(self.tracker, RecurrentTracker)
         self.devices = list(options.devices) if options.devices \
             else jax.local_devices()
@@ -189,7 +207,8 @@ class _RunContext:
         self.predecode_upload = bool(options.double_buffer
                                      and self.proxy is not None)
         self.prev_chunk_gathered = False    # benign cross-thread read
-        self.frame_ids = list(range(0, clip.n_frames, params.gap))
+        self.frame_ids = list(frame_ids) if frame_ids is not None \
+            else list(range(0, clip.n_frames, params.gap))
         # ledger + RunResult counters, accumulated by TRACK (the only
         # stage that is strictly sequenced)
         self.charged = 0.0
@@ -473,6 +492,182 @@ class StreamingScheduler:
             th.join()
 
 
+class _PoolRun:
+    """One run's state inside a shared ``DecodePool``: a bounded output
+    queue plus a per-run reorder gate (chunks are admitted strictly in
+    chunk order, whichever pool worker decoded them first)."""
+
+    def __init__(self, ctx: "_RunContext", tasks: List[ChunkTask],
+                 stages: Dict[str, Callable], depth: int):
+        self.ctx = ctx
+        self.tasks = tasks
+        self.stages = stages
+        self.q: "queue.Queue" = queue.Queue(maxsize=max(1, depth))
+        self.gate = threading.Condition()
+        self.next = 0               # chunk index admitted next
+        self.remaining = len(tasks)  # jobs not yet enqueued or dropped
+        self.failed = False
+        self.cancelled = False
+
+    def _account(self) -> None:
+        with self.gate:
+            self.remaining -= 1
+            self.gate.notify_all()
+
+
+class DecodePool:
+    """Persistent decode workers shared by several in-flight runs.
+
+    ``run_clips`` keeps (at most) two clips in flight; with per-run
+    workers that is ``2 * decode_workers`` threads, churned on every
+    clip boundary.  The pool owns ONE set of ``workers`` threads for
+    its whole lifetime: each run submits its chunks as jobs on a shared
+    FIFO, and a per-run reorder gate (``_PoolRun``) recovers chunk
+    order before the bounded hand-off queue — so the draining thread,
+    and with it TRACK, still sees every run's chunks strictly in frame
+    order and tracks stay bit-identical to the dedicated-worker
+    schedule for any pool size (tests/test_executor.py).
+
+    Jobs of different runs interleave in submission order, which is
+    exactly the decode order the two-in-flight ``run_clips`` loop
+    wants: clip i's remaining chunks first, then clip i+1's.  A worker
+    blocked on one run's full output queue parks with a timeout, so a
+    ``cancel`` of that run (or its drain making progress) always
+    releases it; cancelling a run drops its undecoded jobs on the floor
+    as workers reach them.
+
+    Discipline: runs sharing a pool must be DRAINED in submission order
+    (or cancelled) — ``run_clips`` and the segment ingestor both do.  A
+    later-submitted run drained first could starve behind an earlier
+    run's full bounded queue that nobody is consuming.
+    """
+
+    def __init__(self, workers: int = 2):
+        self.workers = max(1, int(workers))
+        self._jobs: "queue.Queue" = queue.Queue()
+        self._closed = False
+        self._threads = [
+            threading.Thread(target=self._worker, daemon=True,
+                             name=f"multiscope-pool-decode-{k}")
+            for k in range(self.workers)]
+        for th in self._threads:
+            th.start()
+
+    def submit(self, ctx: "_RunContext", tasks: List[ChunkTask],
+               stages: Dict[str, Callable], depth: int) -> _PoolRun:
+        if self._closed:
+            # jobs enqueued after close would never run and the run's
+            # drain would hang on an empty queue forever — fail fast
+            raise RuntimeError("DecodePool is closed")
+        run = _PoolRun(ctx, tasks, stages, depth)
+        for i, task in enumerate(tasks):
+            self._jobs.put((run, i, task))
+        return run
+
+    def cancel(self, run: _PoolRun) -> None:
+        """Drop the run: undecoded jobs are discarded as workers reach
+        them, and the output queue is drained so no shared worker stays
+        blocked on it.  Returns once every job is accounted for."""
+        with run.gate:
+            run.cancelled = True
+            run.gate.notify_all()
+        while True:
+            with run.gate:
+                if run.remaining <= 0:
+                    return
+            try:
+                run.q.get(timeout=0.02)
+            except queue.Empty:
+                pass
+
+    def close(self) -> None:
+        """Stop the workers (idempotent).  Outstanding runs must be
+        drained or cancelled first."""
+        if self._closed:
+            return
+        self._closed = True
+        for _ in self._threads:
+            self._jobs.put(None)
+        for th in self._threads:
+            th.join()
+
+    # -- worker side ----------------------------------------------------------
+
+    def _put(self, run: _PoolRun, item) -> None:
+        while not run.cancelled:
+            try:
+                run.q.put(item, timeout=0.05)
+                return
+            except queue.Full:
+                pass
+
+    def _worker(self) -> None:
+        while True:
+            job = self._jobs.get()
+            if job is None:
+                return
+            run, i, task = job
+            try:
+                self._decode_one(run, i, task)
+            finally:
+                run._account()
+
+    def _decode_one(self, run: _PoolRun, i: int,
+                    task: ChunkTask) -> None:
+        if run.cancelled or run.failed:
+            return                      # dropped job
+        try:
+            decoded = run.stages["decode"](run.ctx, task)
+        except BaseException as exc:    # surfaced by drain()
+            with run.gate:
+                run.failed = True
+                run.gate.notify_all()
+            self._put(run, _WorkerFailure(exc))
+            return
+        with run.gate:
+            while run.next != i and not run.cancelled and not run.failed:
+                run.gate.wait(0.05)
+            if run.cancelled or run.failed:
+                return
+        self._put(run, decoded)
+        with run.gate:
+            run.next += 1
+            run.gate.notify_all()
+
+
+class PooledStreamingScheduler:
+    """The streaming schedule with decode on a shared ``DecodePool``
+    instead of per-run threads.  Drain semantics (and therefore tracks)
+    are identical to ``StreamingScheduler``."""
+
+    def __init__(self, pool: DecodePool, depth: int = 2):
+        self.pool = pool
+        self.depth = max(1, int(depth))
+
+    def start(self, ctx: "_RunContext", tasks: List[ChunkTask],
+              stages: Dict[str, Callable]) -> _PoolRun:
+        return self.pool.submit(ctx, tasks, stages, self.depth)
+
+    def cancel(self, ctx: "_RunContext", run: _PoolRun) -> None:
+        self.pool.cancel(run)
+
+    def drain(self, ctx: "_RunContext", run: _PoolRun,
+              stages: Dict[str, Callable]) -> None:
+        try:
+            for _ in range(len(run.tasks)):
+                item = run.q.get()
+                if isinstance(item, _WorkerFailure):
+                    raise item.exc
+                task = item
+                for name in STAGES[1:]:
+                    task = stages[name](ctx, task)
+        except BaseException:
+            # unblock any pool worker parked on this run's queue before
+            # propagating (shared workers must outlive a failed run)
+            self.pool.cancel(run)
+            raise
+
+
 # ---------------------------------------------------------------------------
 # The executor
 # ---------------------------------------------------------------------------
@@ -505,6 +700,9 @@ class ClipExecutor:
             self.stages.update(stages)
         if scheduler is not None:
             self.scheduler = scheduler
+        elif self.options.decode_pool is not None and self.options.prefetch:
+            self.scheduler = PooledStreamingScheduler(
+                self.options.decode_pool, self.options.prefetch_depth)
         elif self.options.prefetch:
             self.scheduler = StreamingScheduler(
                 self.options.prefetch_depth, self.options.decode_workers)
@@ -516,9 +714,16 @@ class ClipExecutor:
         return [ChunkTask(i, ids[c0:c0 + ctx.chunk])
                 for i, c0 in enumerate(range(0, len(ids), ctx.chunk))]
 
-    def start(self, clip: Clip, device_offset: int = 0) -> _ActiveRun:
+    def start(self, clip: Clip, device_offset: int = 0, *,
+              frame_ids: Optional[Sequence[int]] = None,
+              tracker: Optional[object] = None) -> _ActiveRun:
+        """Start a run.  ``frame_ids``/``tracker`` are the resume hooks
+        used by the live-ingestion path (``repro.stream``): run only an
+        explicit frame slice, feeding an existing tracker whose state
+        carries across segment runs."""
         ctx = _RunContext(self.bank, self.params, clip, self.options,
-                          device_offset=device_offset)
+                          device_offset=device_offset,
+                          frame_ids=frame_ids, tracker=tracker)
         handle = self.scheduler.start(ctx, self._tasks(ctx), self.stages)
         return _ActiveRun(ctx, handle)
 
@@ -562,31 +767,45 @@ def run_clips(bank: ModelBank, params: PipelineParams,
     i+1's decode workers are started while clip i is still draining, and
     each clip's chunks round-robin the device list from a per-clip
     offset — on a multi-device mesh, consecutive clips land on
-    different devices.  ``options.decode_workers`` pins the decode pool
-    size PER ACTIVE RUN (at most two runs are in flight here, so total
-    decode threads are bounded by ``2 * decode_workers``).  TRACK state
-    never crosses clips, and per-clip seconds keep the process-time +
-    ledger semantics (decode CPU spent early is counted once, in
-    whichever window it ran)."""
+    different devices.  With ``options.share_decode_pool`` (the
+    default) the two in-flight clips share ONE ``DecodePool`` of
+    ``max(2, decode_workers)`` persistent workers with per-clip reorder
+    gates — no thread churn at clip boundaries, and total decode
+    threads are the pool size rather than ``2 * decode_workers``
+    (tracks stay bit-identical for any pool size; an
+    ``options.decode_pool`` supplied by the caller is reused as-is and
+    left open).  TRACK state never crosses clips, and per-clip seconds
+    keep the process-time + ledger semantics (decode CPU spent early is
+    counted once, in whichever window it ran)."""
     opts = options or ExecutorOptions()
+    own_pool: Optional[DecodePool] = None
+    if opts.prefetch and len(clips) > 1 and opts.share_decode_pool \
+            and opts.decode_pool is None:
+        own_pool = DecodePool(max(2, opts.decode_workers))
+        import dataclasses as _dc
+        opts = _dc.replace(opts, decode_pool=own_pool)
     ex = ClipExecutor(bank, params, opts)
     results: List[RunResult] = []
-    if not opts.prefetch or len(clips) <= 1:
-        for i, clip in enumerate(clips):
-            results.append(ex.finish(ex.start(clip, device_offset=i)))
-        return results, sum(r.seconds for r in results)
-    pending: List[_ActiveRun] = [ex.start(clips[0], device_offset=0)]
     try:
-        for i in range(1, len(clips)):
-            # one clip of decode lookahead: prefetch_depth chunks max
-            pending.append(ex.start(clips[i], device_offset=i))
+        if not opts.prefetch or len(clips) <= 1:
+            for i, clip in enumerate(clips):
+                results.append(ex.finish(ex.start(clip, device_offset=i)))
+            return results, sum(r.seconds for r in results)
+        pending: List[_ActiveRun] = [ex.start(clips[0], device_offset=0)]
+        try:
+            for i in range(1, len(clips)):
+                # one clip of decode lookahead: prefetch_depth chunks max
+                pending.append(ex.start(clips[i], device_offset=i))
+                results.append(ex.finish(pending.pop(0)))
             results.append(ex.finish(pending.pop(0)))
-        results.append(ex.finish(pending.pop(0)))
-    except BaseException:
-        # the failed clip's own worker was stopped by drain; clips
-        # started ahead still have live workers that would otherwise
-        # block forever holding decoded chunks and device buffers
-        for run in pending:
-            ex.cancel(run)
-        raise
-    return results, sum(r.seconds for r in results)
+        except BaseException:
+            # the failed clip's own worker was stopped by drain; clips
+            # started ahead still have live workers that would otherwise
+            # block forever holding decoded chunks and device buffers
+            for run in pending:
+                ex.cancel(run)
+            raise
+        return results, sum(r.seconds for r in results)
+    finally:
+        if own_pool is not None:
+            own_pool.close()

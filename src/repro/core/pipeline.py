@@ -128,6 +128,18 @@ class ModelBank:
     refiner: Optional[TrackRefiner] = None
 
 
+def make_tracker(bank: ModelBank, params: PipelineParams):
+    """θ's tracker instance — THE selection rule (recurrent iff θ asks
+    for it and the bank has trained tracker params, SORT otherwise).
+    Every execution path (per-frame reference, executor stage graph,
+    live segment ingest) must construct trackers through here, or the
+    stream's segment-append == one-shot bit-identity contract breaks
+    on the day one copy diverges."""
+    if params.tracker == "recurrent" and bank.tracker_params is not None:
+        return RecurrentTracker(bank.cfg.tracker, bank.tracker_params)
+    return SortTracker()
+
+
 def det_grid(res: Tuple[int, int]) -> Tuple[int, int]:
     W, H = res
     return W // CELL_PX, H // CELL_PX
@@ -318,10 +330,7 @@ def run_clip_frames(bank: ModelBank, params: PipelineParams, clip: Clip
     proxy = bank.proxies.get(params.proxy_res) \
         if params.proxy_res is not None else None
     sizeset = make_sizeset(bank, params)
-    if params.tracker == "recurrent" and bank.tracker_params is not None:
-        tracker = RecurrentTracker(cfg.tracker, bank.tracker_params)
-    else:
-        tracker = SortTracker()
+    tracker = make_tracker(bank, params)
     n_windows = full_frames = skipped = processed = 0
     decode_charged = 0.0
     t0 = time.process_time()

@@ -7,24 +7,44 @@ touched again for a warm clip.
 
   * ``store``   — ``TrackStore``: persistent, versioned materialization
     of ``executor.run_clips`` outputs, keyed by
-    (dataset, clip, θ-fingerprint), with incremental ingest and an
+    (dataset, clip, θ-fingerprint), with incremental ingest, an
     optional ``StoreBudget`` (LRU/TTL eviction of clip NPZs; evicted
-    clips keep their index summaries and re-ingest on next touch);
+    clips keep their index summaries and re-ingest on next touch), and
+    an OPEN-clip layout for live ingestion (monotone ``watermark``
+    marking how much of a still-arriving clip is queryable);
   * ``index``   — secondary indexes built at materialize time:
     per-frame count histograms (min_len buckets), per-track bounding
-    boxes, and per-clip ``ClipSummary`` digests persisted in the
-    version's ``index.json`` (they survive eviction);
+    boxes, coarse 4x4 occupancy grids, and per-clip ``ClipSummary``
+    digests persisted in the version's ``index.json`` (they survive
+    eviction);
   * ``ops``     — composable query operators (spatial regions, temporal
     ranges, per-frame count predicates, track filters, limit-N,
     aggregations, an optional dataset scope);
   * ``plan``    — compiles a ``Query`` into a two-phase plan: consult
-    the index to skip whole clips or answer count/limit queries from
-    histograms, fall back to the vectorized row scan otherwise —
-    bit-identical either way (tests/test_query_index.py);
+    the index to skip whole clips (bbox/grid/span/count bounds) or
+    answer count/limit queries from histograms, fall back to the
+    vectorized row scan otherwise — bit-identical either way
+    (tests/test_query_index.py);
   * ``service`` — ``QueryService``: thread-safe concurrent queries over
     one store or a ``{dataset: store}`` mapping, with transparent
-    ingest of cold clips and per-query latency accounting
-    (ingest vs scan, median + p95).
+    ingest of cold clips, summary-aware ``prefetch`` ordering
+    (unskippable clips first, biggest predicted scan first), per-query
+    latency accounting (ingest vs scan, median + p95), and standing-
+    query subscriptions for live streams.
+
+Live ingestion (``repro.stream``) makes this subsystem continuous —
+cameras append frame segments to open clips and queries stay
+answerable at every watermark:
+
+    ingestor = SegmentIngestor(store, service=service)
+    sq = service.register_standing(
+        StandingQuery(Query.count_frames(min_count=2), clips))
+    ingestor.open(clip)
+    ingestor.append(clip, 12)     # 12 new frames: tracker state
+                                  # resumes, index merges, sq gets an
+                                  # exact delta for the new watermark
+
+See ``examples/quickstart.py`` for the end-to-end live-append loop.
 """
 from repro.query.index import (MIN_LEN_BUCKETS, ClipSummary,  # noqa: F401
                                build_index, summarize)

@@ -20,8 +20,11 @@ queries touch far fewer rows, or none at all, NoScope/Spatialyze style
     region CONTAINING the union makes the region predicate a no-op,
     unlocking the histogram path.
   * **``ClipSummary``** — the per-clip scalar digest
-    (row/track totals, frame span, per-bucket max counts and union
-    bboxes).  Summaries are tiny, JSON-serializable, and persisted in
+    (row/track totals, frame span, per-bucket max counts, union
+    bboxes, and GRID x GRID occupancy bitmasks — the coarse spatial
+    grid lets a ``Region`` skip clips whose union bbox overlaps the
+    query but whose occupied cells don't).  Summaries are tiny,
+    JSON-serializable, and persisted in
     the version's ``index.json`` SEPARATELY from the clip NPZ — so they
     survive eviction, and an evicted clip that the summary proves
     irrelevant to a query is skipped without being re-ingested.
@@ -32,6 +35,7 @@ tracks ⇒ same index.
 """
 from __future__ import annotations
 
+import functools
 import math
 from dataclasses import dataclass
 from typing import List, Optional, Tuple
@@ -53,9 +57,67 @@ EMPTY_BBOX: Tuple[float, float, float, float] = (
 
 Bbox = Tuple[float, float, float, float]
 
+# Coarse spatial occupancy grid: the unit frame split into GRID x GRID
+# cells, one bit per cell (row-major, bit = y_cell * GRID + x_cell).  A
+# bucket's mask has a bit set iff ANY surviving detection center falls
+# in that cell — finer-grained than the union bbox, so a region that
+# OVERLAPS the bbox (e.g. the empty middle between two highway lanes)
+# can still prove the clip skippable when no occupied cell intersects
+# it.
+GRID = 4
+
 
 def bbox_is_empty(bbox: Bbox) -> bool:
     return bbox[2] < bbox[0] or bbox[3] < bbox[1]
+
+
+def _cell_clamp(v: np.ndarray) -> np.ndarray:
+    return np.clip((v * GRID).astype(np.int64), 0, GRID - 1)
+
+
+def occupancy_mask(cx: np.ndarray, cy: np.ndarray) -> int:
+    """Bitmask of GRID x GRID cells containing >= 1 (cx, cy) center.
+    Out-of-frame centers clamp to the border cells, which keeps the
+    region test conservative (the region's cell range clamps the same
+    way)."""
+    if len(cx) == 0:
+        return 0
+    cells = _cell_clamp(np.asarray(cy)) * GRID + _cell_clamp(np.asarray(cx))
+    return int(np.bitwise_or.reduce(1 << cells))
+
+
+def grids_from_rows(rows: np.ndarray,
+                    offsets: np.ndarray) -> Tuple[int, ...]:
+    """Per-``MIN_LEN_BUCKETS`` occupancy masks derived from packed
+    rows — THE definition of a clip's grids (``summarize`` and the
+    stream's resume path both call this; the stream's incremental
+    masks are differentially tested against it)."""
+    lengths = np.diff(offsets)
+    row_len = np.repeat(lengths, lengths) if len(rows) \
+        else np.zeros(0, np.int64)
+    out = []
+    for b in MIN_LEN_BUCKETS:
+        sel = row_len >= b
+        out.append(occupancy_mask(rows[sel, 1], rows[sel, 2]))
+    return tuple(out)
+
+
+@functools.lru_cache(maxsize=4096)
+def region_mask(x0: float, y0: float, x1: float, y1: float) -> int:
+    """Bitmask of cells a [x0,x1] x [y0,y1] region (bounds inclusive)
+    can possibly touch.  Sound: every in-region center lies in one of
+    these cells (floor is monotone and both sides clamp alike).
+    Cached — a standing query re-tests the same region every
+    watermark."""
+    cx0 = max(0, min(GRID - 1, math.floor(x0 * GRID)))
+    cx1 = max(0, min(GRID - 1, math.floor(x1 * GRID)))
+    cy0 = max(0, min(GRID - 1, math.floor(y0 * GRID)))
+    cy1 = max(0, min(GRID - 1, math.floor(y1 * GRID)))
+    mask = 0
+    for gy in range(cy0, cy1 + 1):
+        for gx in range(cx0, cx1 + 1):
+            mask |= 1 << (gy * GRID + gx)
+    return mask
 
 
 @dataclass(frozen=True)
@@ -65,8 +127,11 @@ class ClipSummary:
 
     ``max_count[b]`` bounds the per-frame count under min_len bucket b
     (and therefore under ANY predicate at least as strict); ``bbox[b]``
-    is the union envelope of the bucket's surviving tracks.  Both are
-    per ``MIN_LEN_BUCKETS`` entry.
+    is the union envelope of the bucket's surviving tracks; ``grid[b]``
+    is the bucket's GRID x GRID occupancy bitmask (``occupancy_mask``).
+    All are per ``MIN_LEN_BUCKETS`` entry.  ``grid`` is None for
+    summaries persisted before the grid existed — the planner then
+    falls back to the bbox-only skip test.
     """
     n_rows: int
     n_tracks: int
@@ -75,6 +140,7 @@ class ClipSummary:
     max_frame: int
     max_count: Tuple[int, ...]          # per MIN_LEN_BUCKETS entry
     bbox: Tuple[Bbox, ...]              # per MIN_LEN_BUCKETS entry
+    grid: Optional[Tuple[int, ...]] = None   # per MIN_LEN_BUCKETS entry
 
     def to_json(self) -> dict:
         return {
@@ -85,17 +151,20 @@ class ClipSummary:
             # empty envelopes serialize as null (inf is not JSON)
             "bbox": [None if bbox_is_empty(b)
                      else [float(v) for v in b] for b in self.bbox],
+            "grid": None if self.grid is None else list(self.grid),
         }
 
     @classmethod
     def from_json(cls, d: dict) -> "ClipSummary":
+        grid = d.get("grid")
         return cls(
             n_rows=int(d["n_rows"]), n_tracks=int(d["n_tracks"]),
             max_len=int(d["max_len"]),
             min_frame=int(d["min_frame"]), max_frame=int(d["max_frame"]),
             max_count=tuple(int(v) for v in d["max_count"]),
             bbox=tuple(EMPTY_BBOX if b is None else tuple(b)
-                       for b in d["bbox"]))
+                       for b in d["bbox"]),
+            grid=None if grid is None else tuple(int(g) for g in grid))
 
 
 def build_index(rows: np.ndarray, offsets: np.ndarray,
@@ -135,8 +204,13 @@ def build_index(rows: np.ndarray, offsets: np.ndarray,
 
 
 def summarize(rows: np.ndarray, offsets: np.ndarray, hist: np.ndarray,
-              track_bbox: np.ndarray) -> ClipSummary:
-    """Fold one clip's index arrays into the scalar ``ClipSummary``."""
+              track_bbox: np.ndarray,
+              grid: Optional[Tuple[int, ...]] = None) -> ClipSummary:
+    """Fold one clip's index arrays into the scalar ``ClipSummary``.
+
+    ``grid`` lets a caller supply precomputed occupancy masks (the
+    stream path maintains them incrementally); by default they are
+    derived from the rows here."""
     lengths = np.diff(offsets)
     frames = rows[:, 0] if len(rows) else None
     max_count = tuple(int(hist[bi].max()) if hist.shape[1] else 0
@@ -155,4 +229,6 @@ def summarize(rows: np.ndarray, offsets: np.ndarray, hist: np.ndarray,
         max_len=int(lengths.max()) if len(lengths) else 0,
         min_frame=int(frames.min()) if frames is not None else 0,
         max_frame=int(frames.max()) if frames is not None else -1,
-        max_count=max_count, bbox=tuple(bboxes))
+        max_count=max_count, bbox=tuple(bboxes),
+        grid=grids_from_rows(rows, offsets) if grid is None
+        else tuple(grid))

@@ -56,7 +56,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.query.index import MIN_LEN_BUCKETS, ClipSummary, bbox_is_empty
+from repro.query.index import (MIN_LEN_BUCKETS, ClipSummary,
+                               bbox_is_empty, region_mask)
 from repro.query.ops import (CountAtLeast, Limit, Query, Region,
                              TimeRange, TrackFilter)
 from repro.query.store import PackedTracks
@@ -151,16 +152,54 @@ class CompiledPlan:
                 return True
             if t.end is not None and t.end <= summary.min_frame:
                 return True
-        if self.region is not None:
-            r = self.region
-            if math.isnan(r.x0):
-                return True             # folded-disjoint sentinel region
-            bb = summary.bbox[bi]
-            if bbox_is_empty(bb):
-                return True             # no surviving track anywhere
-            if r.x1 < bb[0] or bb[2] < r.x0 \
-                    or r.y1 < bb[1] or bb[3] < r.y0:
-                return True             # region disjoint from every track
+        if self.region is not None \
+                and self._region_disjoint(summary, bi):
+            return True
+        return False
+
+    def _region_disjoint(self, summary: ClipSummary, bi: int) -> bool:
+        """The region provably touches no surviving detection of bucket
+        ``bi``: disjoint from the union bbox, or — finer — from the
+        occupancy grid (a region can overlap the bbox yet intersect no
+        occupied cell, e.g. the empty middle between two lanes)."""
+        r = self.region
+        if math.isnan(r.x0):
+            return True                 # folded-disjoint sentinel region
+        bb = summary.bbox[bi]
+        if bbox_is_empty(bb):
+            return True                 # no surviving track anywhere
+        if r.x1 < bb[0] or bb[2] < r.x0 \
+                or r.y1 < bb[1] or bb[3] < r.y0:
+            return True                 # region disjoint from every track
+        if summary.grid is not None and not (
+                summary.grid[bi] & region_mask(r.x0, r.y0, r.x1, r.y1)):
+            return True                 # bbox overlaps, occupied cells don't
+        return False
+
+    def row_disjoint(self, summary: Optional[ClipSummary]) -> bool:
+        """True when the summary proves every row CURRENTLY visible
+        fails a static row-level predicate (region / time) — a
+        PERMANENT disqualification, unlike ``can_skip``'s count and
+        track-length tests, which later appends can overturn.  Standing
+        queries (``repro.stream.standing``) use this to drop a
+        watermark's delta outright: rows visible now and provably
+        region- or time-disjoint can never match later, because row
+        predicates never change."""
+        if summary is None:
+            return False
+        if summary.n_rows == 0:
+            return True
+        if self.time_range is not None:
+            t = self.time_range
+            if t.start > summary.max_frame:
+                return True
+            if t.end is not None and t.end <= summary.min_frame:
+                return True
+        # bucket 0 (min_len floor 1) covers EVERY visible row; higher
+        # buckets would be unsound here — a track below the plan's
+        # min_len today can cross it tomorrow, its old rows with it
+        if self.region is not None and self._region_disjoint(summary, 0):
+            return True
         return False
 
     def _indexed_counts(self, packed: PackedTracks) -> Optional[np.ndarray]:

@@ -35,7 +35,17 @@ already-materialized clips bypass the ingest lock entirely (their
 latency stays millisecond-scale even while a large prefetch is in
 flight); a query that still needs a cold clip waits for the in-flight
 ingest to finish, then ingests whatever remains missing (the store's
-``has`` makes ingest incremental at clip granularity).
+``has`` makes ingest incremental at clip granularity).  With a query
+(``prefetch(clips, q=...)``), the warm-up order is summary-aware:
+never-materialized clips first, then clips the plan cannot skip by
+descending predicted scan cost, summary-skippable clips last.
+
+The service is also the subscription hub for LIVE streams
+(``repro.stream``): ``register_standing`` attaches a ``StandingQuery``
+(bootstrapped against whatever is already materialized), and the
+segment ingestor's ``notify_append`` fans each watermark advance out
+to every subscriber, which folds the delta incrementally instead of
+re-running the query.
 """
 from __future__ import annotations
 
@@ -89,6 +99,8 @@ class QueryService:
         self._ingest_lock = threading.Lock()
         self._hist_lock = threading.Lock()
         self._history: Deque[QueryStats] = deque(maxlen=history)
+        self._standing_lock = threading.Lock()
+        self._standing: List[object] = []
 
     @property
     def store(self) -> TrackStore:
@@ -152,16 +164,84 @@ class QueryService:
                 total.store_bytes += r.store_bytes
         return total
 
+    def _prefetch_order(self, clips: Sequence[Clip],
+                        plan) -> List[Clip]:
+        """Summary-aware warm-up order for ``prefetch``:
+
+          1. clips with NO summary first (never materialized — they
+             must be extracted, and nothing can predict their cost);
+          2. then clips the plan cannot skip, largest predicted scan
+             cost first (``summary.n_rows`` — the row scan is O(rows),
+             so big clips warming early shortens the worst query);
+          3. summary-skippable clips last (the plan will never touch
+             them; they only matter to ``use_index=False`` baselines).
+
+        Within a tier the caller's order is kept (stable sort)."""
+        def tier(clip: Clip) -> tuple:
+            try:
+                summary = self.store_for(clip).summary(clip)
+            except KeyError:
+                summary = None
+            if summary is None:
+                return (0, 0)
+            if plan is not None and plan.can_skip(summary):
+                return (2, -summary.n_rows)
+            return (1, -summary.n_rows)
+        return sorted(clips, key=tier)
+
     def prefetch(self, clips: Sequence[Clip],
+                 q: Optional[Query] = None,
                  log=lambda *_: None) -> threading.Thread:
         """Kick off ``warm`` on a background daemon thread (returned so
         callers can join; queries never need to — they warm whatever
-        the prefetch has not covered yet)."""
-        th = threading.Thread(target=self.warm, args=(list(clips),),
+        the prefetch has not covered yet).  With ``q``, clips warm in
+        summary-aware order: unskippable clips first, largest predicted
+        scan cost first, so the query that prompted the prefetch gets
+        its working set earliest."""
+        plan = compile_query(q) if q is not None else None
+        ordered = self._prefetch_order(clips, plan)
+        th = threading.Thread(target=self.warm, args=(ordered,),
                               kwargs={"log": log}, daemon=True,
                               name="trackstore-ingest")
         th.start()
         return th
+
+    # -- standing queries (live ingestion, repro.stream) ----------------------
+
+    def register_standing(self, sq) -> object:
+        """Subscribe a ``repro.stream.StandingQuery``: it first catches
+        up on already-materialized data (``bootstrap``), then receives
+        every watermark advance via ``notify_append``.  Returns the
+        query for chaining.
+
+        Bootstrap and subscription happen under the SAME lock that
+        serializes delta delivery — an append landing while a query
+        registers is therefore seen exactly once, either by the
+        bootstrap's store read or as a delivered delta, never neither
+        (a delta that fell in the gap would be unrecoverable: later
+        deltas only carry later rows)."""
+        with self._standing_lock:
+            sq.bootstrap(self)
+            self._standing.append(sq)
+        return sq
+
+    def unregister_standing(self, sq) -> None:
+        with self._standing_lock:
+            if sq in self._standing:
+                self._standing.remove(sq)
+
+    def notify_append(self, clip: Clip, packed, delta) -> List[object]:
+        """Fan one watermark advance out to every standing query
+        (called by ``SegmentIngestor.append``).  Delivery holds the
+        subscription lock — see ``register_standing``.  Returns the
+        non-None standing deltas."""
+        out = []
+        with self._standing_lock:
+            for sq in self._standing:
+                d = sq.on_append(clip, packed, delta)
+                if d is not None:
+                    out.append(d)
+        return out
 
     # -- queries --------------------------------------------------------------
 

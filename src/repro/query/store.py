@@ -121,6 +121,12 @@ class PackedTracks:
     counters: Tuple[int, ...] = ()          # RunResult counter snapshot
     hist: Optional[np.ndarray] = field(default=None, repr=False)
     track_bbox: Optional[np.ndarray] = field(default=None, repr=False)
+    # OPEN-clip marker (live ingestion, ``repro.stream``): frames
+    # [0, watermark) have been appended and extracted; None for sealed
+    # clips.  ``n_frames`` equals the watermark while open, so every
+    # frame-indexed structure (hist width, bincount minlength) covers
+    # exactly the ingested prefix and grows monotonically per append.
+    watermark: Optional[int] = None
     _summary: Optional[ClipSummary] = field(default=None, repr=False)
     _row_track: Optional[np.ndarray] = field(default=None, repr=False)
     _classes: Optional[np.ndarray] = field(default=None, repr=False)
@@ -177,7 +183,13 @@ class PackedTracks:
 
     @classmethod
     def pack(cls, tracks: Sequence[np.ndarray], clip: Clip,
-             result: Optional[RunResult] = None) -> "PackedTracks":
+             result: Optional[RunResult] = None,
+             n_frames: Optional[int] = None,
+             build: bool = True) -> "PackedTracks":
+        """``n_frames`` overrides the frame span (the stream path packs
+        an open clip at its watermark); ``build=False`` skips the index
+        rebuild so an incrementally merged index can be attached
+        instead (``repro.stream.state``)."""
         offsets = np.zeros(len(tracks) + 1, np.int64)
         parts = []
         for i, t in enumerate(tracks):
@@ -189,9 +201,11 @@ class PackedTracks:
             result.frames_processed, result.detector_windows,
             result.full_frames, result.skipped_frames)
         seconds = 0.0 if result is None else float(result.seconds)
-        packed = cls(rows, offsets, clip.n_frames, clip.profile.fps,
+        span = clip.n_frames if n_frames is None else int(n_frames)
+        packed = cls(rows, offsets, span, clip.profile.fps,
                      seconds, counters)
-        packed.build_index_arrays()
+        if build:
+            packed.build_index_arrays()
         return packed
 
 
@@ -344,9 +358,18 @@ class TrackStore:
         n0 = self.evictions
         now = time.time()
         dirty: Set[str] = set()
+        def evictable(key, e):
+            # an OPEN clip (live ingestion mid-stream) is never evicted:
+            # its NPZ is the only copy of the stream's visible prefix,
+            # and a transparent batch re-ingest would clobber the
+            # append pipeline's tracker/index state
+            wm = e.get("watermark")
+            return key not in protect \
+                and not (wm is not None and wm < key[3])
+
         if self.budget.ttl_seconds is not None:
             for key, e in list(self._entries.items()):
-                if e["present"] and key not in protect \
+                if e["present"] and evictable(key, e) \
                         and now - e["last_used"] > self.budget.ttl_seconds:
                     self._evict(key)
                     dirty.add(key[0])
@@ -357,7 +380,7 @@ class TrackStore:
             for _, key in sorted(present):      # oldest first
                 if total <= self.budget.max_bytes:
                     break
-                if key in protect:
+                if not evictable(key, self._entries[key]):
                     continue
                 total -= self._entries[key]["bytes"]
                 self._evict(key)
@@ -434,11 +457,13 @@ class TrackStore:
                 # than the persisted one — clobbering it would reset
                 # last_used and invert the LRU order
                 continue
+            wm = e.get("watermark")
             self._entries[key] = {
                 "summary": ClipSummary.from_json(e["summary"]),
                 "bytes": int(e["bytes"]),
                 "last_used": float(e["last_used"]),
                 "present": bool(e["present"]),
+                "watermark": None if wm is None else int(wm),
             }
 
     def _flush_index(self, dataset: str) -> None:
@@ -456,6 +481,7 @@ class TrackStore:
                     "bytes": e["bytes"],
                     "last_used": e["last_used"],
                     "present": e["present"],
+                    "watermark": e.get("watermark"),
                 } for k, e in self._entries.items() if k[0] == dataset
             },
         }
@@ -476,6 +502,7 @@ class TrackStore:
         self._entries[key] = {
             "summary": packed.summary, "bytes": nbytes,
             "last_used": time.time(), "present": True,
+            "watermark": packed.watermark,
         }
 
     # -- lookup ---------------------------------------------------------------
@@ -510,7 +537,9 @@ class TrackStore:
                 counters=tuple(int(v) for v in z["info"][2:]),
                 hist=z["hist"] if "hist" in z.files else None,
                 track_bbox=(z["track_bbox"]
-                            if "track_bbox" in z.files else None))
+                            if "track_bbox" in z.files else None),
+                watermark=(int(z["watermark"][0])
+                           if "watermark" in z.files else None))
 
     def get(self, clip: Clip) -> Optional[PackedTracks]:
         """The clip's packed tracks, loading from disk on first touch;
@@ -559,8 +588,21 @@ class TrackStore:
         ``flush=False`` defers the index.json rewrite — batch callers
         (``ingest``) flush once per dataset at the end instead of
         re-serializing every summary after every clip."""
+        return self.materialize_packed(
+            clip, PackedTracks.pack(result.tracks, clip, result),
+            flush=flush)
+
+    def materialize_packed(self, clip: Clip, packed: PackedTracks,
+                           flush: bool = True) -> PackedTracks:
+        """Persist an already-packed clip (the stream path packs per
+        watermark and attaches its incrementally merged index before
+        landing here).  An open clip (``packed.watermark`` set below
+        ``clip.n_frames``) gets the watermark persisted in the NPZ and
+        the index entry; re-materializing the same key replaces the
+        previous watermark's NPZ atomically, so a concurrent reader
+        sees either the old prefix or the new one, never a tear."""
         key = clip_key(clip)
-        packed = PackedTracks.pack(result.tracks, clip, result)
+        packed.build_index_arrays()
         with self._lock:
             self._ensure_loaded(key[0])
             self._write_meta(key[0])
@@ -568,16 +610,48 @@ class TrackStore:
             tmp = path + ".tmp.npz"
             info = np.asarray(
                 [packed.n_frames, packed.fps, *packed.counters], np.int64)
-            np.savez(tmp, rows=packed.rows, offsets=packed.offsets,
-                     info=info,
-                     seconds=np.asarray([packed.seconds], np.float64),
-                     hist=packed.hist, track_bbox=packed.track_bbox)
+            arrays = dict(rows=packed.rows, offsets=packed.offsets,
+                          info=info,
+                          seconds=np.asarray([packed.seconds],
+                                             np.float64),
+                          hist=packed.hist,
+                          track_bbox=packed.track_bbox)
+            if packed.watermark is not None:
+                arrays["watermark"] = np.asarray([packed.watermark],
+                                                 np.int64)
+            np.savez(tmp, **arrays)
             os.replace(tmp, path)       # atomic: readers never see partials
             self._index[key] = packed
             self._register(key, packed, path)
             if flush:
                 self._flush_index(key[0])
         return packed
+
+    def watermark(self, clip: Clip) -> Optional[int]:
+        """Frames ingested so far for an OPEN clip; ``clip.n_frames``
+        once sealed (or batch-ingested); None when never materialized
+        for this θ."""
+        key = clip_key(clip)
+        with self._lock:
+            self._ensure_loaded(key[0])
+            e = self._entries.get(key)
+            if e is not None:
+                wm = e.get("watermark")
+                return key[3] if wm is None else wm
+            hit = self._index.get(key)
+            if hit is None:
+                return None
+            return key[3] if hit.watermark is None else hit.watermark
+
+    def sidecar_path(self, clip: Clip, suffix: str) -> str:
+        """Path for a per-clip sidecar file inside the current version
+        directory (the stream subsystem persists tracker checkpoints as
+        ``<clip>.<suffix>`` next to the clip NPZ)."""
+        key = clip_key(clip)
+        with self._lock:
+            vdir = self._version_dir(key[0])
+            os.makedirs(vdir, exist_ok=True)
+        return os.path.join(vdir, _clip_name(key) + "." + suffix)
 
     def ingest(self, clips: Sequence[Clip],
                log=lambda *_: None) -> IngestReport:
@@ -586,8 +660,11 @@ class TrackStore:
         Cold clips stream through ``executor.run_clips`` — clip i+1's
         decode prefetches while clip i computes, chunks round-robin
         devices — warm clips cost one index lookup and zero model
-        calls.  Budget enforcement runs after the batch lands (the
-        batch itself is protected from its own ingest)."""
+        calls.  OPEN clips (live ingestion, ``repro.stream``) count as
+        cached: they are served at their current watermark and only
+        their ``SegmentIngestor`` may extend them.  Budget enforcement
+        runs after the batch lands (the batch itself is protected from
+        its own ingest)."""
         report = IngestReport(requested=len(clips))
         cold = [c for c in clips if not self.has(c)]
         report.cached = len(clips) - len(cold)

@@ -11,8 +11,9 @@ from repro.configs.multiscope import MULTISCOPE_PIPELINE
 from repro.core import pipeline as pl
 from repro.core import tuner as tuner_mod
 from repro.core.executor import (DEFAULT_CHUNK, ClipExecutor,
-                                 ExecutorOptions, effective_chunk,
-                                 run_clip_streamed, run_clips)
+                                 DecodePool, ExecutorOptions,
+                                 effective_chunk, run_clip_streamed,
+                                 run_clips)
 from repro.core.proxy import ProxyModel
 from repro.core.tracker import init_tracker
 from repro.core.train_models import train_detector
@@ -222,6 +223,100 @@ def test_executor_pool_failure_propagates(exec_bank):
     assert not [t for t in _t.enumerate()
                 if t.name.startswith("multiscope-decode")
                 and t.is_alive()]
+
+
+# ---------------------------------------------------------------------------
+# Shared decode pool (one pool across the in-flight clips of run_clips)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pool_size", [1, 3])
+def test_run_clips_shared_pool_bit_identical(exec_bank, pool_size):
+    """One DecodePool shared by the two in-flight clips: per-clip
+    reorder gates must keep TRACK frame-ordered, so tracks stay
+    bit-identical to the per-frame reference for any pool size."""
+    bank, clips, res, th = exec_bank
+    params = _params(bank, res, th, chunk_size=4)
+    pool = DecodePool(pool_size)
+    try:
+        results, _ = run_clips(bank, params, clips,
+                               ExecutorOptions(decode_pool=pool))
+        for clip, r in zip(clips, results):
+            _assert_same(pl.run_clip_frames(bank, params, clip), r)
+        # an external pool is reusable across sweeps
+        results2, _ = run_clips(bank, params, clips,
+                                ExecutorOptions(decode_pool=pool))
+        for a, b in zip(results, results2):
+            _assert_same(a, b)
+    finally:
+        pool.close()
+
+
+def test_run_clips_owns_pool_by_default(exec_bank):
+    """run_clips with default options creates (and closes) its own
+    shared pool; no pool threads may leak."""
+    import threading as _t
+    bank, clips, res, th = exec_bank
+    params = _params(bank, res, th, chunk_size=4)
+    results, _ = run_clips(bank, params, clips)
+    for clip, r in zip(clips, results):
+        _assert_same(pl.run_clip_frames(bank, params, clip), r)
+    assert not [t for t in _t.enumerate()
+                if t.name.startswith("multiscope-pool-decode")
+                and t.is_alive()]
+
+
+def test_shared_pool_failure_releases_workers(exec_bank):
+    """A stage failure mid-stream under the shared pool: the error
+    propagates, the pool's workers survive (they are shared), and the
+    pool still closes cleanly."""
+    import threading as _t
+    bank, clips, res, th = exec_bank
+    params = _params(bank, res, th, chunk_size=1)   # chunks >> depth
+
+    def boom(ctx, task):
+        raise RuntimeError("detect failed")
+
+    pool = DecodePool(2)
+    try:
+        ex = ClipExecutor(bank, params,
+                          ExecutorOptions(decode_pool=pool),
+                          stages={"detect": boom})
+        with pytest.raises(RuntimeError, match="detect failed"):
+            ex.run(clips[0])
+        # workers are still alive and serviceable after the failure
+        ex_ok = ClipExecutor(bank, params,
+                             ExecutorOptions(decode_pool=pool))
+        _assert_same(pl.run_clip_frames(bank, params, clips[0]),
+                     ex_ok.run(clips[0]))
+    finally:
+        pool.close()
+    assert not [t for t in _t.enumerate()
+                if t.name.startswith("multiscope-pool-decode")
+                and t.is_alive()]
+
+
+def test_executor_segment_resume_hooks(exec_bank):
+    """start(frame_ids=..., tracker=...): running a clip as two
+    resumed slices reproduces the one-shot run bit-exactly (the hook
+    repro.stream builds on)."""
+    bank, clips, res, th = exec_bank
+    params = _params(bank, res, th, tracker="recurrent", gap=2)
+    clip = clips[0]
+    ref = pl.run_clip_frames(bank, params, clip)
+    ex = ClipExecutor(bank, params)
+    ids = list(range(0, clip.n_frames, params.gap))
+    cut = len(ids) // 2
+    from repro.core.tracker import RecurrentTracker
+    tracker = RecurrentTracker(bank.cfg.tracker, bank.tracker_params)
+    r1 = ex.finish(ex.start(clip, frame_ids=ids[:cut], tracker=tracker))
+    r2 = ex.finish(ex.start(clip, frame_ids=ids[cut:], tracker=tracker))
+    assert r1.frames_processed + r2.frames_processed \
+        == ref.frames_processed
+    assert r1.detector_windows + r2.detector_windows \
+        == ref.detector_windows
+    assert len(ref.tracks) == len(r2.tracks)
+    for a, b in zip(ref.tracks, r2.tracks):
+        np.testing.assert_array_equal(a, b)
 
 
 # ---------------------------------------------------------------------------

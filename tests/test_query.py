@@ -323,3 +323,29 @@ def test_service_cold_then_warm_split(qsys, tmp_path):
     th.join()
     res = service.query(q, clips)
     assert res.stats.ingested_clips == 0
+
+
+def test_prefetch_summary_aware_ordering(qsys):
+    """With a query, prefetch warms never-materialized clips first,
+    then unskippable clips by descending predicted scan cost, and
+    summary-skippable clips last."""
+    from repro.data.video_synth import make_clip
+    from repro.query.plan import compile_query
+    bank, params, clips, store, _ = qsys
+    service = QueryService(store)
+    cold = make_clip("caldot1", "test", 97, n_frames=24)  # no summary
+    mixed = [clips[0], cold, clips[1], clips[2]]
+    # no plan: cold-first, then biggest row counts
+    order = service._prefetch_order(mixed, None)
+    assert order[0] is cold
+    rows = [store.summary(c).n_rows for c in order[1:]]
+    assert rows == sorted(rows, reverse=True)
+    # a skip-everything region pushes all summarized clips to the back
+    plan = compile_query(Query.count_frames(
+        region=(0.0, 0.0, 0.02, 0.02)))
+    order2 = service._prefetch_order(mixed, plan)
+    assert order2[0] is cold
+    assert all(plan.can_skip(store.summary(c)) for c in order2[1:])
+    # prefetch(q=...) threads the ordering through to warm
+    th = service.prefetch([clips[0]], q=Query.count_frames())
+    th.join()

@@ -632,3 +632,97 @@ def test_service_limit_matches_reference_with_index(qsys):
         scanned = service.query(q, clips, use_index=False).frames
         assert indexed == scanned == reference_limit_scan(
             all_tracks, want, min_count, region, spacing)
+
+
+# ---------------------------------------------------------------------------
+# Spatial-grid occupancy (coarse 4x4 bitmaps in ClipSummary)
+# ---------------------------------------------------------------------------
+
+def _corner_tracks():
+    """Two tracks pinned to opposite corners: their union bbox spans
+    almost the whole frame, but only two grid cells are occupied."""
+    t0 = np.stack([np.arange(4, dtype=np.float32),
+                   np.full(4, 0.08, np.float32),
+                   np.full(4, 0.08, np.float32),
+                   np.full(4, 0.05, np.float32),
+                   np.full(4, 0.05, np.float32),
+                   np.zeros(4, np.float32)], axis=1)
+    t1 = t0.copy()
+    t1[:, 1] = t1[:, 2] = 0.92
+    t1[:, 5] = 1
+    return [t0, t1]
+
+
+def test_grid_skips_region_inside_bbox_gap():
+    """The query region overlaps the union bbox (it sits in the empty
+    middle) but intersects no occupied cell — only the grid can prove
+    the skip, and the answer matches the full scan bit-identically."""
+    clips = [_Clip(_Profile("fake"), 0, 8)]
+    entries = [(clips[0], PackedTracks.pack(_corner_tracks(), clips[0]))]
+    summary = entries[0][1].summary
+    assert summary.grid is not None and len(summary.grid) == \
+        len(MIN_LEN_BUCKETS)
+    q = _query((0.45, 0.45, 0.55, 0.55), None, 2, 1, aggregate="count")
+    plan = compile_query(q)
+    assert plan.can_skip(summary)
+    res = plan.run(entries)
+    full = plan.run(entries, use_index=False)
+    assert res.aggregates == full.aggregates
+    assert res.skipped_clips == 1 and full.skipped_clips == 0
+    # a region covering a corner does NOT skip
+    q2 = _query((0.0, 0.0, 0.2, 0.2), None, 2, 1, aggregate="count")
+    plan2 = compile_query(q2)
+    assert not plan2.can_skip(summary)
+    assert plan2.run(entries).aggregates == \
+        plan2.run(entries, use_index=False).aggregates
+
+
+def test_grid_differential_over_fleet(tmp_path):
+    """Grid-augmented skipping never changes an answer across the
+    query-shape grid (the fleet has clustered, empty and spread
+    clips)."""
+    clips, all_tracks = _fleet(seed=3)
+    entries = _entries(clips, all_tracks)
+    for region in ((0.45, 0.45, 0.5, 0.5), (0.02, 0.9, 0.06, 0.99),
+                   (0.3, 0.3, 0.8, 0.8)):
+        for min_len in (1, 3):
+            q = _query(region, None, min_len, 1, aggregate="count")
+            plan = compile_query(q)
+            a = plan.run(entries)
+            b = plan.run(entries, use_index=False)
+            assert a.aggregates == b.aggregates, (region, min_len)
+
+
+def test_grid_survives_json_and_legacy_summaries(tmp_path):
+    from repro.query import ClipSummary
+    clips = [_Clip(_Profile("fake"), 0, 8)]
+    packed = PackedTracks.pack(_corner_tracks(), clips[0])
+    summary = packed.summary
+    rt = ClipSummary.from_json(
+        json.loads(json.dumps(summary.to_json())))
+    assert rt == summary
+    # a summary persisted before grids existed deserializes with
+    # grid=None and the planner falls back to the bbox test
+    legacy = dict(summary.to_json())
+    del legacy["grid"]
+    old = ClipSummary.from_json(legacy)
+    assert old.grid is None
+    q = _query((0.45, 0.45, 0.55, 0.55), None, 2, 1, aggregate="count")
+    plan = compile_query(q)
+    assert not plan.can_skip(old)       # bbox alone cannot prove it
+    assert plan.can_skip(summary)       # the grid can
+
+
+def test_grid_real_store_persists(qsys):
+    """Executor-extracted store: grids persist through index.json and
+    the NPZ; a lane-gap region between caldot1's two highway bands
+    skips via the grid with answers identical to the scan."""
+    bank, params, clips, store, _ = qsys
+    for c in clips:
+        s = store.summary(c)
+        assert s is not None and s.grid is not None
+    service = QueryService(store)
+    q = Query.count_frames(region=(0.02, 0.02, 0.06, 0.06))
+    res = service.query(q, clips)
+    full = service.query(q, clips, use_index=False)
+    assert res.aggregates == full.aggregates

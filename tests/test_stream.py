@@ -1,0 +1,392 @@
+"""Live-ingestion subsystem tests (repro.stream).
+
+The contracts under test:
+
+  * **segment-append == one-shot** — ingesting a 48-frame clip as ANY
+    tested sequence of segment appends (sizes {1, 7, 12, 48}) yields
+    BIT-IDENTICAL rows, offsets, histograms, track bboxes, summaries
+    and cost counters to a one-shot batch ingest, for dense and
+    skip-heavy θ (sort and recurrent trackers, gap 1 and 2);
+  * **incremental index merge == full rebuild** — at EVERY intermediate
+    watermark, the incrementally merged index equals
+    ``build_index``/``summarize`` run from scratch;
+  * **checkpoint resume** — a brand-new ingestor (fresh store instance
+    over the same root, as after a process restart) resumes mid-stream
+    from the persisted ``TrackerCheckpoint`` and still seals
+    bit-identically;
+  * **standing queries** — accumulated deltas reconstruct the ad-hoc
+    answer (``service.query`` AND the naive ``ref.reference_query``
+    oracle) at every watermark, scanning each visible row at most
+    once, with summary-skippable deltas dropped unscanned.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import pipeline as pl
+from repro.query import Query, QueryService, Region, StoreBudget, \
+    TimeRange, TrackStore
+from repro.query.index import build_index, summarize
+from repro.query.ref import reference_query
+from repro.stream import (SegmentIngestor, StandingQuery,
+                          TrackerCheckpoint)
+
+SEG_SIZES = (1, 7, 12, 48)
+
+
+@pytest.fixture(scope="module")
+def stream_sys(qsys):
+    """48-frame clips + the two θ of the resume sweep, sharing qsys's
+    trained bank (detector training dominates; build it once)."""
+    bank, params, _, _, _ = qsys
+    from repro.data.video_synth import make_split
+    clips = make_split("caldot1", "stream", 2, n_frames=48)
+    res = params.proxy_res
+    W, H = params.det_res
+    frame, _ = pl.render_frame(clips[0], 0, W, H)
+    s, _ = bank.proxies[res].scores(pl._downsample(frame, res))
+    dense = dataclasses.replace(
+        params, proxy_threshold=float(np.quantile(s, 0.5)), gap=1,
+        tracker="sort")
+    skip_heavy = dataclasses.replace(
+        params, proxy_threshold=float(np.quantile(s, 0.97)), gap=2,
+        tracker="recurrent")
+    return bank, {"dense": dense, "skip_heavy": skip_heavy}, clips
+
+
+def _batch_packed(bank, params, clip, tmp_path, tag):
+    store = TrackStore(str(tmp_path / f"batch_{tag}"), bank, params)
+    store.ingest([clip])
+    return store.get(clip)
+
+
+def _assert_packed_equal(a, b):
+    """Everything but the timing field, bit for bit."""
+    np.testing.assert_array_equal(a.rows, b.rows)
+    np.testing.assert_array_equal(a.offsets, b.offsets)
+    np.testing.assert_array_equal(a.hist, b.hist)
+    np.testing.assert_array_equal(a.track_bbox, b.track_bbox)
+    assert a.summary == b.summary
+    assert a.counters == b.counters
+    assert a.n_frames == b.n_frames
+
+
+def _assert_index_matches_rebuild(packed):
+    hist, bbox = build_index(packed.rows, packed.offsets,
+                             packed.n_frames)
+    np.testing.assert_array_equal(packed.hist, hist)
+    np.testing.assert_array_equal(packed.track_bbox, bbox)
+    assert packed.summary == summarize(packed.rows, packed.offsets,
+                                       hist, bbox)
+
+
+# ---------------------------------------------------------------------------
+# The tentpole property: segment-append == one-shot, for every split
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("theta", ["dense", "skip_heavy"])
+@pytest.mark.parametrize("seg", SEG_SIZES)
+def test_segment_append_bit_identical(stream_sys, tmp_path, theta, seg):
+    bank, thetas, clips = stream_sys
+    params = thetas[theta]
+    clip = clips[0]
+    ref = _batch_packed(bank, params, clip, tmp_path, f"{theta}_{seg}")
+    live = TrackStore(str(tmp_path / f"live_{theta}_{seg}"), bank,
+                      params)
+    ing = SegmentIngestor(live)
+    assert ing.open(clip) == 0
+    total = 0
+    while total < clip.n_frames:
+        rep = ing.append(clip, seg)
+        total = rep.watermark
+        packed = live.get(clip)
+        assert packed is not None
+        # incremental index merge == full rebuild, EVERY watermark
+        assert packed.n_frames == total
+        _assert_index_matches_rebuild(packed)
+        assert live.watermark(clip) == total
+        assert (packed.watermark is None) == rep.sealed
+    assert rep.sealed and total == clip.n_frames
+    _assert_packed_equal(ref, live.get(clip))
+
+
+def test_seal_convenience(stream_sys, tmp_path):
+    bank, thetas, clips = stream_sys
+    params = thetas["dense"]
+    clip = clips[1]
+    ref = _batch_packed(bank, params, clip, tmp_path, "seal")
+    live = TrackStore(str(tmp_path / "live_seal"), bank, params)
+    ing = SegmentIngestor(live)
+    ing.open(clip)
+    ing.append(clip, 20)
+    _assert_packed_equal(ref, ing.seal(clip))   # appends the rest
+    _assert_packed_equal(ref, ing.seal(clip))   # idempotent
+
+
+def test_resume_across_ingestor_instances(stream_sys, tmp_path):
+    """Process-restart path: a NEW store + ingestor over the same root
+    resumes from the checkpoint sidecar (GRU state included) and the
+    sealed clip is still bit-identical to the batch ingest."""
+    bank, thetas, clips = stream_sys
+    params = thetas["skip_heavy"]               # recurrent tracker
+    clip = clips[0]
+    ref = _batch_packed(bank, params, clip, tmp_path, "resume")
+    root = str(tmp_path / "live_resume")
+    first = SegmentIngestor(TrackStore(root, bank, params))
+    first.open(clip)
+    first.append(clip, 13)                      # mid-gap boundary
+    # simulate process death: everything rebuilt from disk
+    store2 = TrackStore(root, bank, params)
+    second = SegmentIngestor(store2)
+    assert second.open(clip) == 13
+    second.append(clip, 13)
+    second.append(clip, 48)                     # clamped, seals
+    _assert_packed_equal(ref, store2.get(clip))
+
+
+def test_resume_rolls_back_to_stale_checkpoint(stream_sys, tmp_path):
+    """checkpoint_every=2 leaves the store an append ahead of the
+    sidecar (same state as a crash between materialize and checkpoint).
+    Resume must ROLL BACK to the checkpoint and still seal
+    bit-identically — re-appending rolled-back frames is
+    deterministic."""
+    bank, thetas, clips = stream_sys
+    params = thetas["skip_heavy"]
+    clip = clips[1]
+    ref = _batch_packed(bank, params, clip, tmp_path, "rollback")
+    root = str(tmp_path / "live_rollback")
+    first = SegmentIngestor(TrackStore(root, bank, params),
+                            checkpoint_every=2)
+    first.open(clip)
+    first.append(clip, 9)
+    first.append(clip, 9)                       # checkpoint at 18
+    first.append(clip, 9)                       # store at 27, ckpt at 18
+    store2 = TrackStore(root, bank, params)
+    second = SegmentIngestor(store2)
+    assert second.open(clip) == 18              # rolled back
+    assert store2.watermark(clip) == 18
+    # the rolled-back store state matches a full rebuild
+    _assert_index_matches_rebuild(store2.get(clip))
+    while store2.watermark(clip) < clip.n_frames:
+        second.append(clip, 9)
+    _assert_packed_equal(ref, store2.get(clip))
+
+
+def test_checkpoint_array_roundtrip(stream_sys, tmp_path):
+    """to_arrays/from_arrays/save/load preserve tracker state exactly
+    (ids, order, misses, boxes, GRU hidden, cursor)."""
+    bank, thetas, clips = stream_sys
+    params = thetas["skip_heavy"]
+    live = TrackStore(str(tmp_path / "ckpt_rt"), bank, params)
+    ing = SegmentIngestor(live, checkpoint_every=0)  # manual ckpts
+    ing.open(clips[0])
+    ing.append(clips[0], 17)
+    path = ing.checkpoint(clips[0])
+    ckpt = TrackerCheckpoint.load(path)
+    rt = TrackerCheckpoint.from_arrays(ckpt.to_arrays())
+    assert (rt.kind, rt.cursor, rt.watermark, rt.next_id,
+            rt.last_frame) == (ckpt.kind, ckpt.cursor, ckpt.watermark,
+                               ckpt.next_id, ckpt.last_frame)
+    assert len(rt.active) == len(ckpt.active)
+    assert len(rt.finished) == len(ckpt.finished)
+    for a, b in zip(rt.finished + rt.active,
+                    ckpt.finished + ckpt.active):
+        assert a.track_id == b.track_id and a.misses == b.misses
+        assert a.frames == b.frames
+        np.testing.assert_array_equal(np.stack(a.boxes),
+                                      np.stack(b.boxes))
+        if ckpt.kind == "recurrent":
+            np.testing.assert_array_equal(a.h, b.h)
+    # restored trackers produce identical visible tracks
+    t1 = ckpt.restore(bank, params).result()
+    t2 = rt.restore(bank, params).result()
+    assert len(t1) == len(t2)
+    for x, y in zip(t1, t2):
+        np.testing.assert_array_equal(x, y)
+
+
+# ---------------------------------------------------------------------------
+# Guard rails
+# ---------------------------------------------------------------------------
+
+def test_ingestor_rejects_refine(stream_sys, tmp_path):
+    bank, thetas, _ = stream_sys
+    params = dataclasses.replace(thetas["dense"], refine=True)
+    store = TrackStore(str(tmp_path / "refine"), bank, params)
+    with pytest.raises(ValueError, match="refine"):
+        SegmentIngestor(store)
+
+
+def test_open_requires_open_state(stream_sys, tmp_path):
+    bank, thetas, clips = stream_sys
+    params = thetas["dense"]
+    store = TrackStore(str(tmp_path / "guards"), bank, params)
+    ing = SegmentIngestor(store)
+    with pytest.raises(KeyError):
+        ing.append(clips[0], 8)                 # never opened
+    store.ingest([clips[0]])                    # batch-sealed
+    with pytest.raises(RuntimeError, match="fully materialized"):
+        ing.open(clips[0])
+
+
+def test_open_clip_never_evicted(stream_sys, tmp_path):
+    """Budget pressure must not evict a mid-stream clip: its NPZ is the
+    stream's only copy and a batch re-ingest would clobber the
+    tracker/index state."""
+    bank, thetas, clips = stream_sys
+    params = thetas["dense"]
+    store = TrackStore(str(tmp_path / "evict"), bank, params)
+    ing = SegmentIngestor(store)
+    ing.open(clips[0])
+    ing.append(clips[0], 24)                    # open at watermark 24
+    store.ingest([clips[1]])                    # sealed neighbor
+    evicted = store.set_budget(StoreBudget(max_bytes=1))
+    assert evicted == 1                         # only the sealed clip
+    assert store.get(clips[0]) is not None      # open clip survives
+    assert store.watermark(clips[0]) == 24
+    store.set_budget(None)
+
+
+# ---------------------------------------------------------------------------
+# Standing queries
+# ---------------------------------------------------------------------------
+
+def _standing_queries(clips):
+    return {
+        "count": Query.count_frames(min_count=1),
+        "region_frames": Query(
+            (Region(0.0, 0.0, 1.0, 0.5),), aggregate="frames"),
+        "count2": Query.count_frames(min_count=2),
+        "duration": Query.duration(min_count=1),
+        "tracks": Query.count_tracks(min_track_len=3),
+        "windowed": Query.count_frames(
+            min_count=1, time_range=TimeRange(10, 40)),
+    }
+
+
+def _reference(q, store, clips):
+    plan_kw = {}
+    from repro.query.plan import compile_query
+    plan = compile_query(q)
+    if plan.region is not None:
+        plan_kw["region"] = (plan.region.x0, plan.region.y0,
+                             plan.region.x1, plan.region.y1)
+    if plan.time_range is not None:
+        plan_kw["time_range"] = (plan.time_range.start,
+                                 plan.time_range.end)
+    return reference_query(
+        [store.tracks(c) for c in clips],
+        [c.profile.fps for c in clips],
+        min_len=plan.min_len, min_count=plan.min_count,
+        aggregate=q.aggregate, **plan_kw)
+
+
+def test_standing_deltas_reconstruct_adhoc(stream_sys, tmp_path):
+    """Acceptance: at EVERY watermark, each standing query's
+    accumulated state equals the ad-hoc plan over the store AND the
+    naive reference oracle — and no visible row is scanned twice."""
+    bank, thetas, clips = stream_sys
+    params = thetas["dense"]
+    store = TrackStore(str(tmp_path / "standing"), bank, params)
+    service = QueryService(store)
+    ing = SegmentIngestor(store, service=service)
+    sqs = {name: service.register_standing(StandingQuery(q, clips))
+           for name, q in _standing_queries(clips).items()}
+    for c in clips:
+        ing.open(c)
+    watermark = 0
+    while watermark < clips[0].n_frames:
+        for c in clips:                         # interleaved appends
+            ing.append(c, 12)
+        watermark += 12
+        for name, q in _standing_queries(clips).items():
+            acc = sqs[name].result()
+            adhoc = service.query(q, clips)
+            ref = _reference(q, store, clips)
+            assert acc.aggregates == adhoc.aggregates \
+                == ref["aggregates"], \
+                (name, watermark, acc.aggregates, adhoc.aggregates)
+            if q.aggregate == "frames":
+                assert sorted(acc.frames) == adhoc.frames \
+                    == ref["frames"], (name, watermark)
+    # each visible row delivered exactly once across the stream
+    total_rows = sum(len(store.get(c).rows) for c in clips)
+    for name, sq in sqs.items():
+        assert sq.rows_scanned <= total_rows, name
+    assert sqs["count"].rows_scanned == total_rows
+
+
+def test_standing_skip_unaffected_clips(stream_sys, tmp_path):
+    """A region provably disjoint from everything: every delta is
+    dropped via the summary (zero rows scanned) yet the accumulated
+    answer still matches ad-hoc."""
+    bank, thetas, clips = stream_sys
+    params = thetas["dense"]
+    store = TrackStore(str(tmp_path / "standing_skip"), bank, params)
+    service = QueryService(store)
+    ing = SegmentIngestor(store, service=service)
+    q = Query.count_frames(region=(0.0, 0.0, 0.01, 0.01), min_count=1)
+    sq = service.register_standing(StandingQuery(q, clips))
+    ing.open(clips[0])
+    for _ in range(4):
+        ing.append(clips[0], 12)
+    assert sq.rows_scanned == 0
+    assert sq.clips_skipped >= 1
+    assert sq.result().aggregates == \
+        service.query(q, clips).aggregates
+
+
+def test_standing_registration_midstream(stream_sys, tmp_path):
+    """Registering after some appends bootstraps from the store and
+    stays exact from there on."""
+    bank, thetas, clips = stream_sys
+    params = thetas["dense"]
+    store = TrackStore(str(tmp_path / "standing_mid"), bank, params)
+    service = QueryService(store)
+    ing = SegmentIngestor(store, service=service)
+    ing.open(clips[0])
+    ing.append(clips[0], 24)                    # before registration
+    q = Query.count_frames(min_count=1)
+    sq = service.register_standing(StandingQuery(q, clips[:1]))
+    assert sq.result().aggregates == \
+        service.query(q, clips[:1]).aggregates
+    ing.append(clips[0], 12)                    # after registration
+    assert sq.result().aggregates == \
+        service.query(q, clips[:1]).aggregates
+    service.unregister_standing(sq)
+    before = sq.result().aggregates
+    ing.append(clips[0], 12)                    # no longer notified
+    assert sq.result().aggregates == before
+
+
+def test_standing_rejects_limit_and_classes(stream_sys):
+    _, _, clips = stream_sys
+    from repro.query import Limit, TrackFilter
+    with pytest.raises(ValueError, match="Limit"):
+        StandingQuery(Query((), limit=Limit(3)), clips)
+    with pytest.raises(ValueError, match="class"):
+        StandingQuery(Query((TrackFilter(classes=(0,)),),
+                            aggregate="tracks"), clips)
+
+
+def test_query_open_clip_midstream(stream_sys, tmp_path):
+    """Ad-hoc queries over an open clip answer from the ingested
+    prefix — indexed and scan paths agree with the oracle at every
+    watermark."""
+    bank, thetas, clips = stream_sys
+    params = thetas["skip_heavy"]
+    store = TrackStore(str(tmp_path / "midstream"), bank, params)
+    service = QueryService(store)
+    ing = SegmentIngestor(store)
+    clip = clips[0]
+    ing.open(clip)
+    q = Query.count_frames(min_count=1)
+    for _ in range(4):
+        ing.append(clip, 12)
+        indexed = service.query(q, [clip])
+        scanned = service.query(q, [clip], use_index=False)
+        assert indexed.aggregates == scanned.aggregates
+        ref = _reference(q, store, [clip])
+        assert indexed.aggregates["count"] == \
+            ref["aggregates"]["count"]
