@@ -5,9 +5,18 @@ On this CPU container the Pallas kernels execute in interpret mode (not
 representative of TPU speed), so the measured numbers benchmark the jnp
 dispatch path that the dry-run lowers; the analytic columns give the
 TPU v5e expectation (bytes / 819 GB/s vs FLOPs / 197 TFLOP/s).
+
+    PYTHONPATH=src python -m benchmarks.kernels [--smoke]
+
+``--smoke`` is the CI correctness gate: it skips the timing sweep and
+instead asserts the ``proxy_plan`` and ``assign`` Pallas kernels
+(interpret mode) agree bit-for-bit with their jnp references on random
+inputs — the same interpret-vs-ref contract the kernel tests enforce,
+runnable without pytest.
 """
 from __future__ import annotations
 
+import argparse
 import time
 from typing import Callable, Dict, List
 
@@ -85,10 +94,67 @@ def run() -> List[Dict]:
     rows.append({"name": "window_gather 4x128x128",
                  "us_per_call": us,
                  "tpu_est_us": 4 * 128 * 128 * 3 * 4 * 2 / BW * 1e6})
+
+    from repro.kernels.proxy_plan import proxy_plan
+    B, hp, wp, C, hc, wc = 16, 24, 32, 64, 5, 8
+    feat = jax.random.normal(key, (B, hp, wp, C), jnp.float32)
+    w = jax.random.normal(key, (C,))
+    us = _time(lambda: proxy_plan(feat, w, 0.0, 0.5, grid_hw=(hc, wc)))
+    rows.append({"name": f"proxy_plan B{B} {hp}x{wp}x{C}->{hc}x{wc}",
+                 "us_per_call": us,
+                 "tpu_est_us": feat.size * 4 / BW * 1e6})
+
+    from repro.kernels.assign import assign_batch
+    K, N = 16, 32
+    costs = jax.random.uniform(key, (K, N, N), jnp.float32)
+    us = _time(lambda: assign_batch(costs))
+    # JV augmenting paths: ~N scans of the NxN slack matrix per row
+    rows.append({"name": f"assign_batch K{K} N{N}",
+                 "us_per_call": us,
+                 "tpu_est_us": K * N * N * N * 4 / BW * 1e6})
     return rows
 
 
-def main() -> None:
+def smoke() -> None:
+    """CI gate: interpret-mode Pallas output must equal the jnp
+    reference bit-for-bit for the two fused pipeline kernels."""
+    from repro.kernels.assign.kernel import assign_pallas
+    from repro.kernels.assign.ref import assign_ref
+    from repro.kernels.proxy_plan.kernel import proxy_plan_pallas
+    from repro.kernels.proxy_plan.ref import proxy_plan_ref
+    from repro.kernels.proxy_plan.ops import span_matrix
+
+    rng = np.random.default_rng(0)
+    for B, hp, wp, C, hc, wc in [(2, 20, 32, 16, 5, 8),
+                                 (3, 6, 8, 16, 9, 11)]:
+        feat = rng.standard_normal((B, hp, wp, C)).astype(np.float32)
+        w = rng.standard_normal(C).astype(np.float32)
+        span_y = jnp.asarray(span_matrix(hc, hp))
+        span_x = jnp.asarray(span_matrix(wc, wp))
+        gp, sp = proxy_plan_pallas(feat, w, 0.1, 0.5, span_y, span_x,
+                                   interpret=True)
+        gr, sr = proxy_plan_ref(feat, w, 0.1, 0.5, span_y, span_x)
+        np.testing.assert_array_equal(np.asarray(gp), np.asarray(gr))
+        np.testing.assert_array_equal(np.asarray(sp), np.asarray(sr))
+    for K, N in [(1, 1), (3, 4), (2, 9)]:
+        # multiples of 1/64: exact in f32, tie-breaks match the ref
+        costs = rng.integers(0, 256, (K, N, N)).astype(np.float32) / 64.0
+        got = np.asarray(assign_pallas(jnp.asarray(costs),
+                                       interpret=True))
+        np.testing.assert_array_equal(got, assign_ref(costs))
+        for k in range(K):
+            assert sorted(got[k]) == list(range(N))   # permutation
+    print("kernels smoke OK: proxy_plan + assign interpret == ref")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="correctness gate only (no timing sweep)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        smoke()
+        return
     print("name,us_per_call,tpu_est_us")
     for r in run():
         print(f"{r['name']},{r['us_per_call']:.1f},{r['tpu_est_us']:.2f}")

@@ -17,6 +17,13 @@ Runs are interleaved and the median is reported (this container's
 process scheduling is noisy); equivalence of extracted tracks across
 all three modes is asserted on every rep.
 
+A second phase (``fps_vs_streams``) scales concurrent streams (1/4/16
+threads, one clip run each, per-frame ``chunk_size=1`` — the live
+multi-camera regime) with and without a shared ``BatchBroker``,
+recording wall fps, consolidated ``detector_dispatches`` and
+``batch_fill_mean`` — and asserting both bit-identical tracks and
+strictly fewer dispatches at >= 4 streams.
+
 The proxy threshold comes from the paper's threshold sweep over cached
 validation score grids (``proxy.calibrate_threshold``) on a briefly
 trained proxy — not from the old self-calibration against the untrained
@@ -104,6 +111,98 @@ def build_workload(n_clips: int = 4, n_frames: int = 48,
     return bank, params, clips
 
 
+def stream_scaling(bank, params, clips, stream_counts=(1, 4, 16),
+                   reps: int = 3) -> dict:
+    """fps at N concurrent streams (threads, each its own clip run):
+    one shared ``BatchBroker`` vs N fully independent runs.
+
+    Streams run in PER-FRAME mode (``chunk_size=1``) — the live multi-
+    camera regime the broker targets, where every stream issues one tiny
+    detector call per frame and the fixed per-dispatch cost dominates.
+    Cross-stream coalescing amortizes exactly that cost; with big chunks
+    each stream already makes a couple of large calls per clip and there
+    is nothing left to amortize on this host.
+
+    Records the consolidated detector dispatch count and mean bucket
+    fill alongside fps — the broker's win is fewer, fuller detector
+    calls, and ``detector_dispatches`` must be strictly below the
+    independent count from 4 streams up (asserted here, not just
+    reported).  Independent/broker fleets alternate within each rep and
+    medians are reported (single-core container, very noisy); a warm
+    broker fleet runs first so consolidated-bucket conv compiles don't
+    land in the measurement."""
+    import dataclasses
+    import threading
+
+    from repro.core.executor import (BatchBroker, ExecutorOptions,
+                                     run_clip_streamed)
+
+    params = dataclasses.replace(params, chunk_size=1)
+    detector = bank.detectors[params.det_arch]
+
+    def fleet(n, broker):
+        results = [None] * n
+        errors = []
+
+        def one(i):
+            try:
+                opts = ExecutorOptions(prefetch=False,
+                                       batch_broker=broker)
+                results[i] = run_clip_streamed(
+                    bank, params, clips[i % len(clips)], opts)
+            except BaseException as exc:
+                errors.append(exc)
+
+        threads = [threading.Thread(target=one, args=(i,))
+                   for i in range(n)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        assert not errors, errors
+        frames = sum(r.frames_processed for r in results)
+        return frames / wall, results
+
+    warm = BatchBroker()
+    _, ref = fleet(max(stream_counts), warm)
+    warm.close()
+
+    out = {}
+    for n in stream_counts:
+        fps_ind, fps_brk, disp_ind, disp_brk, fills = [], [], [], [], []
+        for _ in range(reps):
+            detector.dispatches = 0
+            fps, solo = fleet(n, None)
+            fps_ind.append(fps)
+            disp_ind.append(detector.dispatches)
+            broker = BatchBroker()
+            fps, got = fleet(n, broker)
+            broker.close()
+            fps_brk.append(fps)
+            disp_brk.append(broker.dispatches)
+            if broker.batch_fill:
+                fills.append(float(np.mean(broker.batch_fill)))
+            for a, b in zip(solo, got):  # broker must not change tracks
+                assert len(a.tracks) == len(b.tracks) and all(
+                    np.array_equal(x, y)
+                    for x, y in zip(a.tracks, b.tracks)), \
+                    "broker changed per-stream tracks"
+        if n >= 4:
+            assert max(disp_brk) < min(disp_ind), \
+                (n, disp_brk, disp_ind)
+        out[str(n)] = {
+            "fps_independent": round(float(np.median(fps_ind)), 2),
+            "fps_broker": round(float(np.median(fps_brk)), 2),
+            "detector_dispatches_independent": int(np.median(disp_ind)),
+            "detector_dispatches": int(np.median(disp_brk)),
+            "batch_fill_mean": round(float(np.mean(fills)), 4)
+            if fills else 0.0,
+        }
+    return out
+
+
 def run(out_path: str | None = DEFAULT_OUT, reps: int = 7,
         smoke: bool = False) -> dict:
     from repro.core import pipeline as pl
@@ -169,6 +268,11 @@ def run(out_path: str | None = DEFAULT_OUT, reps: int = 7,
     med = {k: float(np.median(v)) for k, v in fps_all.items()}
     med_wall = {k: float(np.median(v)) for k, v in wall_all.items()}
 
+    scaling = stream_scaling(bank, params, clips,
+                             stream_counts=(1, 4) if smoke else (1, 4, 16))
+    fills = [s["batch_fill_mean"] for s in scaling.values()
+             if s["batch_fill_mean"] > 0]
+
     result = {
         "benchmark": "pipeline_engine",
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
@@ -197,6 +301,14 @@ def run(out_path: str | None = DEFAULT_OUT, reps: int = 7,
             [b / a for a, b in zip(fps_all["frame"],
                                    fps_all["streaming"])])),
         "tracks_identical": bool(identical),
+        # cross-stream broker scaling: wall fps of N concurrent streams
+        # sharing one BatchBroker vs N independent runs, plus the
+        # consolidated dispatch count and mean bucket occupancy
+        "fps_vs_streams": scaling,
+        "detector_dispatches": {k: v["detector_dispatches"]
+                                for k, v in scaling.items()},
+        "batch_fill_mean": round(float(np.mean(fills)), 4) if fills
+        else 0.0,
         "detector_jit_entries": detect_jit_entries(),
         "jit_entries_grew_after_warmup":
             detect_jit_entries() != entries_warm,
@@ -231,6 +343,12 @@ def main(argv=None) -> None:
     print(f"speedup          : {r['speedup']:8.2f}x chunked, "
           f"{r['speedup_streaming']:.2f}x streaming")
     print(f"tracks identical : {r['tracks_identical']}")
+    for n, s in r["fps_vs_streams"].items():
+        print(f"{n:>2} streams       : {s['fps_broker']:8.1f} fps broker"
+              f" vs {s['fps_independent']:.1f} independent  "
+              f"(dispatches {s['detector_dispatches']} vs "
+              f"{s['detector_dispatches_independent']}, "
+              f"fill {s['batch_fill_mean']:.2f})")
     print(f"detector jit entries: {r['detector_jit_entries']}"
           f" (stable after warmup: "
           f"{not r['jit_entries_grew_after_warmup']})")

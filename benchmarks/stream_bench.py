@@ -12,6 +12,11 @@ Measures the quantities the stream subsystem promises (``repro.stream``):
     incremental re-evaluation cost per watermark advance, vs
     **re-running the ad-hoc query from scratch** (the full row scan,
     ``use_index=False``) over the same open clips;
+  * **fleet watermark lag, broker on/off** — K feeds appending
+    concurrently (one ingestor + thread each, per-frame segments) with
+    a shared ``executor.BatchBroker`` vs independent executors: lag,
+    append wall, fleet fps and consolidated detector dispatches, with
+    per-feed stored rows asserted bit-identical across the two modes;
   * **exactness counters** — the unrestricted standing query must scan
     each visible row EXACTLY once across the whole stream
     (``rows_scanned == total rows``), and its accumulated state must
@@ -70,6 +75,89 @@ def run(out_path: str | None = DEFAULT_OUT, smoke: bool = False) -> dict:
     finally:
         import shutil
         shutil.rmtree(root, ignore_errors=True)
+
+
+def _fleet_lag(bank, params, clips, segment, root, smoke,
+               TrackStore, SegmentIngestor) -> dict:
+    """Watermark lag with K camera feeds appending CONCURRENTLY (one
+    ingestor + thread per feed, per-frame ``chunk_size=1``), with a
+    shared ``BatchBroker`` vs fully independent executors.
+
+    The broker consolidates every feed's per-segment detector windows
+    into shared dispatches; per-feed stored rows must stay bit-identical
+    (asserted), only the batching and the lag/throughput change.  Lag
+    here is the bench's usual store-landing + standing-notify slice of
+    each append; append wall and fleet fps are recorded alongside so
+    the linger the broker spends waiting for peers is visible too."""
+    import dataclasses
+    import os
+    import threading
+
+    from repro.core.executor import BatchBroker, ExecutorOptions
+
+    p1 = dataclasses.replace(params, chunk_size=1)
+    feeds = clips[:3] if smoke else clips[:8]
+    detector = bank.detectors[params.det_arch]
+    out = {"feeds": len(feeds), "segment_frames": segment}
+    rows_by_mode = {}
+    for mode in ("off", "on"):
+        broker = BatchBroker() if mode == "on" else None
+        detector.dispatches = 0
+        stores, ingestors = [], []
+        for i, c in enumerate(feeds):
+            s = TrackStore(os.path.join(root, f"fleet_{mode}_{i}"),
+                           bank, p1)
+            ing = SegmentIngestor(
+                s, options=ExecutorOptions(prefetch=False,
+                                           batch_broker=broker))
+            ing.open(c)
+            stores.append(s)
+            ingestors.append(ing)
+        reports = [[] for _ in feeds]
+        errors: List[BaseException] = []
+
+        def run_feed(i):
+            try:
+                c = feeds[i]
+                n_seg = (c.n_frames + segment - 1) // segment
+                for _ in range(n_seg):
+                    reports[i].append(ingestors[i].append(c, segment))
+            except BaseException as exc:
+                errors.append(exc)
+
+        threads = [threading.Thread(target=run_feed, args=(i,))
+                   for i in range(len(feeds))]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        if broker is not None:
+            broker.close()
+        assert not errors, errors
+        flat = [r for rs in reports for r in rs]
+        assert all(rs[-1].sealed for rs in reports)
+        lag = [r.store_seconds + r.standing_seconds for r in flat]
+        out[f"watermark_lag_ms_broker_{mode}"] = {
+            "median": float(np.median(lag) * 1e3),
+            "p95": float(np.percentile(lag, 95) * 1e3),
+        }
+        out[f"append_wall_ms_broker_{mode}"] = float(
+            np.median([r.wall_seconds for r in flat]) * 1e3)
+        out[f"fleet_fps_broker_{mode}"] = round(
+            sum(r.frames_processed for r in flat) / wall, 2)
+        out[f"detector_dispatches_broker_{mode}"] = int(
+            broker.dispatches if broker is not None
+            else detector.dispatches)
+        rows_by_mode[mode] = [stores[i].get(c).rows
+                              for i, c in enumerate(feeds)]
+    for a, b in zip(rows_by_mode["off"], rows_by_mode["on"]):
+        np.testing.assert_array_equal(a, b)
+    out["tracks_bit_identical"] = True
+    assert out["detector_dispatches_broker_on"] \
+        < out["detector_dispatches_broker_off"]
+    return out
 
 
 def _measure(bank, params, clips, segment, n_frames, root, smoke,
@@ -168,6 +256,9 @@ def _measure(bank, params, clips, segment, n_frames, root, smoke,
             np.testing.assert_array_equal(a.hist, b.hist)
             assert a.summary == b.summary and a.counters == b.counters
 
+    fleet = _fleet_lag(bank, params, clips, segment, root, smoke,
+                       TrackStore, SegmentIngestor)
+
     delta_ms = float(np.median(append_standing) / n_sqs * 1e3)
     adhoc_ms = float(np.median(adhoc_total_s) * 1e3)
     adhoc_scan_ms = float(np.median(adhoc_scan_s) * 1e3)
@@ -206,6 +297,7 @@ def _measure(bank, params, clips, segment, n_frames, root, smoke,
         "rows_scanned_exactly_once": True,      # asserted above
         "standing_matches_adhoc_and_reference": True,
         "open_clips_during_adhoc_measure": len(clips),
+        "fleet": fleet,
     }
     if out_path:
         with open(out_path, "w") as f:
@@ -246,6 +338,14 @@ def main(argv=None) -> None:
     print(f"rows scanned once: {r['standing_rows_scanned']} scanned "
           f"+ {r['standing_rows_skipped']} summary-skipped == "
           f"{r['rows_total']} (asserted)")
+    fl = r["fleet"]
+    for mode in ("off", "on"):
+        w = fl[f"watermark_lag_ms_broker_{mode}"]
+        print(f"fleet broker {mode:>3}: "
+              f"{fl[f'fleet_fps_broker_{mode}']:8.1f} fps, lag "
+              f"{w['median']:.2f} ms median (p95 {w['p95']:.2f}), "
+              f"{fl[f'detector_dispatches_broker_{mode}']} dispatches "
+              f"at {fl['feeds']} feeds")
     if out:
         print(f"wrote {out}")
 

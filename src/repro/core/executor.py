@@ -8,11 +8,16 @@ each stage computes:
 
   DECODE  — render B frames at detector resolution, charging the
             decode-cost ledger (``pipeline.render_frame``);
-  PROXY   — one batched proxy dispatch for the chunk, host-side grid
-            mapping, window planning (``windows.plan_chunk``);
+  PROXY   — one fused ``proxy_plan`` kernel dispatch for the chunk
+            (score + threshold + detector-grid mapping on device), then
+            host window planning from the kernel's grids + plan stats
+            (``windows.plan_from_mapped``; ``fused_plan=False`` keeps
+            the legacy score-map round-trip through ``plan_chunk``);
   DETECT  — cross-frame size-class batches through the detector, window
             crops via the ``window_gather_batch`` Pallas kernel, batch
-            dims padded to power-of-two buckets;
+            dims padded to power-of-two buckets; with a shared
+            ``BatchBroker`` the dispatch itself coalesces windows
+            across every concurrent run (see ``BatchBroker``);
   TRACK   — detections feed the tracker strictly in frame order (the
             only stage with cross-chunk state), candidate crop
             embeddings batched per chunk (``tracker.embed_dets_chunk``).
@@ -72,7 +77,8 @@ from repro.core.pipeline import (CELL_PX, ModelBank, PipelineParams,
                                  make_sizeset, map_proxy_grid,
                                  render_frame)
 from repro.core.tracker import RecurrentTracker, embed_dets_chunk
-from repro.core.windows import ChunkPlan, full_frame_plan, plan_chunk
+from repro.core.windows import (ChunkPlan, full_frame_plan, plan_chunk,
+                                plan_from_mapped)
 from repro.data.video_synth import Clip
 
 DEFAULT_CHUNK = 16     # frames per chunk (B) when θ does not say
@@ -126,7 +132,19 @@ class ExecutorOptions:
     ``share_decode_pool`` — let ``run_clips`` create ONE pool shared by
                          the two in-flight clips (the pool is sized
                          ``max(2, decode_workers)`` so cross-clip decode
-                         overlap survives the sharing).
+                         overlap survives the sharing);
+    ``batch_broker``   — an externally owned ``BatchBroker``: DETECT
+                         dispatches route through it so windows from
+                         every run sharing the broker coalesce into one
+                         consolidated detector batch per size class
+                         (tracks stay bit-identical per stream —
+                         detector rows are per-sample independent);
+    ``fused_plan``     — PROXY uses the fused ``proxy_plan`` kernel
+                         (score + threshold + detector-grid mapping on
+                         device, ``windows.plan_from_mapped`` on the
+                         stats) instead of pulling the full score map to
+                         the host.  Plans, and therefore tracks, are
+                         bit-identical either way.
     """
     prefetch: bool = True
     prefetch_depth: int = 2
@@ -137,6 +155,8 @@ class ExecutorOptions:
     chunk_size: Optional[int] = None
     decode_pool: Optional["DecodePool"] = None
     share_decode_pool: bool = True
+    batch_broker: Optional["BatchBroker"] = None
+    fused_plan: bool = True
 
 
 @dataclass
@@ -154,6 +174,273 @@ class ChunkTask:
 class _WorkerFailure:
     def __init__(self, exc: BaseException):
         self.exc = exc
+
+
+# ---------------------------------------------------------------------------
+# Cross-stream batch broker (PROXY -> DETECT boundary)
+# ---------------------------------------------------------------------------
+
+class BrokerCancelled(RuntimeError):
+    """The stream's broker registration was dropped while a request was
+    pending: its windows are discarded, other streams are unaffected."""
+
+
+class _BrokerHandle:
+    """One stream's registration with a ``BatchBroker``.  Created lazily
+    by ``_RunContext`` on the stream's first DETECT dispatch (so a run
+    that never reaches DETECT never delays other streams' flushes) and
+    closed when the run finishes or is cancelled."""
+
+    __slots__ = ("broker", "active")
+
+    def __init__(self, broker: "BatchBroker"):
+        self.broker = broker
+        self.active = True
+
+    def detect(self, detector, frames, conf, origins, scales,
+               n_valid: int) -> List[np.ndarray]:
+        return self.broker._detect(self, detector, frames, conf,
+                                   origins, scales, n_valid)
+
+    def close(self) -> None:
+        self.broker.unregister(self)
+
+
+class _BrokerRequest:
+    __slots__ = ("handle", "detector", "frames", "conf", "origins",
+                 "scales", "n", "done", "result", "error")
+
+    def __init__(self, handle, detector, frames, conf, origins, scales,
+                 n: int):
+        self.handle = handle
+        self.detector = detector
+        self.frames = frames            # (>= n, h, w, 3); rows >= n pad
+        self.conf = conf
+        self.origins = list(origins)
+        self.scales = list(scales)
+        self.n = n
+        self.done = False
+        self.result: Optional[List[np.ndarray]] = None
+        self.error: Optional[BaseException] = None
+
+
+class BatchBroker:
+    """Coalesce DETECT dispatches across concurrent executor runs.
+
+    Each run (a ``SegmentIngestor`` append, one clip of ``run_clips``, a
+    camera thread) registers a handle; its DETECT stage submits one
+    request per size class and blocks for the routed-back results, which
+    keeps TRACK order per stream exactly as without the broker.  Pending
+    requests from all streams flush together: same-shape requests (one
+    pow2 size-class bucket, the existing padding scheme) concatenate
+    into ONE consolidated ``detect_batch`` call whose per-window results
+    split back per request.  Detector conv outputs are per-sample
+    independent of batch composition and each window's detections are
+    decoded from its own rows, so per-stream tracks are BIT-IDENTICAL to
+    the broker-off path (asserted by tests/test_broker.py).
+
+    Flush policy — whichever waiting stream first observes a trigger
+    performs the flush inline (no dedicated thread), and the detector
+    dispatch itself runs with the condition variable RELEASED: streams
+    reaching DETECT while a batch computes enqueue into the next batch
+    instead of convoying behind the lock.  Triggers:
+
+      * every registered stream has a request pending (nobody else can
+        join this batch), or
+      * pending windows reach ``max_batch`` (the consolidated bucket is
+        full), or
+      * a request has waited ``linger_ms`` (bounded latency: a stream
+        whose peers are decoding — or yielded zero windows this chunk —
+        never stalls behind them).  The 10ms default is well under a
+        frame period and long enough for streams decoding concurrently
+        to coalesce their chunks' windows.
+
+    A failing stream's handle is closed by its executor, dropping its
+    pending requests with ``BrokerCancelled`` while everyone else's
+    flush proceeds; ``close()`` drains whatever is still pending.
+
+    Stats (read by benchmarks): ``dispatches`` consolidated detector
+    calls, ``windows_in`` real windows served, ``batch_fill`` per-call
+    valid/bucket occupancy.
+    """
+
+    def __init__(self, max_batch: int = 64, linger_ms: float = 10.0):
+        self.max_batch = int(max_batch)
+        self.linger = float(linger_ms) / 1e3
+        self._cv = threading.Condition()
+        self._pending: List[_BrokerRequest] = []
+        self._registered = 0
+        self._waiting = 0
+        self._closed = False
+        self.dispatches = 0
+        self.windows_in = 0
+        self.batch_fill: List[float] = []
+
+    # -- stream side ----------------------------------------------------------
+
+    def register(self) -> _BrokerHandle:
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("BatchBroker is closed")
+            self._registered += 1
+            return _BrokerHandle(self)
+
+    def unregister(self, handle: _BrokerHandle) -> None:
+        with self._cv:
+            if not handle.active:
+                return
+            handle.active = False
+            self._registered -= 1
+            for req in self._pending:
+                if req.handle is handle:
+                    req.error = BrokerCancelled(
+                        "stream dropped with a request in flight")
+                    req.done = True
+            self._pending = [r for r in self._pending if not r.done]
+            self._cv.notify_all()
+
+    def close(self) -> None:
+        """Drain-on-close: flush whatever is pending, then refuse new
+        work.  Idempotent."""
+        with self._cv:
+            if self._closed:
+                return
+            self._closed = True
+            batch, self._pending = self._pending, []
+            if batch:
+                stats = self._flush(batch)
+                self._apply_stats(stats)
+            self._cv.notify_all()
+
+    def _detect(self, handle: _BrokerHandle, detector, frames, conf,
+                origins, scales, n_valid: int) -> List[np.ndarray]:
+        """Submit one size-class request and block for its results.
+        ``frames``: (>= n_valid, h, w, 3) host or device rows; rows past
+        ``n_valid`` are padding and are dropped before consolidation."""
+        if n_valid == 0:
+            return []
+        req = _BrokerRequest(handle, detector, frames, conf, origins,
+                             scales, n_valid)
+        cv = self._cv
+        cv.acquire()
+        try:
+            if self._closed:
+                raise RuntimeError("BatchBroker is closed")
+            if not handle.active:
+                raise BrokerCancelled("handle already closed")
+            # no notify on enqueue: this thread checks the flush trigger
+            # itself before waiting, and every other waiter re-checks at
+            # its own linger deadline — waking 15 peers per enqueue on a
+            # single core is pure context-switch churn
+            self._pending.append(req)
+            self._waiting += 1
+            try:
+                deadline = time.monotonic() + self.linger
+                while not req.done:
+                    if self._pending and (
+                            self._should_flush()
+                            or time.monotonic() >= deadline):
+                        batch, self._pending = self._pending, []
+                        # dispatch WITHOUT the lock: streams reaching
+                        # DETECT while this batch computes enqueue into
+                        # the next one instead of convoying behind it
+                        cv.release()
+                        try:
+                            stats = self._flush(batch)
+                        finally:
+                            cv.acquire()
+                        self._apply_stats(stats)
+                        cv.notify_all()
+                    elif self._pending:
+                        cv.wait(timeout=max(
+                            deadline - time.monotonic(), 1e-4))
+                    else:
+                        # our request rode out with another thread's
+                        # in-flight flush; its completion (or a cancel)
+                        # notifies under the lock
+                        cv.wait()
+            finally:
+                self._waiting -= 1
+        finally:
+            cv.release()
+        if req.error is not None:
+            raise req.error
+        return req.result
+
+    # -- flush side -----------------------------------------------------------
+
+    def _should_flush(self) -> bool:
+        if not self._pending:
+            return False
+        if self._waiting >= self._registered:
+            return True
+        return sum(r.n for r in self._pending) >= self.max_batch
+
+    def _apply_stats(self, stats: List[Tuple[int, int]]) -> None:
+        """Fold per-dispatch (valid, bucket) counts into the public
+        counters; called with the condition variable held (dispatches
+        themselves can overlap across flushing threads)."""
+        for total, bucket in stats:
+            self.dispatches += 1
+            self.windows_in += total
+            self.batch_fill.append(total / bucket)
+
+    def _flush(self, batch: List[_BrokerRequest]
+               ) -> List[Tuple[int, int]]:
+        groups: Dict[tuple, List[_BrokerRequest]] = {}
+        for req in batch:
+            key = (id(req.detector), float(req.conf),
+                   tuple(req.frames.shape[1:3]))
+            groups.setdefault(key, []).append(req)
+        stats: List[Tuple[int, int]] = []
+        for reqs in groups.values():
+            try:
+                stats.append(self._dispatch(reqs))
+            except BaseException as exc:
+                for r in reqs:
+                    r.error = exc
+                    r.done = True
+        return stats
+
+    def _dispatch(self, reqs: List[_BrokerRequest]) -> Tuple[int, int]:
+        detector = reqs[0].detector
+        total = sum(r.n for r in reqs)
+        bucket = next_bucket(total)
+        if len(reqs) == 1 and reqs[0].frames.shape[0] == bucket:
+            # lone already-bucketed request (a stream flushing alone at
+            # its linger deadline): feed it through untouched — for
+            # device-side crops this skips the host round-trip entirely,
+            # making a solo-stream broker run cost the same as no broker
+            r = reqs[0]
+            dets = detector.detect_batch(r.frames, r.conf,
+                                         origins=r.origins,
+                                         scales=r.scales, n_valid=r.n)
+            r.result = dets
+            r.done = True
+            return total, bucket
+        parts = [r.frames[:r.n] for r in reqs]
+        # consolidate in HOST memory even when parts are device arrays:
+        # a jnp.concatenate here would specialize one XLA program per
+        # distinct combination of part counts/shapes (unbounded across a
+        # fleet), while the numpy stack keeps the jit universe to the
+        # same pow2 detect buckets the solo path already compiles
+        stack = np.zeros((bucket,) + tuple(parts[0].shape[1:]),
+                         np.float32)
+        ofs = 0
+        for p in parts:
+            stack[ofs:ofs + len(p)] = np.asarray(p)
+            ofs += len(p)
+        origins = [o for r in reqs for o in r.origins]
+        scales = [s for r in reqs for s in r.scales]
+        dets = detector.detect_batch(stack, reqs[0].conf,
+                                     origins=origins, scales=scales,
+                                     n_valid=total)
+        ofs = 0
+        for r in reqs:
+            r.result = dets[ofs:ofs + r.n]
+            ofs += r.n
+            r.done = True
+        return total, bucket
 
 
 class _RunContext:
@@ -207,6 +494,10 @@ class _RunContext:
         self.predecode_upload = bool(options.double_buffer
                                      and self.proxy is not None)
         self.prev_chunk_gathered = False    # benign cross-thread read
+        self.fused_plan = bool(options.fused_plan
+                               and self.proxy is not None)
+        self._broker = options.batch_broker
+        self.broker_handle: Optional[_BrokerHandle] = None
         self.frame_ids = list(frame_ids) if frame_ids is not None \
             else list(range(0, clip.n_frames, params.gap))
         # ledger + RunResult counters, accumulated by TRACK (the only
@@ -215,6 +506,23 @@ class _RunContext:
         self.n_windows = 0
         self.full_frames = 0
         self.skipped = 0
+
+    def broker(self) -> Optional[_BrokerHandle]:
+        """The run's broker handle, registered lazily on the first
+        DETECT dispatch (only streams that actually detect take part in
+        the broker's all-streams-pending flush trigger).  DETECT runs on
+        the draining thread only, so no lock is needed."""
+        if self._broker is not None and self.broker_handle is None:
+            self.broker_handle = self._broker.register()
+        return self.broker_handle
+
+    def close(self) -> None:
+        """Release cross-run resources (the broker registration); called
+        by the executor when the run finishes or is cancelled."""
+        if self.broker_handle is not None:
+            self.broker_handle.close()
+            self.broker_handle = None
+        self._broker = None
 
     def device_for(self, task: ChunkTask):
         return self.devices[(self.device_offset + task.index)
@@ -258,15 +566,29 @@ def stage_decode(ctx: _RunContext, task: ChunkTask) -> ChunkTask:
 
 
 def stage_proxy(ctx: _RunContext, task: ChunkTask) -> ChunkTask:
-    """Proxy-score the whole chunk in one dispatch and plan windows."""
+    """Proxy-score the whole chunk in one dispatch and plan windows.
+
+    The default path is the fused ``proxy_plan`` kernel: threshold and
+    detector-grid mapping happen on device and only the mapped int8
+    grids + per-frame plan stats cross to the host, where
+    ``plan_from_mapped`` takes exact shortcuts on the stats.  The
+    legacy path (``fused_plan=False``) pulls the score map back and
+    maps/plans fully on the host; both produce bit-identical plans."""
     if ctx.proxy is not None:
         pframes = downsample_chunk(task.frames, ctx.proxy.resolution)
-        _, pos = ctx.proxy.scores_batch(pframes,
-                                        ctx.params.proxy_threshold)
-        grids = [map_proxy_grid(p, ctx.grid) for p in pos]
-        task.plan = plan_chunk(grids, ctx.sizeset,
-                               ctx.cfg.windows.max_windows,
-                               chunk_size=ctx.chunk)
+        if ctx.fused_plan:
+            grids, stats = ctx.proxy.plan_batch(
+                pframes, ctx.params.proxy_threshold, ctx.grid)
+            task.plan = plan_from_mapped(grids, stats, ctx.sizeset,
+                                         ctx.cfg.windows.max_windows,
+                                         chunk_size=ctx.chunk)
+        else:
+            _, pos = ctx.proxy.scores_batch(pframes,
+                                            ctx.params.proxy_threshold)
+            grids = [map_proxy_grid(p, ctx.grid) for p in pos]
+            task.plan = plan_chunk(grids, ctx.sizeset,
+                                   ctx.cfg.windows.max_windows,
+                                   chunk_size=ctx.chunk)
     else:
         task.plan = full_frame_plan(len(task.frame_ids), ctx.sizeset)
     return task
@@ -286,12 +608,18 @@ def stage_detect(ctx: _RunContext, task: ChunkTask) -> ChunkTask:
         origins = [(x * CELL_PX / W, y * CELL_PX / H)
                    for (_, x, y, _) in entries]
         scales = [(pw / W, ph / H)] * n
+        broker = ctx.broker()
         if (pw, ph) == (W, H):
             # full-frame windows: the crop is the frame itself
             stack = frames[[slot for (slot, _, _, _) in entries]]
-            dets = detector.detect_batch_bucketed(
-                stack, ctx.params.det_conf, origins=origins,
-                scales=scales)
+            if broker is not None:
+                dets = broker.detect(detector, stack,
+                                     ctx.params.det_conf,
+                                     origins, scales, n)
+            else:
+                dets = detector.detect_batch_bucketed(
+                    stack, ctx.params.det_conf, origins=origins,
+                    scales=scales)
         else:
             if frames_dev is None:       # lazy path (no double buffer)
                 frames_dev = ctx.upload(task)
@@ -303,9 +631,14 @@ def stage_detect(ctx: _RunContext, task: ChunkTask) -> ChunkTask:
                                         win_h=ph, win_w=pw, cell=CELL_PX)
             # crops stay device-side: detect_batch feeds them straight
             # into the detector without a host round-trip
-            dets = detector.detect_batch(
-                crops, ctx.params.det_conf, origins=origins,
-                scales=scales, n_valid=n)
+            if broker is not None:
+                dets = broker.detect(detector, crops,
+                                     ctx.params.det_conf,
+                                     origins, scales, n)
+            else:
+                dets = detector.detect_batch(
+                    crops, ctx.params.det_conf, origins=origins,
+                    scales=scales, n_valid=n)
         for (slot, _, _, wi), d in zip(entries, dets):
             per_window[(slot, wi)] = d
 
@@ -728,14 +1061,22 @@ class ClipExecutor:
         return _ActiveRun(ctx, handle)
 
     def cancel(self, run: _ActiveRun) -> None:
-        """Abandon a started run: stop its decode worker and release
-        everything it buffered."""
-        self.scheduler.cancel(run.ctx, run.handle)
+        """Abandon a started run: stop its decode worker, drop its
+        broker registration (pending broker requests are cancelled
+        without affecting other streams) and release everything it
+        buffered."""
+        try:
+            self.scheduler.cancel(run.ctx, run.handle)
+        finally:
+            run.ctx.close()
 
     def finish(self, run: _ActiveRun) -> RunResult:
         ctx = run.ctx
         t0 = time.process_time()
-        self.scheduler.drain(ctx, run.handle, self.stages)
+        try:
+            self.scheduler.drain(ctx, run.handle, self.stages)
+        finally:
+            ctx.close()
         tracks = ctx.tracker.result()
         if ctx.params.refine and ctx.bank.refiner is not None:
             tracks = [ctx.bank.refiner.refine(t) for t in tracks]

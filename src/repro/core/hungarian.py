@@ -6,14 +6,16 @@ to padding are reported as unmatched.  Used by the recurrent tracker, the
 SORT baseline, and the MOTA metric.
 
 Hardware note (DESIGN.md §2): the paper runs Hungarian on the host CPU
-next to a GPU; we keep the same split on TPU — association matrices are
-tiny (<= max_tracks^2 = 64^2) so the assignment is host-side, bridged
-with ``jax.pure_callback`` when embedded in an on-device loop
-(``hungarian_on_device``).
+next to a GPU; per-step association keeps that split by default.  The
+batched Pallas solver (``repro.kernels.assign``) now covers the on-device
+side: ``hungarian_batch`` solves a stack of independent problems in one
+dispatch (MOTA's per-frame matrices, opt-in tracker assignment), and
+``hungarian_on_device`` runs entirely on device instead of bridging
+through ``jax.pure_callback``.
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import List, Sequence, Tuple
 
 import numpy as np
 
@@ -23,6 +25,11 @@ except ImportError:                     # pragma: no cover
     _lsa = None
 
 BIG = 1e9
+# finite forbidden sentinel for the f32 device solver: large enough that
+# any assignment using fewer forbidden edges wins (N * max real cost
+# <= 64 * 2 << 2^13), small enough that f32 potential updates keep real
+# cost differences resolvable
+FORBIDDEN_DEVICE = 2.0 ** 13
 
 
 def hungarian(cost: np.ndarray) -> List[Tuple[int, int]]:
@@ -47,12 +54,19 @@ def _hungarian_np(cost: np.ndarray) -> List[Tuple[int, int]]:
     """Pure-numpy Jonker-Volgenant: rectangular matrices are solved
     directly with rows = the SHORT side (transposing when n > m), so a
     few detections against max_tracks tracks runs min(n, m) augmenting
-    paths instead of max(n, m)."""
+    paths instead of max(n, m).  Pairs come back row-sorted (the same
+    ordering scipy's dispatch path emits)."""
     n, m = cost.shape
     if n == 0 or m == 0:
         return []
     if n > m:
-        return sorted((r, c) for c, r in _hungarian_np(cost.T))
+        # invert the transposed solution with an O(n) counting pass —
+        # the old path swapped axes then ran a full comparison sort on
+        # output the solver had already ordered once
+        col_of = np.full(n, -1, np.int64)
+        for c, r in _hungarian_np(cost.T):
+            col_of[r] = c
+        return [(r, int(c)) for r, c in enumerate(col_of) if c >= 0]
     a = np.full((n + 1, m + 1), BIG, np.float64)
     a[1:, 1:] = cost
     u = np.zeros(n + 1)
@@ -89,28 +103,65 @@ def _hungarian_np(cost: np.ndarray) -> List[Tuple[int, int]]:
             j1 = way[j0]
             p[j0] = p[j1]
             j0 = j1
-    pairs = []
+    # emit ROW-sorted (the contract, matching scipy) via linear inversion
+    # of the col -> row matching instead of sorting afterwards
+    col_of = np.full(n, -1, np.int64)
     for j in range(1, m + 1):
         i = int(p[j])
         if i >= 1 and cost[i - 1, j - 1] < BIG / 2:
-            pairs.append((i - 1, j - 1))
-    return pairs
+            col_of[i - 1] = j - 1
+    return [(r, int(c)) for r, c in enumerate(col_of) if c >= 0]
+
+
+def hungarian_batch(costs: Sequence[np.ndarray]
+                    ) -> List[List[Tuple[int, int]]]:
+    """Solve K independent (possibly rectangular) assignment problems in
+    ONE device dispatch via the batched Pallas solver
+    (``repro.kernels.assign``).
+
+    Same contract as ``hungarian`` per problem: entries >= BIG/2 are
+    forbidden and never reported.  Matrices are padded to a common
+    square with the finite ``FORBIDDEN_DEVICE`` sentinel (the device
+    solver runs f32, so real costs must stay << 2^13 — association
+    costs here are <= 1).  Tie-breaking between equal-cost optima may
+    differ from the host solvers; totals never do."""
+    mats = [np.asarray(c, np.float32) for c in costs]
+    if not mats:
+        return []
+    n_max = max((c.shape[0] for c in mats), default=0)
+    m_max = max((c.shape[1] for c in mats), default=0)
+    side = max(n_max, m_max)
+    if side == 0 or all(c.shape[0] == 0 or c.shape[1] == 0 for c in mats):
+        return [[] for _ in mats]
+    from repro.kernels.assign import assign_batch   # lazy: jax + cycle
+
+    batch = np.full((len(mats), side, side), FORBIDDEN_DEVICE, np.float32)
+    for k, c in enumerate(mats):
+        n, m = c.shape
+        batch[k, :n, :m] = np.minimum(c, FORBIDDEN_DEVICE)
+    cols = np.asarray(assign_batch(batch))
+    out: List[List[Tuple[int, int]]] = []
+    for k, c in enumerate(mats):
+        n, m = c.shape
+        out.append([(r, int(cols[k, r])) for r in range(n)
+                    if cols[k, r] < m and c[r, cols[k, r]] < BIG / 2])
+    return out
 
 
 def hungarian_on_device(cost):
-    """On-device bridge: col index per row (-1 = unmatched) via
-    pure_callback into the numpy solver (association matrices are tiny)."""
-    import jax
+    """On-device assignment: col index per row (-1 = unmatched), computed
+    entirely on device by the batched Pallas solver — no host callback.
+    cost: (n, m) array with BIG-style forbidden entries."""
     import jax.numpy as jnp
+    from repro.kernels.assign import assign_batch   # lazy: jax + cycle
 
-    n = cost.shape[0]
-
-    def _cb(c):
-        pairs = hungarian(np.asarray(c))
-        out = np.full((n,), -1, np.int32)
-        for r, cc in pairs:
-            out[r] = cc
-        return out
-
-    return jax.pure_callback(_cb, jax.ShapeDtypeStruct((n,), jnp.int32),
-                             cost)
+    n, m = cost.shape
+    side = max(n, m)
+    c = jnp.minimum(cost.astype(jnp.float32), FORBIDDEN_DEVICE)
+    c = jnp.pad(c, ((0, side - n), (0, side - m)),
+                constant_values=FORBIDDEN_DEVICE)
+    cols = assign_batch(c[None])[0][:n]
+    orig = jnp.pad(cost.astype(jnp.float32), ((0, 0), (0, side - m)),
+                   constant_values=np.float32(BIG))[:n]
+    got = jnp.take_along_axis(orig, cols[:, None], axis=1)[:, 0]
+    return jnp.where((cols < m) & (got < BIG / 2), cols, -1)

@@ -17,7 +17,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.detector import iou_matrix
-from repro.core.hungarian import hungarian, BIG
+from repro.core.hungarian import hungarian, hungarian_batch, BIG
 from repro.data.video_synth import Clip, Profile, _interp
 
 
@@ -71,8 +71,17 @@ def clip_count_accuracy(tracks: Sequence[np.ndarray], clip: Clip
 
 def mota(tracks: Sequence[np.ndarray], clip: Clip,
          frames: Optional[Sequence[int]] = None,
-         iou_thresh: float = 0.3) -> float:
-    """Multi-Object Tracking Accuracy against the clip's exact GT."""
+         iou_thresh: float = 0.3, assign: str = "host") -> float:
+    """Multi-Object Tracking Accuracy against the clip's exact GT.
+
+    ``assign="batch"`` solves EVERY frame's IoU association in one
+    batched device dispatch (``hungarian_batch`` over the Pallas assign
+    kernel) instead of one host Hungarian per frame — the per-frame
+    cost matrices here are mutually independent, unlike the recurrent
+    tracker's.  Min-cost totals match the host solver exactly;
+    equal-cost tie-breaks may pick different pairs, which can shift
+    IDSW on pathological ties, so "host" stays the default."""
+    assert assign in ("host", "batch")
     if frames is None:
         frames = range(clip.n_frames)
     # index predictions: frame -> (boxes, ids)
@@ -81,19 +90,37 @@ def mota(tracks: Sequence[np.ndarray], clip: Clip,
         for row in t:
             pred_by_frame.setdefault(int(row[0]), []).append(
                 (row[1:5], int(row[5])))
-    fn = fp = idsw = gt_total = 0
-    last_match: Dict[int, int] = {}      # gt id -> pred id
+    # first pass: per-frame GT + cost matrices (independent across
+    # frames — the batchable part)
+    work: List[Tuple[int, np.ndarray, List[Tuple[np.ndarray, int]],
+                     Optional[np.ndarray]]] = []
     for f in frames:
         gt = clip.boxes_at(f)
         preds = pred_by_frame.get(f, [])
+        if len(gt) == 0 and len(preds) == 0:
+            continue
+        cost = None
+        if len(gt) > 0 and len(preds) > 0:
+            pb = np.stack([p[0] for p in preds])
+            iou = iou_matrix(gt[:, :4], pb)
+            cost = np.where(iou >= iou_thresh, 1.0 - iou, BIG)
+        work.append((f, gt, preds, cost))
+    if assign == "batch":
+        costs = [c for _, _, _, c in work if c is not None]
+        solved = iter(hungarian_batch(costs))
+        pairs_for = [next(solved) if c is not None else []
+                     for _, _, _, c in work]
+    else:
+        pairs_for = [hungarian(c) if c is not None else []
+                     for _, _, _, c in work]
+    # second pass: sequential identity bookkeeping
+    fn = fp = idsw = gt_total = 0
+    last_match: Dict[int, int] = {}      # gt id -> pred id
+    for (f, gt, preds, cost), pairs in zip(work, pairs_for):
         gt_total += len(gt)
         if len(preds) == 0:
             fn += len(gt)
             continue
-        pb = np.stack([p[0] for p in preds])
-        iou = iou_matrix(gt[:, :4], pb)
-        cost = np.where(iou >= iou_thresh, 1.0 - iou, BIG)
-        pairs = hungarian(cost)
         matched_gt = set()
         matched_pred = set()
         for gi, pi in pairs:

@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.core.detector import _apply_conv, _conv, pad_to_bucket
 from repro.kernels.proxy_score import proxy_score
+from repro.kernels.proxy_plan import proxy_plan
 from repro.models.common import ParamBuilder, build
 
 
@@ -196,3 +197,23 @@ class ProxyModel:
         s, p = proxy_scores(self.params, jnp.asarray(
             pad_to_bucket(frames)), self.cell, threshold)
         return np.asarray(s[:n]), np.asarray(p[:n])
+
+    def plan_batch(self, frames: np.ndarray, threshold: float,
+                   det_grid: Tuple[int, int]
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+        """Fused score + threshold + detector-grid mapping for a CHUNK
+        (``repro.kernels.proxy_plan``): only the mapped (B, hc, wc) int8
+        grids and (B, 8) int32 plan stats cross back to the host, not
+        the full score map.  ``det_grid`` is (wc, hc), matching
+        ``pipeline.det_grid``.  Batch padding as ``scores_batch``."""
+        wc, hc = det_grid
+        n = int(frames.shape[0])
+        if n == 0:
+            return (np.zeros((0, hc, wc), np.int8),
+                    np.zeros((0, 8), np.int32))
+        feat = proxy_features(self.params, jnp.asarray(
+            pad_to_bucket(frames)), self.cell)
+        grids, stats = proxy_plan(feat, self.params["head"]["w"],
+                                  self.params["head"]["b"][0], threshold,
+                                  grid_hw=(hc, wc))
+        return np.asarray(grids[:n]), np.asarray(stats[:n])

@@ -405,16 +405,33 @@ class RecurrentTracker:
     their tracks are bit-identical."""
 
     def __init__(self, cfg: TrackerConfig, params, max_misses: int = 2,
-                 min_hits: int = 2):
+                 min_hits: int = 2, assign: str = "host"):
+        assert assign in ("host", "device")
         self.cfg = cfg
         self.params = params
         self.np_params = _host_params(params)
         self.max_misses = max_misses
         self.min_hits = min_hits
+        self.assign = assign
         self.active: List[_ActiveTrack] = []
         self.finished: List[_ActiveTrack] = []
         self._next_id = 0
         self._last_frame: Optional[int] = None
+
+    def _assign(self, cost: np.ndarray) -> List[tuple]:
+        """Per-step association.  ``assign="device"`` routes through the
+        batched Pallas solver (``repro.kernels.assign``) — a batch of
+        one here, since the GRU recurrence makes each frame's cost
+        matrix depend on the previous frame's assignment, so the
+        tracker can never batch assignment ACROSS a chunk's frames (the
+        genuinely batchable per-frame matrices live in ``metrics.mota``).
+        Min-cost totals always agree with the host path; equal-cost
+        tie-breaking may not, so "host" stays the default (the tuner /
+        test bit-identity anchor)."""
+        if self.assign == "device":
+            from repro.core.hungarian import hungarian_batch
+            return hungarian_batch([cost])[0]
+        return hungarian(cost)
 
     # -- host-side heads (numpy twins of embed_dets / gru_step /
     #    match_logits, minus the crop CNN) --------------------------------
@@ -497,7 +514,7 @@ class RecurrentTracker:
             probs = 1.0 / (1.0 + np.exp(-logits))
             cost = np.where(probs >= cfg.match_threshold, 1.0 - probs,
                             BIG)
-            pairs = hungarian(cost)
+            pairs = self._assign(cost)
 
         matched_t, matched_d = set(), set()
         upd_feats, upd_tracks = [], []

@@ -191,11 +191,67 @@ def plan_chunk(grids: Sequence[np.ndarray], sizeset: SizeSet,
         raise ValueError(f"planning {len(grids)} frames into a chunk "
                          f"of {chunk_size}")
     per_frame = [group_cells(g, sizeset, max_windows) for g in grids]
+    return ChunkPlan(per_frame, _group_by_size(per_frame))
+
+
+def _group_by_size(per_frame: List[List[Window]]
+                   ) -> Dict[Size, List[Tuple[int, int, int, int]]]:
     by_size: Dict[Size, List[Tuple[int, int, int, int]]] = {}
     for slot, wins in enumerate(per_frame):
         for wi, (x, y, s) in enumerate(wins):
             by_size.setdefault(s, []).append((slot, x, y, wi))
-    return ChunkPlan(per_frame, by_size)
+    return by_size
+
+
+def _single_rect_windows(grid_shape: Tuple[int, int], x: int, y: int,
+                         w: int, h: int, sizeset: SizeSet) -> List[Window]:
+    """``group_cells`` specialized to one filled-rectangle component:
+    the merging loop is a no-op at one cluster, so only the placement +
+    cost-sanity tail remains."""
+    hc, wc = grid_shape
+    full = sizeset.full
+    s = sizeset.smallest_covering(w, h)
+    if s is None:
+        return [(0, 0, full)]
+    wx = min(x, wc - s[0])
+    wy = min(y, hc - s[1])
+    windows: List[Window] = [(max(wx, 0), max(wy, 0), s)]
+    if sizeset.est(windows) >= sizeset.times[full]:
+        return [(0, 0, full)]
+    return windows
+
+
+def plan_from_mapped(grids: Sequence[np.ndarray],
+                     stats: Sequence[np.ndarray], sizeset: SizeSet,
+                     max_windows: int = 8,
+                     chunk_size: Optional[int] = None) -> ChunkPlan:
+    """Plan a chunk from the fused kernel's outputs: already-mapped
+    detector grids plus per-frame stats rows [count, ymin, ymax, xmin,
+    xmax, ...] (``repro.kernels.proxy_plan``).
+
+    Bit-identical to ``plan_chunk`` over host-mapped grids.  The stats
+    enable two exact shortcuts — an empty frame skips grouping outright,
+    and count == bbox area forces a single filled-rectangle component
+    (every bbox cell positive => one 4-connected cluster), where
+    ``group_cells`` provably reduces to ``_single_rect_windows``.  Any
+    other support falls back to ``group_cells`` on the mapped grid."""
+    if chunk_size is not None and len(grids) > chunk_size:
+        raise ValueError(f"planning {len(grids)} frames into a chunk "
+                         f"of {chunk_size}")
+    per_frame: List[List[Window]] = []
+    for grid, st in zip(grids, stats):
+        count, ymin, ymax, xmin, xmax = (int(v) for v in st[:5])
+        if count == 0:
+            per_frame.append([])
+            continue
+        w, h = xmax - xmin + 1, ymax - ymin + 1
+        if count == w * h:
+            per_frame.append(_single_rect_windows(
+                grid.shape, xmin, ymin, w, h, sizeset))
+        else:
+            per_frame.append(group_cells(np.asarray(grid), sizeset,
+                                         max_windows))
+    return ChunkPlan(per_frame, _group_by_size(per_frame))
 
 
 def full_frame_plan(n_frames: int, sizeset: SizeSet) -> ChunkPlan:

@@ -21,6 +21,14 @@ Kernels:
                   from a frame via a scalar-prefetched window table;
                   window_gather_batch gathers one size class across a
                   CHUNK of frames (the chunked engine's hot path).
+  proxy_plan — fused proxy head + threshold + detector-grid mapping:
+               emits the mapped positive-cell grid and per-frame plan
+               stats (count + bbox) on-device, so only plan-sized
+               tensors cross back to the host instead of score maps.
+  assign — batched Hungarian assignment (Jonker-Volgenant shortest
+           augmenting path), one (N, N) cost matrix per grid row;
+           mirrors ``core.hungarian._hungarian_np`` including
+           first-index tie-breaking.
 """
 from __future__ import annotations
 

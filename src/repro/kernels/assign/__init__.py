@@ -1,0 +1,1 @@
+from repro.kernels.assign.ops import assign_batch  # noqa: F401

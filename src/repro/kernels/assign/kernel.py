@@ -1,0 +1,108 @@
+"""Batched min-cost assignment (Jonker-Volgenant) as a Pallas kernel.
+
+One grid cell per cost matrix: the whole (N, N) matrix lives in VMEM and
+the augmenting-path search runs as ``lax.while_loop``s over (N+1,)-vectors
+— association matrices are tiny (N <= max_tracks = 64), so a matrix is a
+single block and the batch axis is embarrassingly parallel.
+
+The solver mirrors ``repro.core.hungarian._hungarian_np`` (potentials +
+augmenting paths, first-index argmin tie-break) but runs in float32 and
+returns the FULL permutation; forbidden-pair filtering happens on the
+wrapper side.  Callers must clamp sentinel costs to a finite value small
+enough that f32 potential updates keep real cost differences resolvable
+(see ``hungarian.hungarian_batch``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams; accept both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
+
+def solve_one(cost):
+    """cost: (N, N) finite f32 -> (N,) int32 matched column per row.
+
+    Jonker-Volgenant with 1-indexed potential vectors, exactly the
+    update order of ``_hungarian_np`` (so equal-cost tie-breaking
+    matches the numpy path when the arithmetic is exact)."""
+    N = cost.shape[0]
+    a = jnp.pad(cost.astype(jnp.float32), ((1, 0), (1, 0)))  # row/col 0 dummy
+    rows1 = jnp.arange(N + 1, dtype=jnp.int32)
+
+    def outer(i, carry):
+        u, v, p = carry
+        p = p.at[0].set(i)
+
+        def scan_cond(c):
+            j0, _u, _v, _way, _minv, _used = c
+            return p[j0] != 0
+
+        def scan_body(c):
+            j0, u, v, way, minv, used = c
+            used = used.at[j0].set(True)
+            i0 = p[j0]
+            cur = a[i0] - u[i0] - v                      # (N+1,)
+            free = ~used
+            take = free & (cur < minv)
+            minv = jnp.where(take, cur, minv)
+            way = jnp.where(take, j0, way)
+            masked = jnp.where(free, minv, jnp.inf)
+            j1 = jnp.argmin(masked).astype(jnp.int32)    # first index on ties
+            delta = masked[j1]
+            # u[p[j]] += delta over used columns j (matched rows are
+            # distinct, so the O(N^2) membership mask is a safe scatter)
+            row_hit = ((p[None, :] == rows1[:, None]) & used[None, :]).any(1)
+            u = jnp.where(row_hit, u + delta, u)
+            v = jnp.where(used, v - delta, v)
+            minv = jnp.where(free, minv - delta, minv)
+            return j1, u, v, way, minv, used
+
+        j0, u, v, way, _, _ = jax.lax.while_loop(
+            scan_cond, scan_body,
+            (jnp.int32(0), u, v, jnp.zeros(N + 1, jnp.int32),
+             jnp.full(N + 1, jnp.inf, jnp.float32),
+             jnp.zeros(N + 1, bool)))
+
+        def aug_body(c):
+            j0, p = c
+            j1 = way[j0]
+            return j1, p.at[j0].set(p[j1])
+
+        _, p = jax.lax.while_loop(lambda c: c[0] != 0, aug_body, (j0, p))
+        return u, v, p
+
+    u0 = jnp.zeros(N + 1, jnp.float32)
+    p0 = jnp.zeros(N + 1, jnp.int32)
+    _, _, p = jax.lax.fori_loop(1, N + 1, outer, (u0, u0, p0))
+    # invert: p[j] = row matched to col j (1-indexed) -> col per row
+    return jnp.zeros(N, jnp.int32).at[p[1:] - 1].set(
+        jnp.arange(N, dtype=jnp.int32))
+
+
+def _assign_kernel(cost_ref, out_ref):
+    out_ref[...] = solve_one(cost_ref[...][0])[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def assign_pallas(costs, *, interpret: bool = False):
+    """costs: (K, N, N) finite f32 -> (K, N) int32 column per row."""
+    K, N, M = costs.shape
+    assert N == M, "assign kernel operates on square (padded) matrices"
+    return pl.pallas_call(
+        _assign_kernel,
+        grid=(K,),
+        in_specs=[pl.BlockSpec((1, N, N), lambda k: (k, 0, 0))],
+        out_specs=pl.BlockSpec((1, N), lambda k: (k, 0)),
+        out_shape=jax.ShapeDtypeStruct((K, N), jnp.int32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=(pltpu.PARALLEL,)),
+        interpret=interpret,
+        name="assign",
+    )(costs.astype(jnp.float32))

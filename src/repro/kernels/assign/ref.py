@@ -1,0 +1,27 @@
+"""Differential reference for the batched assignment kernel: each square
+cost matrix solved independently by the host Jonker-Volgenant solver
+(``repro.core.hungarian._hungarian_np``), float64.
+
+The kernel contract is a FULL permutation over finite costs — forbidden
+entries must be clamped to a large-but-finite sentinel well below
+``hungarian.BIG`` before calling, so the host solver reports every pair.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.hungarian import _hungarian_np
+
+
+def assign_ref(costs) -> np.ndarray:
+    """costs: (K, N, N) finite, all entries < hungarian.BIG/2.
+
+    Returns (K, N) int32: matched column per row (a permutation)."""
+    costs = np.asarray(costs, np.float64)
+    K, N, M = costs.shape
+    assert N == M, "assign kernel operates on square (padded) matrices"
+    out = np.full((K, N), -1, np.int32)
+    for k in range(K):
+        for r, c in _hungarian_np(costs[k]):
+            out[k, r] = c
+    return out

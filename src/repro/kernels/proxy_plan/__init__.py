@@ -1,0 +1,1 @@
+from repro.kernels.proxy_plan.ops import proxy_plan, span_matrix  # noqa: F401

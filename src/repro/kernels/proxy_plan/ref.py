@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the fused proxy-plan kernel.
+
+Head (1x1 conv + sigmoid + threshold) exactly as ``proxy_score_ref``,
+then the proxy->detector grid mapping of ``pipeline.map_proxy_grid``
+expressed as two 0/1 span-matrix contractions: span-any == span-count > 0
+and counts are small integers, exact in f32, so the mapped grid is
+bit-identical to the host integral-image path.  Per-frame plan stats
+(positive count + bounding box on the mapped grid) ride along so the host
+planner can take its fast paths without re-reducing the grid.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+STATS_W = 8     # [count, ymin, ymax, xmin, xmax, 0, 0, 0]
+
+
+def proxy_plan_ref(feat, w, b, threshold, span_y, span_x):
+    """feat: (B, hp, wp, C); w: (C,); b, threshold: scalars;
+    span_y: (hc, hp) f32 0/1; span_x: (wc, wp) f32 0/1.
+
+    Returns (mapped (B, hc, wc) int8 detector grid,
+             stats (B, STATS_W) int32)."""
+    logits = jnp.einsum("bhwc,c->bhw", feat.astype(jnp.float32),
+                        w.astype(jnp.float32)) + b
+    pos = (jax.nn.sigmoid(logits) > threshold).astype(jnp.float32)
+    cnt = jnp.einsum("yh,bhw->byw", span_y, pos)
+    cnt = jnp.einsum("byw,xw->byx", cnt, span_x)
+    mapped = cnt > 0.5
+    hc, wc = span_y.shape[0], span_x.shape[0]
+    yi = jnp.arange(hc, dtype=jnp.int32)
+    xi = jnp.arange(wc, dtype=jnp.int32)
+    rows_any = mapped.any(axis=2)
+    cols_any = mapped.any(axis=1)
+    count = mapped.sum(axis=(1, 2)).astype(jnp.int32)
+    ymin = jnp.min(jnp.where(rows_any, yi, hc), axis=1)
+    ymax = jnp.max(jnp.where(rows_any, yi, -1), axis=1)
+    xmin = jnp.min(jnp.where(cols_any, xi, wc), axis=1)
+    xmax = jnp.max(jnp.where(cols_any, xi, -1), axis=1)
+    zero = jnp.zeros_like(count)
+    stats = jnp.stack([count, ymin, ymax, xmin, xmax, zero, zero, zero],
+                      axis=1).astype(jnp.int32)
+    return mapped.astype(jnp.int8), stats

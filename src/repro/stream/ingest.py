@@ -10,7 +10,13 @@ The live-ingestion pipeline, per appended segment:
      (``ClipExecutor.start(frame_ids=..., tracker=...)``), with the
      open clip's resumed tracker — DECODE prefetch, chunked PROXY /
      DETECT and the per-chunk crop-embedding batching all apply
-     unchanged, and appends can share one ``DecodePool``;
+     unchanged, and appends can share one ``DecodePool``.  A FLEET of
+     cameras (one ingestor per feed, each appending from its own
+     thread) passes one shared ``executor.BatchBroker`` through
+     ``ExecutorOptions.batch_broker`` so every feed's per-segment
+     windows — typically 1-2 per size class — coalesce into
+     consolidated detector dispatches; per-feed tracks stay
+     bit-identical (the broker invariant), only the batching changes;
   3. the tracker's visible tracks are packed at the new watermark and
      the clip's secondary index is INCREMENTALLY merged
      (``StreamIndexState``) — no full rebuild;

@@ -1,0 +1,252 @@
+"""Cross-stream BatchBroker: per-stream tracks must be BIT-identical
+with the broker on vs off for every stream count / chunk size, detector
+dispatches must consolidate, and the edge cases (zero-window flush,
+single-window buckets, a stream failing mid-flight, drain-on-close) must
+neither deadlock nor leak into other streams."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.configs.multiscope import MULTISCOPE_PIPELINE
+from repro.core import pipeline as pl
+from repro.core.executor import (BatchBroker, BrokerCancelled,
+                                 ExecutorOptions, run_clip_streamed)
+from repro.core.proxy import ProxyModel
+from repro.core.tracker import init_tracker
+from repro.core.train_models import train_detector
+from repro.data.video_synth import make_split
+
+
+@pytest.fixture(scope="module")
+def exec_bank():
+    cfg = MULTISCOPE_PIPELINE.reduced()
+    clips = make_split("caldot1", "train", 2, n_frames=24)
+    det, _ = train_detector("ssd-lite", clips,
+                            [cfg.detector.resolutions[-1]], steps=60)
+    bank = pl.ModelBank(cfg, {"ssd-lite": det, "ssd-deep": det})
+    res = cfg.proxy.resolutions[-1]
+    proxy = ProxyModel(cfg.proxy.cell, cfg.proxy.base_channels, res)
+    bank.proxies = {res: proxy}
+    bank.sizes_cells = [pl.det_grid(cfg.detector.resolutions[-1]),
+                        (3, 2), (5, 3)]
+    bank.ref_grid = pl.det_grid(cfg.detector.resolutions[-1])
+    bank.tracker_params = init_tracker(cfg.tracker)
+    W, H = cfg.detector.resolutions[-1]
+    frame, _ = pl.render_frame(clips[0], 0, W, H)
+    s, _ = proxy.scores(pl._downsample(frame, res))
+    return bank, clips, res, float(np.quantile(s, 0.85))
+
+
+def _params(bank, res, th, **kw):
+    base = dict(det_arch="ssd-lite",
+                det_res=bank.cfg.detector.resolutions[-1],
+                det_conf=0.4, gap=1, proxy_res=res, proxy_threshold=th,
+                tracker="sort", refine=False)
+    base.update(kw)
+    return pl.PipelineParams(**base)
+
+
+def _run_streams(bank, params, clips, n_streams, broker):
+    """Run n_streams concurrent clip executions (clips round-robin),
+    each on its own thread, sharing ``broker`` (or none)."""
+    results = [None] * n_streams
+    errors = []
+
+    def one(i):
+        try:
+            opts = ExecutorOptions(prefetch=False, batch_broker=broker)
+            results[i] = run_clip_streamed(
+                bank, params, clips[i % len(clips)], opts)
+        except BaseException as exc:     # surfaced by the main thread
+            errors.append(exc)
+
+    threads = [threading.Thread(target=one, args=(i,))
+               for i in range(n_streams)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    return results
+
+
+def _assert_same(a, b):
+    assert a.frames_processed == b.frames_processed
+    assert a.detector_windows == b.detector_windows
+    assert a.full_frames == b.full_frames
+    assert a.skipped_frames == b.skipped_frames
+    assert len(a.tracks) == len(b.tracks)
+    for x, y in zip(a.tracks, b.tracks):
+        np.testing.assert_array_equal(x, y)
+
+
+@pytest.mark.parametrize("n_streams,chunk", [
+    (1, 1), (1, 16), (4, 1), (4, 16), (16, 1), (16, 16),
+])
+def test_broker_bit_identity(exec_bank, n_streams, chunk):
+    """The tentpole invariant: every stream's tracks are bit-identical
+    to its solo broker-off run, for 1/4/16 concurrent streams and
+    per-frame (chunk=1, single-window buckets) and chunked plans."""
+    bank, clips, res, th = exec_bank
+    params = _params(bank, res, th, chunk_size=chunk)
+    ref = [run_clip_streamed(bank, params, c,
+                             ExecutorOptions(prefetch=False))
+           for c in clips]
+    broker = BatchBroker()
+    got = _run_streams(bank, params, clips, n_streams, broker)
+    broker.close()
+    for i, r in enumerate(got):
+        _assert_same(r, ref[i % len(clips)])
+    assert broker._registered == 0          # every handle released
+    assert all(0.0 < f <= 1.0 for f in broker.batch_fill)
+
+
+def test_broker_consolidates_dispatches(exec_bank):
+    """At 4 streams the consolidated detector call count must be
+    STRICTLY below the sum of the per-stream broker-off counts."""
+    bank, clips, res, th = exec_bank
+    params = _params(bank, res, th, chunk_size=16)
+    det = bank.detectors[params.det_arch]
+    det.dispatches = 0
+    for c in (clips * 2):
+        run_clip_streamed(bank, params, c, ExecutorOptions(prefetch=False))
+    solo = det.dispatches
+    broker = BatchBroker()
+    _run_streams(bank, params, clips, 4, broker)
+    broker.close()
+    assert broker.dispatches < solo
+    assert broker.windows_in > 0
+
+
+class _FakeDetector:
+    """detect_batch stub: one (1, 2) row per valid window encoding
+    (origin, scale) so routing back to the right request is checkable."""
+
+    def __init__(self):
+        self.calls = 0
+
+    def detect_batch(self, frames, conf, origins, scales, n_valid):
+        self.calls += 1
+        assert len(origins) == len(scales) == n_valid
+        return [np.array([[float(origins[i][0]), float(scales[i])]])
+                for i in range(n_valid)]
+
+
+def _win(n):
+    return np.zeros((n, 4, 4, 3), np.float32)
+
+
+def test_broker_zero_windows_is_a_noop():
+    """n_valid=0 returns [] without registering a pending request (a
+    skip-heavy stream never delays anyone's flush)."""
+    broker = BatchBroker()
+    h = broker.register()
+    det = _FakeDetector()
+    assert h.detect(det, _win(0), 0.4, [], [], n_valid=0) == []
+    assert broker.dispatches == 0 and not broker._pending
+    h.close()
+    broker.close()
+
+
+def test_broker_single_window_bucket():
+    """A lone 1-window request flushes (all-registered-pending trigger)
+    into a bucket of one, fill 1.0."""
+    broker = BatchBroker()
+    h = broker.register()
+    det = _FakeDetector()
+    out = h.detect(det, _win(1), 0.4, [(7, 0)], [2.0], n_valid=1)
+    assert len(out) == 1
+    np.testing.assert_array_equal(out[0], [[7.0, 2.0]])
+    assert broker.dispatches == 1 and broker.batch_fill == [1.0]
+    h.close()
+    broker.close()
+
+
+def test_broker_routes_multi_stream_batches():
+    """Two streams' same-shape requests consolidate into ONE detector
+    call and split back per stream in submit order."""
+    broker = BatchBroker(linger_ms=200.0)
+    ha, hb = broker.register(), broker.register()
+    det = _FakeDetector()
+    out = {}
+
+    def run(name, h, origins):
+        out[name] = h.detect(det, _win(len(origins)), 0.4, origins,
+                             [1.0] * len(origins), n_valid=len(origins))
+
+    ta = threading.Thread(target=run, args=("a", ha, [(1, 0), (2, 0)]))
+    tb = threading.Thread(target=run, args=("b", hb, [(3, 0)]))
+    ta.start(), tb.start()
+    ta.join(), tb.join()
+    assert det.calls == 1 and broker.dispatches == 1
+    assert [r[0][0] for r in out["a"]] == [1.0, 2.0]
+    assert [r[0][0] for r in out["b"]] == [3.0]
+    ha.close(), hb.close()
+    broker.close()
+
+
+def test_broker_stream_failure_mid_flight():
+    """Unregistering a stream with a request pending raises
+    BrokerCancelled on ITS thread only; the surviving stream's next
+    request is served normally."""
+    broker = BatchBroker(linger_ms=60000.0)     # no linger rescue
+    ha, hb = broker.register(), broker.register()
+    det = _FakeDetector()
+    caught = []
+    submitted = threading.Event()
+
+    def doomed():
+        with broker._cv:
+            submitted.set()
+        try:
+            ha.detect(det, _win(1), 0.4, [(9, 0)], [1.0], n_valid=1)
+        except BrokerCancelled as exc:
+            caught.append(exc)
+
+    t = threading.Thread(target=doomed)
+    t.start()
+    submitted.wait(10)
+    # wait until the request is actually pending, then drop the stream
+    for _ in range(1000):
+        with broker._cv:
+            if broker._pending:
+                break
+        threading.Event().wait(0.005)
+    ha.close()
+    t.join(10)
+    assert not t.is_alive() and len(caught) == 1
+    assert det.calls == 0                       # its windows were dropped
+    out = hb.detect(det, _win(1), 0.4, [(5, 0)], [1.0], n_valid=1)
+    np.testing.assert_array_equal(out[0], [[5.0, 1.0]])
+    hb.close()
+    broker.close()
+
+
+def test_broker_drain_on_close():
+    """close() flushes whatever is pending before refusing new work."""
+    broker = BatchBroker(linger_ms=60000.0)
+    ha, hb = broker.register(), broker.register()     # hb never submits
+    det = _FakeDetector()
+    out = []
+
+    def submit():
+        out.append(ha.detect(det, _win(1), 0.4, [(4, 0)], [1.0],
+                             n_valid=1))
+
+    t = threading.Thread(target=submit)
+    t.start()
+    for _ in range(1000):
+        with broker._cv:
+            if broker._pending:
+                break
+        threading.Event().wait(0.005)
+    broker.close()
+    t.join(10)
+    assert not t.is_alive()
+    np.testing.assert_array_equal(out[0][0], [[4.0, 1.0]])
+    assert broker.dispatches == 1
+    with pytest.raises(RuntimeError):
+        broker.register()
+    with pytest.raises(RuntimeError):
+        hb.detect(det, _win(1), 0.4, [(0, 0)], [1.0], n_valid=1)

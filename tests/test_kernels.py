@@ -201,3 +201,71 @@ def test_window_gather_batch(wh, ww):
     for k, (b, cy, cx) in enumerate(np.asarray(tbl)):
         crop = f[b, cy * 32:cy * 32 + wh, cx * 32:cx * 32 + ww]
         np.testing.assert_array_equal(np.asarray(pal)[k], crop)
+
+
+@pytest.mark.parametrize("B,hp,wp,C,hc,wc", [
+    (2, 20, 32, 16, 5, 8),     # clean downscale
+    (1, 18, 30, 32, 5, 8),     # ragged spans
+    (3, 6, 8, 16, 9, 11),      # upscale (hc > hp)
+    (2, 12, 12, 8, 12, 12),    # identity mapping
+])
+def test_proxy_plan(B, hp, wp, C, hc, wc):
+    """Fused plan kernel: Pallas interpret=True vs jnp ref vs the host
+    map_proxy_grid path — mapped grids must be BIT-identical (the plan
+    fast paths depend on it), stats must match a direct reduction."""
+    from repro.core.pipeline import map_proxy_grid
+    from repro.kernels.proxy_plan.kernel import proxy_plan_pallas
+    from repro.kernels.proxy_plan.ops import span_matrix
+    from repro.kernels.proxy_plan.ref import proxy_plan_ref
+    ks = jax.random.split(jax.random.PRNGKey(9), 2)
+    feat = jax.random.normal(ks[0], (B, hp, wp, C))
+    w = jax.random.normal(ks[1], (C,)) * 0.5
+    b, th = 0.1, 0.5
+    sy = jnp.asarray(span_matrix(hc, hp))
+    sx = jnp.asarray(span_matrix(wc, wp))
+    gr, sr = proxy_plan_ref(feat, w, b, th, sy, sx)
+    gp, sp = proxy_plan_pallas(feat, w, b, th, sy, sx, interpret=True)
+    np.testing.assert_array_equal(np.asarray(gp), np.asarray(gr))
+    np.testing.assert_array_equal(np.asarray(sp), np.asarray(sr))
+    # host oracle: threshold the scores on the host, map with the
+    # integral-image path, reduce with numpy
+    logits = np.einsum("bhwc,c->bhw", np.asarray(feat, np.float64),
+                       np.asarray(w, np.float64)) + b
+    pos = (1.0 / (1.0 + np.exp(-logits)) > th).astype(np.int8)
+    for k in range(B):
+        host = map_proxy_grid(pos[k], (wc, hc))
+        got = np.asarray(gr[k])
+        np.testing.assert_array_equal(got, host.astype(np.int8))
+        cnt = int(host.sum())
+        assert int(sr[k, 0]) == cnt
+        if cnt:
+            ys, xs = np.nonzero(host)
+            assert tuple(np.asarray(sr[k, 1:5])) == (
+                ys.min(), ys.max(), xs.min(), xs.max())
+        else:
+            assert tuple(np.asarray(sr[k, 1:5])) == (hc, -1, wc, -1)
+
+
+@pytest.mark.parametrize("K,N", [(1, 1), (3, 4), (2, 9), (4, 16)])
+def test_assign(K, N):
+    """Batched JV: Pallas interpret=True vs the vmapped-jnp fallback vs
+    the host _hungarian_np oracle.  Costs are quantized to multiples of
+    1/64 so f32 potential arithmetic is exact and even the first-index
+    tie-breaking must agree across all three."""
+    from repro.kernels.assign.kernel import assign_pallas
+    from repro.kernels.assign.ops import _solve_vmapped
+    from repro.kernels.assign.ref import assign_ref
+    rng = np.random.default_rng(10 * K + N)
+    costs = rng.integers(0, 256, (K, N, N)).astype(np.float32) / 64.0
+    ref = assign_ref(costs)
+    fb = np.asarray(_solve_vmapped(jnp.asarray(costs)))
+    pal = np.asarray(assign_pallas(jnp.asarray(costs), interpret=True))
+    np.testing.assert_array_equal(fb, ref)
+    np.testing.assert_array_equal(pal, ref)
+    # each row a permutation with minimal total (vs scipy when present)
+    scipy_opt = pytest.importorskip("scipy.optimize")
+    for k in range(K):
+        assert sorted(ref[k]) == list(range(N))
+        r, c = scipy_opt.linear_sum_assignment(costs[k])
+        np.testing.assert_allclose(
+            costs[k][np.arange(N), ref[k]].sum(), costs[k][r, c].sum())

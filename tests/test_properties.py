@@ -5,8 +5,9 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core.hungarian import hungarian, BIG
-from repro.core.windows import (SizeSet, detector_time_model, group_cells)
+from repro.core.hungarian import hungarian, hungarian_batch, BIG
+from repro.core.windows import (SizeSet, detector_time_model, group_cells,
+                                plan_chunk, plan_from_mapped)
 from repro.core.refine import resample_track
 from repro.core.metrics import count_accuracy
 from repro.launch.hlo_stats import _parse_shape
@@ -39,6 +40,48 @@ def test_hungarian_permutation_invariance(n, seed):
     assert abs(t1 - t2) < 1e-9
 
 
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 7), st.integers(1, 7), st.integers(0, 10 ** 6))
+def test_hungarian_rect_all_solvers_agree(n, m, seed):
+    """Random RECTANGULAR costs: scipy dispatch, the numpy JV reference
+    and the batched device kernel must return valid matchings with the
+    same minimal total; the host solvers' pair lists must already be
+    row-sorted (the transpose path emits them ordered, no re-sort)."""
+    rng = np.random.default_rng(seed)
+    # multiples of 1/64 in [0, 4): exact in f32, so the kernel's totals
+    # (and tie-breaks vs the f64 reference) are exact too
+    cost = rng.integers(0, 256, (n, m)).astype(np.float64) / 64.0
+    from repro.core.hungarian import _hungarian_np
+    got = {"dispatch": hungarian(cost), "np": _hungarian_np(cost),
+           "batch": hungarian_batch([cost])[0]}
+    totals = {}
+    for name, pairs in got.items():
+        assert len(pairs) == min(n, m), name
+        assert len({r for r, _ in pairs}) == len(pairs), name
+        assert len({c for _, c in pairs}) == len(pairs), name
+        assert pairs == sorted(pairs), name       # row-ordered output
+        totals[name] = sum(cost[r, c] for r, c in pairs)
+    assert abs(totals["np"] - totals["dispatch"]) < 1e-9
+    assert abs(totals["batch"] - totals["dispatch"]) < 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 4), st.integers(2, 7), st.integers(0, 10 ** 6))
+def test_hungarian_batch_matches_per_matrix(k, n, seed):
+    """One batched dispatch == k independent hungarian() calls (validity
+    + totals), mixed square/rect matrices in the same batch."""
+    rng = np.random.default_rng(seed)
+    costs = [rng.integers(0, 256, (n, max(1, n + d))).astype(np.float64)
+             / 64.0 for d in range(-1, k - 1)]
+    batched = hungarian_batch(costs)
+    for c, pairs in zip(costs, batched):
+        single = hungarian(c)
+        assert len(pairs) == len(single)
+        t_b = sum(c[r, j] for r, j in pairs)
+        t_s = sum(c[r, j] for r, j in single)
+        assert abs(t_b - t_s) < 1e-9
+
+
 # ---------------------------------------------------------------------------
 # Window grouping invariants
 # ---------------------------------------------------------------------------
@@ -67,6 +110,41 @@ def test_windows_cover_and_bounded(seed, density):
         assert ss.est(windows) <= ss.times[(12, 8)] + 1e-12
     else:
         assert windows == []
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10 ** 6), st.floats(0.0, 0.6), st.integers(1, 6))
+def test_plan_from_mapped_matches_plan_chunk(seed, density, n_frames):
+    """The fused-kernel planning entry (mapped grids + stats rows) must
+    be bit-identical to the legacy per-frame ``plan_chunk`` path,
+    including the empty-frame and filled-rectangle stat shortcuts."""
+    rng = np.random.default_rng(seed)
+    grids = []
+    for f in range(n_frames):
+        if f % 3 == 1:          # force filled-rect frames into the mix
+            g = np.zeros((8, 12), np.int8)
+            y, x = rng.integers(0, 6), rng.integers(0, 9)
+            g[y:y + rng.integers(1, 3), x:x + rng.integers(1, 4)] = 1
+        else:
+            g = (rng.random((8, 12)) < density).astype(np.int8)
+        grids.append(g)
+    stats = []
+    for g in grids:
+        ys, xs = np.nonzero(g)
+        if len(ys) == 0:
+            stats.append(np.array([0, 8, -1, 12, -1, 0, 0, 0], np.int32))
+        else:
+            stats.append(np.array([len(ys), ys.min(), ys.max(),
+                                   xs.min(), xs.max(), 0, 0, 0],
+                                  np.int32))
+    tm = detector_time_model((12, 8), 1.0)
+    sizes = [(12, 8), (4, 4), (6, 4)]
+    ss = SizeSet(sizes, {s: tm(s) for s in sizes})
+    ref = plan_chunk(grids, ss, max_windows=6)
+    got = plan_from_mapped(grids, stats, ss, max_windows=6,
+                           chunk_size=n_frames)
+    assert got.windows == ref.windows
+    assert got.by_size == ref.by_size
 
 
 # ---------------------------------------------------------------------------
