@@ -9,10 +9,10 @@ TPU v5e expectation (bytes / 819 GB/s vs FLOPs / 197 TFLOP/s).
     PYTHONPATH=src python -m benchmarks.kernels [--smoke]
 
 ``--smoke`` is the CI correctness gate: it skips the timing sweep and
-instead asserts the ``proxy_plan`` and ``assign`` Pallas kernels
-(interpret mode) agree bit-for-bit with their jnp references on random
-inputs — the same interpret-vs-ref contract the kernel tests enforce,
-runnable without pytest.
+instead asserts the ``proxy_plan``, ``assign`` and ``track_step``
+Pallas kernels (interpret mode) agree bit-for-bit with their jnp
+references on random inputs — the same interpret-vs-ref contract the
+kernel tests enforce, runnable without pytest.
 """
 from __future__ import annotations
 
@@ -112,12 +112,61 @@ def run() -> List[Dict]:
     rows.append({"name": f"assign_batch K{K} N{N}",
                  "us_per_call": us,
                  "tpu_est_us": K * N * N * N * 4 / BW * 1e6})
+
+    from repro.kernels.track_step import (pack_params, track_step)
+    from repro.kernels.track_step.ops import LOG1P_TABLE_2D
+    K, Q, H, e, M = 8, 32, 32, 16, 32
+    arrs, thr, np_params = _track_operands(
+        np.random.default_rng(0), K, Q, H, e, M)
+    packed = pack_params(np_params)
+    jarrs = [jnp.asarray(a) for a in arrs]
+    jthr = jnp.asarray(thr)
+    us = _time(lambda: track_step(*jarrs, jthr, packed, LOG1P_TABLE_2D))
+    # matmuls (GRU + match head) on the MXU, JV slack scans on the VPU
+    flops = K * (6 * Q * (e + H) * H
+                 + 2 * Q * Q * ((H + e + 6) * M + M))
+    rows.append({"name": f"track_step K{K} Q{Q} H{H} e{e}",
+                 "us_per_call": us,
+                 "tpu_est_us": (flops / PEAK
+                                + K * Q * Q * Q * 4 / BW) * 1e6})
     return rows
+
+
+def _track_operands(rng, K, Q, H, e, M):
+    """Random track-step operands honoring the slot contract (live
+    tracks / valid detections as prefixes, integer te gaps)."""
+    def g(*s):
+        return rng.standard_normal(s).astype(np.float32)
+
+    params = {
+        "det_proj/w": g(e + 6, e) * 0.5, "det_proj/b": g(e) * 0.1,
+        "gru/wz": g(e + H, H) * 0.5, "gru/wr": g(e + H, H) * 0.5,
+        "gru/wh": g(e + H, H) * 0.5,
+        "gru/bz": g(H) * 0.1, "gru/br": g(H) * 0.1, "gru/bh": g(H) * 0.1,
+        "match/w0": g(H + e + 6, M) * 0.5, "match/b0": g(M) * 0.1,
+        "match/w1": g(M, 1) * 0.5, "match/b1": g(1) * 0.1,
+    }
+    shapes = [(K, Q, H), (K, Q, 4), (K, Q), (K, Q), (K, Q),
+              (K, Q, e), (K, Q, 4), (K, Q)]
+    arrs = [np.zeros(s, np.float32) for s in shapes]
+    h_r, tbox_r, alive_r, te_gap_r, te_match, x, dbox, dvalid = arrs
+    for k in range(K):
+        T = int(rng.integers(0, Q + 1))
+        n = int(rng.integers(0, Q + 1))
+        h_r[k, :T] = g(T, H) * 0.5
+        tbox_r[k, :T] = rng.random((T, 4), np.float32)
+        alive_r[k, :T] = 1.0
+        te_gap_r[k, :T] = rng.integers(1, 9, T)
+        te_match[k] = float(rng.integers(0, 9))
+        x[k, :n] = g(n, e) * 0.5
+        dbox[k, :n] = rng.random((n, 4), np.float32)
+        dvalid[k, :n] = 1.0
+    return arrs, np.full((1, 1), 0.35, np.float32), params
 
 
 def smoke() -> None:
     """CI gate: interpret-mode Pallas output must equal the jnp
-    reference bit-for-bit for the two fused pipeline kernels."""
+    reference bit-for-bit for the fused pipeline kernels."""
     from repro.kernels.assign.kernel import assign_pallas
     from repro.kernels.assign.ref import assign_ref
     from repro.kernels.proxy_plan.kernel import proxy_plan_pallas
@@ -144,7 +193,21 @@ def smoke() -> None:
         np.testing.assert_array_equal(got, assign_ref(costs))
         for k in range(K):
             assert sorted(got[k]) == list(range(N))   # permutation
-    print("kernels smoke OK: proxy_plan + assign interpret == ref")
+
+    from repro.kernels.track_step import pack_params, track_step_ref
+    from repro.kernels.track_step.kernel import track_step_pallas
+    from repro.kernels.track_step.ops import LOG1P_TABLE_2D
+    for K, Q, H, e, M in [(2, 8, 16, 8, 16), (3, 16, 24, 16, 24)]:
+        arrs, thr, np_params = _track_operands(rng, K, Q, H, e, M)
+        packed = pack_params(np_params)
+        ref = track_step_ref(*arrs, thr, packed, LOG1P_TABLE_2D)
+        pal = track_step_pallas(*[jnp.asarray(a) for a in arrs],
+                                jnp.asarray(thr), packed,
+                                LOG1P_TABLE_2D, interpret=True)
+        for r, p in zip(ref, pal):
+            np.testing.assert_array_equal(np.asarray(p), r)
+    print("kernels smoke OK: proxy_plan + assign + track_step "
+          "interpret == ref")
 
 
 def main(argv=None) -> None:

@@ -22,7 +22,15 @@ threads, one clip run each, per-frame ``chunk_size=1`` — the live
 multi-camera regime) with and without a shared ``BatchBroker``,
 recording wall fps, consolidated ``detector_dispatches`` and
 ``batch_fill_mean`` — and asserting both bit-identical tracks and
-strictly fewer dispatches at >= 4 streams.
+strictly fewer dispatches at >= 4 streams.  Each stream count also
+runs with the device-resident TRACK path on (``device_assign`` through
+the fused ``track_step`` kernel, steps coalesced by a shared
+``TrackBroker``), recording ``fps_device_track`` /
+``track_dispatches`` / ``track_fill_mean`` against the host-tracker
+rows.  A chunked-regime phase compares the host tracker against
+``DeviceTracker`` (one ``lax.scan`` dispatch per chunk), asserts
+bit-identity (also the ``--smoke`` gate), and aggregates the per-stage
+``stage_seconds`` utilization block from ``RunResult``.
 
 The proxy threshold comes from the paper's threshold sweep over cached
 validation score grids (``proxy.calibrate_threshold``) on a briefly
@@ -135,19 +143,21 @@ def stream_scaling(bank, params, clips, stream_counts=(1, 4, 16),
     import threading
 
     from repro.core.executor import (BatchBroker, ExecutorOptions,
-                                     run_clip_streamed)
+                                     TrackBroker, run_clip_streamed)
 
     params = dataclasses.replace(params, chunk_size=1)
     detector = bank.detectors[params.det_arch]
 
-    def fleet(n, broker):
+    def fleet(n, broker, track_broker=None, device=False):
         results = [None] * n
         errors = []
 
         def one(i):
             try:
                 opts = ExecutorOptions(prefetch=False,
-                                       batch_broker=broker)
+                                       batch_broker=broker,
+                                       device_assign=device,
+                                       track_broker=track_broker)
                 results[i] = run_clip_streamed(
                     bank, params, clips[i % len(clips)], opts)
             except BaseException as exc:
@@ -165,13 +175,24 @@ def stream_scaling(bank, params, clips, stream_counts=(1, 4, 16),
         frames = sum(r.frames_processed for r in results)
         return frames / wall, results
 
+    def same_tracks(solo, got, what):
+        for a, b in zip(solo, got):
+            assert len(a.tracks) == len(b.tracks) and all(
+                np.array_equal(x, y)
+                for x, y in zip(a.tracks, b.tracks)), \
+                f"{what} changed per-stream tracks"
+
     warm = BatchBroker()
-    _, ref = fleet(max(stream_counts), warm)
+    wtb = TrackBroker()
+    _, ref = fleet(max(stream_counts), warm, wtb, device=True)
     warm.close()
+    wtb.close()
 
     out = {}
     for n in stream_counts:
-        fps_ind, fps_brk, disp_ind, disp_brk, fills = [], [], [], [], []
+        fps_ind, fps_brk, fps_dev = [], [], []
+        disp_ind, disp_brk, fills = [], [], []
+        tdisp, tfills = [], []
         for _ in range(reps):
             detector.dispatches = 0
             fps, solo = fleet(n, None)
@@ -184,21 +205,34 @@ def stream_scaling(bank, params, clips, stream_counts=(1, 4, 16),
             disp_brk.append(broker.dispatches)
             if broker.batch_fill:
                 fills.append(float(np.mean(broker.batch_fill)))
-            for a, b in zip(solo, got):  # broker must not change tracks
-                assert len(a.tracks) == len(b.tracks) and all(
-                    np.array_equal(x, y)
-                    for x, y in zip(a.tracks, b.tracks)), \
-                    "broker changed per-stream tracks"
+            same_tracks(solo, got, "broker")
+            # device-resident TRACK on top of the detector broker:
+            # per-step assignment through the fused track_step kernel,
+            # steps coalesced across streams by a shared TrackBroker
+            broker = BatchBroker()
+            tb = TrackBroker()
+            fps, got = fleet(n, broker, tb, device=True)
+            broker.close()
+            tb.close()
+            fps_dev.append(fps)
+            tdisp.append(tb.dispatches)
+            if tb.stream_fill:
+                tfills.append(float(np.mean(tb.stream_fill)))
+            same_tracks(solo, got, "device track path")
         if n >= 4:
             assert max(disp_brk) < min(disp_ind), \
                 (n, disp_brk, disp_ind)
         out[str(n)] = {
             "fps_independent": round(float(np.median(fps_ind)), 2),
             "fps_broker": round(float(np.median(fps_brk)), 2),
+            "fps_device_track": round(float(np.median(fps_dev)), 2),
             "detector_dispatches_independent": int(np.median(disp_ind)),
             "detector_dispatches": int(np.median(disp_brk)),
             "batch_fill_mean": round(float(np.mean(fills)), 4)
             if fills else 0.0,
+            "track_dispatches": int(np.median(tdisp)),
+            "track_fill_mean": round(float(np.mean(tfills)), 4)
+            if tfills else 0.0,
         }
     return out
 
@@ -268,6 +302,40 @@ def run(out_path: str | None = DEFAULT_OUT, reps: int = 7,
     med = {k: float(np.median(v)) for k, v in fps_all.items()}
     med_wall = {k: float(np.median(v)) for k, v in wall_all.items()}
 
+    # device-resident TRACK in the chunked regime: one chunk-scan
+    # dispatch per chunk (DeviceTracker) vs the host per-frame loop —
+    # bit-identity asserted every rep (the `--smoke` gate), with the
+    # per-stage utilization counters from the device runs aggregated
+    # into the `stage_seconds` block
+    dev_opts = ExecutorOptions(device_tracker=True)
+    fps_dev_all, device_identical = [], True
+    stage_wall = {}
+    stage_proc = {}
+    dispatch_sum = {}
+    for _ in range(max(2, reps // 2)):
+        s_host = s_dev = frames = 0.0
+        for clip in clips:
+            ra = run_clip_streamed(bank, params, clip, stream_opts)
+            rd = run_clip_streamed(bank, params, clip, dev_opts)
+            s_host += ra.seconds
+            s_dev += rd.seconds
+            frames += ra.frames_processed
+            device_identical &= len(ra.tracks) == len(rd.tracks) and \
+                all(np.array_equal(x, y)
+                    for x, y in zip(ra.tracks, rd.tracks))
+            for st, d in rd.stage_seconds.items():
+                stage_wall[st] = stage_wall.get(st, 0.0) + d["wall"]
+                stage_proc[st] = stage_proc.get(st, 0.0) + d["process"]
+            for k, v in rd.dispatches.items():
+                dispatch_sum[k] = dispatch_sum.get(k, 0) + v
+        fps_dev_all.append(frames / s_dev)
+    assert device_identical, \
+        "device tracker diverged from the host tracker"
+    stage_seconds = {
+        st: {"wall": round(stage_wall[st], 4),
+             "process": round(stage_proc[st], 4)}
+        for st in stage_wall}
+
     scaling = stream_scaling(bank, params, clips,
                              stream_counts=(1, 4) if smoke else (1, 4, 16))
     fills = [s["batch_fill_mean"] for s in scaling.values()
@@ -294,6 +362,14 @@ def run(out_path: str | None = DEFAULT_OUT, reps: int = 7,
         "fps_streaming_all": [round(f, 2) for f in fps_all["streaming"]],
         "wall_fps_chunked": med_wall["chunked"],
         "wall_fps_streaming": med_wall["streaming"],
+        "fps_streaming_device_tracker":
+            float(np.median(fps_dev_all)),
+        "device_tracks_identical": bool(device_identical),
+        # per-stage utilization (device-tracker runs, summed over
+        # clips and reps): wall vs thread-CPU seconds per stage, plus
+        # device dispatch counts per stage family
+        "stage_seconds": stage_seconds,
+        "dispatches": dispatch_sum,
         "speedup": float(np.median(
             [b / a for a, b in zip(fps_all["frame"],
                                    fps_all["chunked"])])),
@@ -340,15 +416,24 @@ def main(argv=None) -> None:
     print(f"chunked engine   : {r['fps_chunked']:8.1f} frames/sec")
     print(f"streaming engine : {r['fps_streaming']:8.1f} frames/sec"
           f"  (wall {r['wall_fps_streaming']:.1f}/s)")
+    print(f"device tracker   : "
+          f"{r['fps_streaming_device_tracker']:8.1f} frames/sec"
+          f"  (identical: {r['device_tracks_identical']})")
     print(f"speedup          : {r['speedup']:8.2f}x chunked, "
           f"{r['speedup_streaming']:.2f}x streaming")
     print(f"tracks identical : {r['tracks_identical']}")
+    for st, d in r["stage_seconds"].items():
+        print(f"  stage {st:6s}: {d['wall']:7.2f}s wall "
+              f"{d['process']:7.2f}s cpu  "
+              f"({r['dispatches'].get(st, '-')} dispatches)")
     for n, s in r["fps_vs_streams"].items():
         print(f"{n:>2} streams       : {s['fps_broker']:8.1f} fps broker"
-              f" vs {s['fps_independent']:.1f} independent  "
+              f" vs {s['fps_independent']:.1f} independent, "
+              f"{s['fps_device_track']:.1f} device-track  "
               f"(dispatches {s['detector_dispatches']} vs "
               f"{s['detector_dispatches_independent']}, "
-              f"fill {s['batch_fill_mean']:.2f})")
+              f"fill {s['batch_fill_mean']:.2f}; track "
+              f"{s['track_dispatches']} @ {s['track_fill_mean']:.2f})")
     print(f"detector jit entries: {r['detector_jit_entries']}"
           f" (stable after warmup: "
           f"{not r['jit_entries_grew_after_warmup']})")

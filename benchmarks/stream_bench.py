@@ -12,11 +12,14 @@ Measures the quantities the stream subsystem promises (``repro.stream``):
     incremental re-evaluation cost per watermark advance, vs
     **re-running the ad-hoc query from scratch** (the full row scan,
     ``use_index=False``) over the same open clips;
-  * **fleet watermark lag, broker on/off** — K feeds appending
+  * **fleet watermark lag, broker off/on/track** — K feeds appending
     concurrently (one ingestor + thread each, per-frame segments) with
-    a shared ``executor.BatchBroker`` vs independent executors: lag,
-    append wall, fleet fps and consolidated detector dispatches, with
-    per-feed stored rows asserted bit-identical across the two modes;
+    a shared ``executor.BatchBroker`` vs independent executors, plus a
+    third mode adding the device-resident TRACK path (fused
+    ``track_step`` assignment, steps coalesced by a shared
+    ``TrackBroker``): lag, append wall, fleet fps, consolidated
+    detector/track dispatches and per-stage ``stage_seconds``, with
+    per-feed stored rows asserted bit-identical across all modes;
   * **exactness counters** — the unrestricted standing query must scan
     each visible row EXACTLY once across the whole stream
     (``rows_scanned == total rows``), and its accumulated state must
@@ -88,28 +91,42 @@ def _fleet_lag(bank, params, clips, segment, root, smoke,
     (asserted), only the batching and the lag/throughput change.  Lag
     here is the bench's usual store-landing + standing-notify slice of
     each append; append wall and fleet fps are recorded alongside so
-    the linger the broker spends waiting for peers is visible too."""
+    the linger the broker spends waiting for peers is visible too.
+    The "track" mode keeps the detector broker and moves TRACK onto
+    the device as well (``device_assign`` + shared ``TrackBroker``) —
+    the fleet-phase row for the fused track_step path."""
     import dataclasses
     import os
     import threading
 
-    from repro.core.executor import BatchBroker, ExecutorOptions
+    from repro.core.executor import (BatchBroker, ExecutorOptions,
+                                     TrackBroker)
 
     p1 = dataclasses.replace(params, chunk_size=1)
     feeds = clips[:3] if smoke else clips[:8]
     detector = bank.detectors[params.det_arch]
     out = {"feeds": len(feeds), "segment_frames": segment}
     rows_by_mode = {}
-    for mode in ("off", "on"):
-        broker = BatchBroker() if mode == "on" else None
+    # "track" = detector broker PLUS the device-resident TRACK path:
+    # per-step assignment through the fused track_step kernel, steps
+    # coalesced across feeds by a shared TrackBroker.  "warm" is an
+    # unrecorded track-mode fleet run first so the fused kernel's jit
+    # compiles (one per padded batch/slot shape) don't land in the
+    # measured appends.
+    for mode in ("warm", "off", "on", "track"):
+        broker = BatchBroker() if mode != "off" else None
+        track_broker = TrackBroker() if mode in ("warm", "track") \
+            else None
         detector.dispatches = 0
         stores, ingestors = [], []
         for i, c in enumerate(feeds):
             s = TrackStore(os.path.join(root, f"fleet_{mode}_{i}"),
                            bank, p1)
             ing = SegmentIngestor(
-                s, options=ExecutorOptions(prefetch=False,
-                                           batch_broker=broker))
+                s, options=ExecutorOptions(
+                    prefetch=False, batch_broker=broker,
+                    device_assign=mode in ("warm", "track"),
+                    track_broker=track_broker))
             ing.open(c)
             stores.append(s)
             ingestors.append(ing)
@@ -135,7 +152,11 @@ def _fleet_lag(bank, params, clips, segment, root, smoke,
         wall = time.perf_counter() - t0
         if broker is not None:
             broker.close()
+        if track_broker is not None:
+            track_broker.close()
         assert not errors, errors
+        if mode == "warm":
+            continue
         flat = [r for rs in reports for r in rs]
         assert all(rs[-1].sealed for rs in reports)
         lag = [r.store_seconds + r.standing_seconds for r in flat]
@@ -150,10 +171,27 @@ def _fleet_lag(bank, params, clips, segment, root, smoke,
         out[f"detector_dispatches_broker_{mode}"] = int(
             broker.dispatches if broker is not None
             else detector.dispatches)
+        # per-stage utilization summed over every append in the fleet
+        stage = {}
+        for r in flat:
+            for st, d in (r.stage_seconds or {}).items():
+                e = stage.setdefault(st, {"wall": 0.0, "process": 0.0})
+                e["wall"] += d["wall"]
+                e["process"] += d["process"]
+        out[f"stage_seconds_broker_{mode}"] = {
+            st: {k: round(v, 4) for k, v in d.items()}
+            for st, d in stage.items()}
+        if track_broker is not None:
+            out["track_dispatches"] = track_broker.dispatches
+            out["track_steps_in"] = track_broker.steps_in
+            out["track_fill_mean"] = round(
+                float(np.mean(track_broker.stream_fill)), 4) \
+                if track_broker.stream_fill else 0.0
         rows_by_mode[mode] = [stores[i].get(c).rows
                               for i, c in enumerate(feeds)]
-    for a, b in zip(rows_by_mode["off"], rows_by_mode["on"]):
-        np.testing.assert_array_equal(a, b)
+    for mode in ("on", "track"):
+        for a, b in zip(rows_by_mode["off"], rows_by_mode[mode]):
+            np.testing.assert_array_equal(a, b)
     out["tracks_bit_identical"] = True
     assert out["detector_dispatches_broker_on"] \
         < out["detector_dispatches_broker_off"]
@@ -339,13 +377,16 @@ def main(argv=None) -> None:
           f"+ {r['standing_rows_skipped']} summary-skipped == "
           f"{r['rows_total']} (asserted)")
     fl = r["fleet"]
-    for mode in ("off", "on"):
+    for mode in ("off", "on", "track"):
         w = fl[f"watermark_lag_ms_broker_{mode}"]
-        print(f"fleet broker {mode:>3}: "
+        print(f"fleet broker {mode:>5}: "
               f"{fl[f'fleet_fps_broker_{mode}']:8.1f} fps, lag "
               f"{w['median']:.2f} ms median (p95 {w['p95']:.2f}), "
               f"{fl[f'detector_dispatches_broker_{mode}']} dispatches "
               f"at {fl['feeds']} feeds")
+    print(f"fleet track path : {fl['track_dispatches']} coalesced "
+          f"track dispatches for {fl['track_steps_in']} steps "
+          f"(fill {fl['track_fill_mean']:.2f})")
     if out:
         print(f"wrote {out}")
 

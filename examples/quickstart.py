@@ -8,10 +8,13 @@ end in a few minutes on CPU.  The last section is the serving story:
 pre-process the test split ONCE into a ``TrackStore``, then answer an
 open-ended stream of queries from the materialized tracks in
 milliseconds (``repro.query``), live segment appends with standing
-queries (``repro.stream``), and finally two cameras ingesting
-concurrently through one shared ``executor.BatchBroker`` — their
-per-frame detector windows coalesce into consolidated device batches
-while each feed's tracks stay bit-identical to its solo run.
+queries (``repro.stream``), two cameras ingesting concurrently through
+one shared ``executor.BatchBroker`` — their per-frame detector windows
+coalesce into consolidated device batches while each feed's tracks
+stay bit-identical to its solo run — and the device-resident TRACK
+stage (``ExecutorOptions(device_tracker=True)``): the fused
+``track_step`` kernel scanning whole chunks in one dispatch, still
+bit-identical to the host tracker.
 """
 import dataclasses
 import os
@@ -170,6 +173,32 @@ def main() -> None:
               f"(mean bucket fill "
               f"{sum(broker.batch_fill) / len(broker.batch_fill):.2f}); "
               f"tracks bit-identical: {identical}")
+
+        print("\n== device-resident TRACK (fused track-step kernel) ==")
+        # with a recurrent θ, TRACK itself can live on the device: the
+        # fused track_step kernel advances GRU + match + assignment in
+        # one dispatch. ExecutorOptions(device_assign=True) calls it
+        # per frame; device_tracker=True scans a WHOLE chunk in one
+        # dispatch; a TrackBroker (same shape as BatchBroker above)
+        # coalesces concurrent streams' steps. All are scheduling
+        # knobs — tracks stay bit-identical to the host tracker, so
+        # none of them is part of θ.
+        from repro.core.executor import run_clip_streamed
+        recur = dataclasses.replace(per_frame, tracker="recurrent",
+                                    chunk_size=8)
+        host = run_clip_streamed(system.bank, recur, feeds[0])
+        dev = run_clip_streamed(system.bank, recur, feeds[0],
+                                ExecutorOptions(device_tracker=True))
+        identical = len(host.tracks) == len(dev.tracks) and all(
+            np.array_equal(a, b)
+            for a, b in zip(host.tracks, dev.tracks))
+        print(f"  host {host.dispatches['track']} track dispatches -> "
+              f"device {dev.dispatches['track']} (chunk-scan); "
+              f"tracks bit-identical: {identical}")
+        t = dev.stage_seconds["track"]
+        print(f"  track stage: {t['wall'] * 1e3:.0f}ms wall / "
+              f"{t['process'] * 1e3:.0f}ms cpu "
+              f"(RunResult.stage_seconds)")
 
 
 if __name__ == "__main__":

@@ -144,7 +144,25 @@ class ExecutorOptions:
                          device, ``windows.plan_from_mapped`` on the
                          stats) instead of pulling the full score map to
                          the host.  Plans, and therefore tracks, are
-                         bit-identical either way.
+                         bit-identical either way;
+    ``device_assign``  — TRACK runs each per-frame step as ONE fused
+                         ``kernels.track_step`` dispatch (GRU + match
+                         logits + cost + JV assignment on device)
+                         instead of the host numpy twins.  Tracks are
+                         bit-identical (the fastmath contract);
+    ``device_tracker`` — TRACK holds its state in device slot buffers
+                         and executes a whole chunk as one ``lax.scan``
+                         dispatch (``tracker.DeviceTracker``; implies
+                         the device step).  Tracks are bit-identical;
+    ``track_broker``   — an externally owned ``TrackBroker``: device
+                         track steps from every run sharing the broker
+                         coalesce into one batched ``track_step``
+                         dispatch (the per-frame live-fleet regime;
+                         chunk-resident runs without a broker use the
+                         scan instead).  Per-stream tracks stay
+                         bit-identical — the fused step restricts its
+                         JV solve to the canonical ``assoc_side``
+                         square, so batch padding never perturbs it.
     """
     prefetch: bool = True
     prefetch_depth: int = 2
@@ -157,6 +175,9 @@ class ExecutorOptions:
     share_decode_pool: bool = True
     batch_broker: Optional["BatchBroker"] = None
     fused_plan: bool = True
+    device_assign: bool = False
+    device_tracker: bool = False
+    track_broker: Optional["TrackBroker"] = None
 
 
 @dataclass
@@ -443,6 +464,218 @@ class BatchBroker:
         return total, bucket
 
 
+# ---------------------------------------------------------------------------
+# Cross-stream track-step broker (TRACK stage, per-frame device regime)
+# ---------------------------------------------------------------------------
+
+class _TrackHandle:
+    """One stream's registration with a ``TrackBroker``.  Attached to the
+    stream's tracker as ``_track_handle`` by ``_RunContext`` and closed
+    when the run finishes or is cancelled."""
+
+    __slots__ = ("broker", "active")
+
+    def __init__(self, broker: "TrackBroker"):
+        self.broker = broker
+        self.active = True
+
+    def step(self, h_r, tbox_r, alive_r, te_gap_r, te_match, x, dbox,
+             dvalid, thr, params, table, *, params_key):
+        return self.broker._step(self, (h_r, tbox_r, alive_r, te_gap_r,
+                                        te_match, x, dbox, dvalid),
+                                 thr, params, table, params_key)
+
+    def close(self) -> None:
+        self.broker.unregister(self)
+
+
+class _TrackRequest:
+    __slots__ = ("handle", "arrs", "thr", "params", "table", "key",
+                 "done", "result", "error")
+
+    def __init__(self, handle, arrs, thr, params, table, key):
+        self.handle = handle
+        self.arrs = arrs                # the 8 (Q, ...) stream arrays
+        self.thr = thr
+        self.params = params
+        self.table = table
+        self.key = key                  # flush-group key
+        self.done = False
+        self.result = None
+        self.error: Optional[BaseException] = None
+
+
+class TrackBroker:
+    """Coalesce per-frame device track steps across concurrent runs.
+
+    The fused ``kernels.track_step`` batches over a leading K axis of
+    independent streams; in the live per-frame regime (a fleet of
+    ``SegmentIngestor`` cameras appending a frame or two at a time),
+    each stream alone would dispatch K=1 steps.  A shared broker lets
+    those steps ride one dispatch: each stream's ``assign="device"``
+    tracker submits its step operands and blocks for the routed-back
+    slice, so TRACK order per stream is exactly as without the broker.
+
+    Same flush discipline as ``BatchBroker`` (whichever waiting stream
+    first observes a trigger flushes inline with the lock released):
+    every registered stream pending, ``max_streams`` pending, or a
+    request older than ``linger_ms``.  Streams group by (tracker
+    params, threshold, head dims); a group's slot buffers pad to the
+    widest stream's Q and the batch axis pads to a pow2 bucket, both of
+    which are bit-invariant for the real rows — the kernel restricts
+    its JV solve to the canonical ``assoc_side`` square derived from
+    the LIVE/VALID counts, so padding rows never perturb it (asserted
+    by tests/test_device_tracker.py).
+
+    Stats (read by benchmarks): ``dispatches`` consolidated kernel
+    calls, ``steps_in`` real stream-steps served, ``stream_fill``
+    per-call stream counts."""
+
+    def __init__(self, max_streams: int = 16, linger_ms: float = 5.0):
+        self.max_streams = int(max_streams)
+        self.linger = float(linger_ms) / 1e3
+        self._cv = threading.Condition()
+        self._pending: List[_TrackRequest] = []
+        self._registered = 0
+        self._waiting = 0
+        self._closed = False
+        self.dispatches = 0
+        self.steps_in = 0
+        self.stream_fill: List[int] = []
+
+    # -- stream side ----------------------------------------------------------
+
+    def register(self) -> _TrackHandle:
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("TrackBroker is closed")
+            self._registered += 1
+            return _TrackHandle(self)
+
+    def unregister(self, handle: _TrackHandle) -> None:
+        with self._cv:
+            if not handle.active:
+                return
+            handle.active = False
+            self._registered -= 1
+            for req in self._pending:
+                if req.handle is handle:
+                    req.error = BrokerCancelled(
+                        "stream dropped with a track step in flight")
+                    req.done = True
+            self._pending = [r for r in self._pending if not r.done]
+            self._cv.notify_all()
+
+    def close(self) -> None:
+        """Drain-on-close: flush whatever is pending, then refuse new
+        work.  Idempotent."""
+        with self._cv:
+            if self._closed:
+                return
+            self._closed = True
+            batch, self._pending = self._pending, []
+            if batch:
+                stats = self._flush(batch)
+                self._apply_stats(stats)
+            self._cv.notify_all()
+
+    def _step(self, handle: _TrackHandle, arrs, thr, params, table,
+              params_key):
+        Q, H = arrs[0].shape
+        e = arrs[5].shape[1]
+        key = (params_key, float(np.asarray(thr).reshape(-1)[0]), H, e)
+        req = _TrackRequest(handle, arrs, thr, params, table, key)
+        cv = self._cv
+        cv.acquire()
+        try:
+            if self._closed:
+                raise RuntimeError("TrackBroker is closed")
+            if not handle.active:
+                raise BrokerCancelled("handle already closed")
+            self._pending.append(req)
+            self._waiting += 1
+            try:
+                deadline = time.monotonic() + self.linger
+                while not req.done:
+                    if self._pending and (
+                            self._should_flush()
+                            or time.monotonic() >= deadline):
+                        batch, self._pending = self._pending, []
+                        cv.release()
+                        try:
+                            stats = self._flush(batch)
+                        finally:
+                            cv.acquire()
+                        self._apply_stats(stats)
+                        cv.notify_all()
+                    elif self._pending:
+                        cv.wait(timeout=max(
+                            deadline - time.monotonic(), 1e-4))
+                    else:
+                        cv.wait()
+            finally:
+                self._waiting -= 1
+        finally:
+            cv.release()
+        if req.error is not None:
+            raise req.error
+        return req.result
+
+    # -- flush side -----------------------------------------------------------
+
+    def _should_flush(self) -> bool:
+        if not self._pending:
+            return False
+        if self._waiting >= self._registered:
+            return True
+        return len(self._pending) >= self.max_streams
+
+    def _apply_stats(self, stats: List[int]) -> None:
+        for k in stats:
+            self.dispatches += 1
+            self.steps_in += k
+            self.stream_fill.append(k)
+
+    def _flush(self, batch: List[_TrackRequest]) -> List[int]:
+        groups: Dict[tuple, List[_TrackRequest]] = {}
+        for req in batch:
+            groups.setdefault(req.key, []).append(req)
+        stats: List[int] = []
+        for reqs in groups.values():
+            try:
+                stats.append(self._dispatch(reqs))
+            except BaseException as exc:
+                for r in reqs:
+                    r.error = exc
+                    r.done = True
+        return stats
+
+    def _dispatch(self, reqs: List[_TrackRequest]) -> int:
+        from repro.kernels.track_step import track_step
+        K = len(reqs)
+        Kb = next_bucket(K)             # bound the jit universe to pow2
+        Qm = max(r.arrs[0].shape[0] for r in reqs)
+        # pad every stream to the widest slot bucket and stack: padding
+        # rows are dead (alive = dvalid = 0), so the assoc_side-
+        # restricted solve never sees them and real rows come back
+        # bit-identical to a solo dispatch
+        stacked = []
+        for i, a in enumerate(zip(*(r.arrs for r in reqs))):
+            tail = a[0].shape[1:]
+            buf = np.zeros((Kb, Qm) + tail, np.float32)
+            for k, part in enumerate(a):
+                buf[k, :part.shape[0]] = part
+            stacked.append(buf)
+        r0 = reqs[0]
+        out = track_step(*stacked, r0.thr, r0.params, r0.table)
+        matched, h_upd, h_new = (np.asarray(o) for o in out)
+        for k, r in enumerate(reqs):
+            q = r.arrs[0].shape[0]
+            r.result = (matched[k, :q], h_upd[k, :q], h_new[k, :q])
+            r.done = True
+        return K
+
+
 class _RunContext:
     """Per-clip derived state shared by every stage.
 
@@ -474,8 +707,19 @@ class _RunContext:
             self.tracker: object = tracker
         else:
             from repro.core.pipeline import make_tracker
-            self.tracker = make_tracker(bank, params)
+            self.tracker = make_tracker(
+                bank, params, device_assign=options.device_assign,
+                device_tracker=options.device_tracker)
         self.batch_embed = isinstance(self.tracker, RecurrentTracker)
+        # cross-stream track-step broker: attach a handle to any
+        # device-assign recurrent tracker (injected trackers included —
+        # the live fleet passes resumed trackers through ``start``)
+        self._track_broker = options.track_broker
+        self.track_handle: Optional[_TrackHandle] = None
+        if self._track_broker is not None and self.batch_embed \
+                and getattr(self.tracker, "assign", "host") == "device":
+            self.track_handle = self._track_broker.register()
+            self.tracker._track_handle = self.track_handle
         self.devices = list(options.devices) if options.devices \
             else jax.local_devices()
         self.device_offset = device_offset
@@ -506,6 +750,20 @@ class _RunContext:
         self.n_windows = 0
         self.full_frames = 0
         self.skipped = 0
+        # per-stage profile (wall + thread-CPU seconds, device dispatch
+        # counts); decode may run on several workers, hence the lock
+        self.stage_wall = {s: 0.0 for s in STAGES}
+        self.stage_proc = {s: 0.0 for s in STAGES}
+        self._stage_lock = threading.Lock()
+        self.disp_proxy = 0
+        self.disp_detect = 0
+        self.disp_embed = 0           # chunk crop-CNN calls (TRACK)
+        self._disp_track0 = int(getattr(self.tracker, "dispatches", 0))
+
+    def note_stage(self, name: str, wall: float, proc: float) -> None:
+        with self._stage_lock:
+            self.stage_wall[name] += wall
+            self.stage_proc[name] += proc
 
     def broker(self) -> Optional[_BrokerHandle]:
         """The run's broker handle, registered lazily on the first
@@ -517,12 +775,19 @@ class _RunContext:
         return self.broker_handle
 
     def close(self) -> None:
-        """Release cross-run resources (the broker registration); called
-        by the executor when the run finishes or is cancelled."""
+        """Release cross-run resources (the broker registrations);
+        called by the executor when the run finishes or is cancelled."""
         if self.broker_handle is not None:
             self.broker_handle.close()
             self.broker_handle = None
         self._broker = None
+        if self.track_handle is not None:
+            if getattr(self.tracker, "_track_handle", None) \
+                    is self.track_handle:
+                self.tracker._track_handle = None
+            self.track_handle.close()
+            self.track_handle = None
+        self._track_broker = None
 
     def device_for(self, task: ChunkTask):
         return self.devices[(self.device_offset + task.index)
@@ -575,6 +840,7 @@ def stage_proxy(ctx: _RunContext, task: ChunkTask) -> ChunkTask:
     legacy path (``fused_plan=False``) pulls the score map back and
     maps/plans fully on the host; both produce bit-identical plans."""
     if ctx.proxy is not None:
+        ctx.disp_proxy += 1
         pframes = downsample_chunk(task.frames, ctx.proxy.resolution)
         if ctx.fused_plan:
             grids, stats = ctx.proxy.plan_batch(
@@ -609,6 +875,7 @@ def stage_detect(ctx: _RunContext, task: ChunkTask) -> ChunkTask:
                    for (_, x, y, _) in entries]
         scales = [(pw / W, ph / H)] * n
         broker = ctx.broker()
+        ctx.disp_detect += 1
         if (pw, ph) == (W, H):
             # full-frame windows: the crop is the frame itself
             stack = frames[[slot for (slot, _, _, _) in entries]]
@@ -676,7 +943,9 @@ def stage_detect(ctx: _RunContext, task: ChunkTask) -> ChunkTask:
 
 def stage_track(ctx: _RunContext, task: ChunkTask) -> ChunkTask:
     """Feed the tracker strictly in frame order; accumulate counters and
-    the decode ledger.  The crop CNN runs once per chunk."""
+    the decode ledger.  The crop CNN runs once per chunk, and the whole
+    chunk goes through ``step_chunk`` — a per-frame loop on the base
+    tracker, ONE ``lax.scan`` dispatch on ``DeviceTracker``."""
     for wins in task.plan.windows:
         ctx.n_windows += len(wins)
         if len(wins) == 1 and wins[0][2] == ctx.sizeset.full:
@@ -685,13 +954,13 @@ def stage_track(ctx: _RunContext, task: ChunkTask) -> ChunkTask:
             ctx.skipped += 1
     ctx.charged += task.charged
     if ctx.batch_embed:
+        ctx.disp_embed += 1
         embeds = embed_dets_chunk(ctx.bank.tracker_params,
                                   ctx.cfg.tracker, task.frames,
                                   task.dets,
                                   min_bucket=max(8, ctx.chunk // 2))
-        for k, f in enumerate(task.frame_ids):
-            ctx.tracker.step(f, task.dets[k], task.frames[k],
-                             det_embeds=embeds[k])
+        ctx.tracker.step_chunk(task.frame_ids, task.dets, task.frames,
+                               embeds=embeds)
     else:
         for k, f in enumerate(task.frame_ids):
             ctx.tracker.step(f, task.dets[k], task.frames[k])
@@ -702,6 +971,23 @@ def stage_track(ctx: _RunContext, task: ChunkTask) -> ChunkTask:
 DEFAULT_STAGES: Dict[str, Callable[[_RunContext, ChunkTask], ChunkTask]] \
     = {"decode": stage_decode, "proxy": stage_proxy,
        "detect": stage_detect, "track": stage_track}
+
+
+def _timed(name: str, fn: Callable) -> Callable:
+    """Wrap a stage so each call accumulates wall + thread-CPU seconds
+    into the run's per-stage profile.  ``thread_time`` counts only the
+    calling thread, so overlapped stages (decode on workers, compute on
+    the draining thread) sum to honest per-stage CPU rather than
+    double-counting each other."""
+    def wrapper(ctx: _RunContext, task: ChunkTask) -> ChunkTask:
+        t0 = time.perf_counter()
+        c0 = time.thread_time()
+        try:
+            return fn(ctx, task)
+        finally:
+            ctx.note_stage(name, time.perf_counter() - t0,
+                           time.thread_time() - c0)
+    return wrapper
 
 
 # ---------------------------------------------------------------------------
@@ -1031,6 +1317,8 @@ class ClipExecutor:
         self.stages = dict(DEFAULT_STAGES)
         if stages:
             self.stages.update(stages)
+        self.stages = {name: _timed(name, fn)
+                       for name, fn in self.stages.items()}
         if scheduler is not None:
             self.scheduler = scheduler
         elif self.options.decode_pool is not None and self.options.prefetch:
@@ -1081,8 +1369,18 @@ class ClipExecutor:
         if ctx.params.refine and ctx.bank.refiner is not None:
             tracks = [ctx.bank.refiner.refine(t) for t in tracks]
         seconds = time.process_time() - t0 + max(ctx.charged, 0.0)
+        stage_seconds = {s: {"wall": ctx.stage_wall[s],
+                             "process": ctx.stage_proc[s]}
+                         for s in STAGES}
+        track_disp = int(getattr(ctx.tracker, "dispatches", 0)) \
+            - ctx._disp_track0 + ctx.disp_embed
+        dispatches = {"proxy": ctx.disp_proxy,
+                      "detect": ctx.disp_detect,
+                      "track": track_disp}
         return RunResult(tracks, seconds, len(ctx.frame_ids),
-                         ctx.n_windows, ctx.full_frames, ctx.skipped)
+                         ctx.n_windows, ctx.full_frames, ctx.skipped,
+                         stage_seconds=stage_seconds,
+                         dispatches=dispatches)
 
     def run(self, clip: Clip) -> RunResult:
         return self.finish(self.start(clip))

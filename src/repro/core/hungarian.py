@@ -113,6 +113,91 @@ def _hungarian_np(cost: np.ndarray) -> List[Tuple[int, int]]:
     return [(r, int(c)) for r, c in enumerate(col_of) if c >= 0]
 
 
+def solve_device_np(cost: np.ndarray) -> np.ndarray:
+    """Numpy float32 twin of ``kernels.assign.kernel.solve_one`` — a
+    line-by-line port (same update order, same first-index argmin
+    tie-break, same f32 arithmetic), so its output is bit-identical to
+    the device solver on the same matrix.  cost: (N, N) finite f32 ->
+    (N,) int32 matched column per row (full permutation)."""
+    cost = np.asarray(cost, np.float32)
+    N = cost.shape[0]
+    a = np.zeros((N + 1, N + 1), np.float32)
+    a[1:, 1:] = cost
+    rows1 = np.arange(N + 1, dtype=np.int32)
+    u = np.zeros(N + 1, np.float32)
+    v = np.zeros(N + 1, np.float32)
+    p = np.zeros(N + 1, np.int32)
+    for i in range(1, N + 1):
+        p[0] = i
+        j0 = 0
+        way = np.zeros(N + 1, np.int32)
+        minv = np.full(N + 1, np.inf, np.float32)
+        used = np.zeros(N + 1, bool)
+        while p[j0] != 0:
+            used[j0] = True
+            i0 = p[j0]
+            cur = (a[i0] - u[i0]) - v                    # f32 (N+1,)
+            free = ~used
+            take = free & (cur < minv)
+            minv = np.where(take, cur, minv)
+            way = np.where(take, j0, way).astype(np.int32)
+            masked = np.where(free, minv, np.float32(np.inf))
+            j1 = int(np.argmin(masked))                  # first index on ties
+            delta = masked[j1]
+            row_hit = ((p[None, :] == rows1[:, None])
+                       & used[None, :]).any(1)
+            u = np.where(row_hit, u + delta, u).astype(np.float32)
+            v = np.where(used, v - delta, v).astype(np.float32)
+            minv = np.where(free, minv - delta, minv).astype(np.float32)
+            j0 = j1
+        while j0:
+            j1 = way[j0]
+            p[j0] = p[j1]
+            j0 = j1
+    col_of = np.zeros(N, np.int32)
+    col_of[p[1:] - 1] = np.arange(N, dtype=np.int32)
+    return col_of
+
+
+def assoc_side(n: int, m: int, min_bucket: int = 8) -> int:
+    """Canonical square size for tracker association: the power-of-two
+    bucket of max(n, m), floored at ``min_bucket``.  Every association
+    path — this host twin, the per-frame fused kernel, and the chunk
+    scan (via ``solve_one``'s dynamic ``eff_n``) — solves EXACTLY this
+    square, because f32 JV results are not invariant to the padded
+    size: a forced forbidden match pushes sentinel-scale deltas through
+    the potentials, and the rounding of real-cost differences then
+    depends on which padding columns the search walked."""
+    side = max(1, min_bucket)
+    need = max(n, m)
+    while side < need:
+        side *= 2
+    return side
+
+
+def hungarian_device_np(cost: np.ndarray) -> List[Tuple[int, int]]:
+    """Host twin of the DEVICE association path: pad to the canonical
+    ``assoc_side`` square with the finite ``FORBIDDEN_DEVICE``
+    sentinel, solve with the f32 JV twin, filter forbidden pairs — the
+    same contract as ``hungarian_batch`` for a batch of one, minus the
+    device dispatch.
+
+    Used by ``RecurrentTracker`` so that its pair selection (ties
+    included) is bit-identical to ``kernels.track_step``'s on-device
+    assignment, which restricts its solve to the same square via
+    ``solve_one(eff_n=...)`` no matter how many slots its buffers
+    carry."""
+    n, m = cost.shape
+    if n == 0 or m == 0:
+        return []
+    side = assoc_side(n, m)
+    sq = np.full((side, side), FORBIDDEN_DEVICE, np.float32)
+    sq[:n, :m] = np.minimum(cost, FORBIDDEN_DEVICE)
+    cols = solve_device_np(sq)
+    return [(r, int(cols[r])) for r in range(n)
+            if cols[r] < m and cost[r, cols[r]] < BIG / 2]
+
+
 def hungarian_batch(costs: Sequence[np.ndarray]
                     ) -> List[List[Tuple[int, int]]]:
     """Solve K independent (possibly rectangular) assignment problems in

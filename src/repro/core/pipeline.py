@@ -128,15 +128,28 @@ class ModelBank:
     refiner: Optional[TrackRefiner] = None
 
 
-def make_tracker(bank: ModelBank, params: PipelineParams):
+def make_tracker(bank: ModelBank, params: PipelineParams,
+                 device_assign: bool = False,
+                 device_tracker: bool = False):
     """θ's tracker instance — THE selection rule (recurrent iff θ asks
     for it and the bank has trained tracker params, SORT otherwise).
     Every execution path (per-frame reference, executor stage graph,
     live segment ingest) must construct trackers through here, or the
     stream's segment-append == one-shot bit-identity contract breaks
-    on the day one copy diverges."""
+    on the day one copy diverges.
+
+    ``device_assign``/``device_tracker`` mirror ``ExecutorOptions``:
+    the per-frame step as one fused kernel dispatch, or the whole-chunk
+    ``lax.scan`` tracker (``DeviceTracker``).  Both produce tracks
+    BIT-identical to the host tracker, so they are scheduling knobs
+    like the rest of the options — never part of θ."""
     if params.tracker == "recurrent" and bank.tracker_params is not None:
-        return RecurrentTracker(bank.cfg.tracker, bank.tracker_params)
+        if device_tracker:
+            from repro.core.tracker import DeviceTracker
+            return DeviceTracker(bank.cfg.tracker, bank.tracker_params)
+        return RecurrentTracker(
+            bank.cfg.tracker, bank.tracker_params,
+            assign="device" if device_assign else "host")
     return SortTracker()
 
 
@@ -245,6 +258,13 @@ class RunResult:
     detector_windows: int        # total windows run through the detector
     full_frames: int             # of which full-frame applications
     skipped_frames: int          # frames with zero windows
+    # per-stage profile, populated by the executor (None on the
+    # per-frame reference path): stage -> {"wall": s, "process": s},
+    # where "process" is CPU actually spent in the stage's thread(s)
+    stage_seconds: Optional[Dict[str, Dict[str, float]]] = None
+    # device dispatches per stage ("proxy" plan/score calls, "detect"
+    # detector batches, "track" tracker kernel + crop-CNN calls)
+    dispatches: Optional[Dict[str, int]] = None
 
 
 def detect_with_windows(bank: ModelBank, params: PipelineParams,

@@ -30,7 +30,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.multiscope import TrackerConfig
-from repro.core.hungarian import hungarian, BIG
+from repro.core import fastmath as fm
+from repro.core.hungarian import BIG, hungarian_device_np
 from repro.models.common import ParamBuilder, build
 from repro.optim import adamw
 
@@ -402,7 +403,18 @@ class RecurrentTracker:
     on the reference path — while the te-dependent projection, GRU steps
     and the matching MLP run host-side in numpy (same host/accelerator
     split as Hungarian itself).  Both engines call the same code, so
-    their tracks are bit-identical."""
+    their tracks are bit-identical.
+
+    Every host head routes through ``repro.core.fastmath``'s ``np_*``
+    flavors and association through ``hungarian_device_np`` (the f32 JV
+    twin of the Pallas solver), which makes the host step BIT-IDENTICAL
+    to the fused device step (``kernels.track_step``): with
+    ``assign="device"`` the whole per-frame step — detection features,
+    match logits, cost assembly, JV assignment and both GRU batches —
+    runs as ONE kernel dispatch and the host merely replays the
+    returned events onto its track objects.  ``DeviceTracker`` extends
+    that to one dispatch per CHUNK.
+    """
 
     def __init__(self, cfg: TrackerConfig, params, max_misses: int = 2,
                  min_hits: int = 2, assign: str = "host"):
@@ -417,43 +429,48 @@ class RecurrentTracker:
         self.finished: List[_ActiveTrack] = []
         self._next_id = 0
         self._last_frame: Optional[int] = None
+        # device-step operands (lazy: host-only trackers never pack)
+        self._packed = None
+        self._thr = np.full((1, 1), cfg.match_threshold, np.float32)
+        # cross-stream TrackBroker handle, attached by the executor
+        self._track_handle = None
+        # device dispatches issued by this tracker (crop CNN per-frame
+        # fallback + track-step kernels); read by the TRACK stage timer
+        self.dispatches = 0
 
-    def _assign(self, cost: np.ndarray) -> List[tuple]:
-        """Per-step association.  ``assign="device"`` routes through the
-        batched Pallas solver (``repro.kernels.assign``) — a batch of
-        one here, since the GRU recurrence makes each frame's cost
-        matrix depend on the previous frame's assignment, so the
-        tracker can never batch assignment ACROSS a chunk's frames (the
-        genuinely batchable per-frame matrices live in ``metrics.mota``).
-        Min-cost totals always agree with the host path; equal-cost
-        tie-breaking may not, so "host" stays the default (the tuner /
-        test bit-identity anchor)."""
-        if self.assign == "device":
-            from repro.core.hungarian import hungarian_batch
-            return hungarian_batch([cost])[0]
-        return hungarian(cost)
+    def _device_operands(self):
+        if self._packed is None:
+            from repro.kernels.track_step import pack_params
+            from repro.kernels.track_step.ops import LOG1P_TABLE_2D
+            self._packed = (pack_params(self.np_params), LOG1P_TABLE_2D)
+        return self._packed
 
-    # -- host-side heads (numpy twins of embed_dets / gru_step /
-    #    match_logits, minus the crop CNN) --------------------------------
+    # -- host-side heads (numpy twins of the ``kernels.track_step``
+    #    pieces, minus the crop CNN; every transcendental/multiply-add
+    #    routes through fastmath so host == device bit-for-bit) ----------
 
     def _det_feats_np(self, x: np.ndarray, boxes: np.ndarray,
                       te: np.ndarray) -> np.ndarray:
         """x: (N, e) crop embeddings -> (N, e) detection features."""
         p = self.np_params
+        te = np.asarray(te, np.float32)
         extra = np.stack([boxes[:, 0], boxes[:, 1], boxes[:, 2],
-                          boxes[:, 3], te / 8.0, np.log1p(te)],
+                          boxes[:, 3], te * np.float32(0.125),
+                          fm.np_log1p_int(te)],
                          axis=1).astype(np.float32)
         d = np.concatenate([x, extra], axis=1)
-        return np.tanh(d @ p["det_proj/w"] + p["det_proj/b"])
+        return fm.np_tanh(fm.np_matmul(d, p["det_proj/w"])
+                          + p["det_proj/b"])
 
     def _gru_np(self, h: np.ndarray, feat: np.ndarray) -> np.ndarray:
         p = self.np_params
         hf = np.concatenate([feat, h], axis=-1)
-        z = 1.0 / (1.0 + np.exp(-(hf @ p["gru/wz"] + p["gru/bz"])))
-        r = 1.0 / (1.0 + np.exp(-(hf @ p["gru/wr"] + p["gru/br"])))
+        z = fm.np_sigmoid(fm.np_matmul(hf, p["gru/wz"]) + p["gru/bz"])
+        r = fm.np_sigmoid(fm.np_matmul(hf, p["gru/wr"]) + p["gru/br"])
         hf2 = np.concatenate([feat, r * h], axis=-1)
-        cand = np.tanh(hf2 @ p["gru/wh"] + p["gru/bh"])
-        return ((1 - z) * h + z * cand).astype(np.float32)
+        cand = fm.np_tanh(fm.np_matmul(hf2, p["gru/wh"]) + p["gru/bh"])
+        # single-multiply blend == the kernel's h + z*(cand - h)
+        return fm.np_fmadd(z, cand - h, h)
 
     def _match_np(self, hs: np.ndarray, tboxes: np.ndarray,
                   feats: np.ndarray, dboxes: np.ndarray,
@@ -461,7 +478,7 @@ class RecurrentTracker:
         p = self.np_params
         T, N = hs.shape[0], feats.shape[0]
         d = dboxes[None, :, :] - tboxes[:, None, :]
-        tesafe = np.maximum(te, 1.0)[None, :, None]
+        tesafe = np.maximum(te, np.float32(1.0))[None, :, None]
         rel = np.concatenate([d[..., :2], d[..., :2] / tesafe,
                               d[..., 2:]], axis=-1)
         pair = np.concatenate([
@@ -469,8 +486,10 @@ class RecurrentTracker:
             np.broadcast_to(feats[None], (T, N, feats.shape[1])),
             rel,
         ], axis=-1)
-        hid = np.tanh(pair @ p["match/w0"] + p["match/b0"])
-        return (hid @ p["match/w1"] + p["match/b1"])[..., 0]
+        hid = fm.np_tanh(fm.np_matmul(pair.reshape(T * N, -1),
+                                      p["match/w0"]) + p["match/b0"])
+        return (fm.np_matmul(hid, p["match/w1"])
+                + p["match/b1"]).reshape(T, N)
 
     def step(self, frame_idx: int, dets: np.ndarray,
              frame: np.ndarray,
@@ -495,26 +514,35 @@ class RecurrentTracker:
             npad = _pad(n)
             crops_p = np.zeros((npad, C, C, 3), np.float32)
             crops_p[:n] = crops
+            self.dispatches += 1
             x = np.asarray(crop_embed(self.params,
                                       jnp.asarray(crops_p)))[:n]
         else:
             x = np.zeros((0, cfg.embed_dim), np.float32)
         boxes = dets[:, :4].astype(np.float32) if n > 0 else \
             np.zeros((0, 4), np.float32)
-        feats = self._det_feats_np(
-            x, boxes, np.full((n,), te_scalar, np.float32))
 
         T = len(self.active)
-        pairs = []
-        if T > 0 and n > 0:
-            hs = np.stack([t.h for t in self.active])
-            tboxes = np.stack([t.boxes[-1] for t in self.active])
-            te_arr = np.full((n,), max(te_scalar, 1.0), np.float32)
-            logits = self._match_np(hs, tboxes, feats, boxes, te_arr)
-            probs = 1.0 / (1.0 + np.exp(-logits))
-            cost = np.where(probs >= cfg.match_threshold, 1.0 - probs,
-                            BIG)
-            pairs = self._assign(cost)
+        use_dev = self.assign == "device" and n > 0
+        h_upd = h_new = None
+        if use_dev:
+            pairs, h_upd, h_new = self._device_step(
+                frame_idx, te_scalar, x, boxes)
+        else:
+            pairs = []
+            if T > 0 and n > 0:
+                feats = self._det_feats_np(
+                    x, boxes, np.full((n,), te_scalar, np.float32))
+                hs = np.stack([t.h for t in self.active])
+                tboxes = np.stack([t.boxes[-1] for t in self.active])
+                te_arr = np.full((n,), max(te_scalar, 1.0), np.float32)
+                logits = self._match_np(hs, tboxes, feats, boxes,
+                                        te_arr)
+                probs = fm.np_sigmoid(logits)
+                cost = np.where(
+                    probs >= np.float32(cfg.match_threshold),
+                    np.float32(1.0) - probs, np.float32(BIG))
+                pairs = hungarian_device_np(cost)
 
         matched_t, matched_d = set(), set()
         upd_feats, upd_tracks = [], []
@@ -524,6 +552,8 @@ class RecurrentTracker:
             gap = float(frame_idx - t.frames[-1])
             upd_tracks.append(t)
             upd_feats.append((di, gap))
+            if use_dev:
+                t.h = np.asarray(h_upd[ti], np.float32)
             t.frames.append(frame_idx)
             t.boxes.append(dets[di, :4].astype(np.float32))
             t.misses = 0
@@ -544,37 +574,338 @@ class RecurrentTracker:
 
         # GRU advance: matched-track updates (t_elapsed = within-track
         # gap, h = track state) and new-track starts (t_elapsed = 0,
-        # h = 0) reuse the crop embeddings — no second CNN pass
+        # h = 0) reuse the crop embeddings — no second CNN pass.  On
+        # the device path both GRU batches already ran inside the
+        # fused kernel; the loop merely scatters the returned rows.
         new_idx = [di for di in range(n) if di not in matched_d]
         n_upd = len(upd_tracks)
         m = n_upd + len(new_idx)
         if m > 0:
-            rows = [di for di, _ in upd_feats] + new_idx
-            te_u = np.asarray([g for _, g in upd_feats]
-                              + [0.0] * len(new_idx), np.float32)
-            hs_p = np.zeros((m, self.cfg.rnn_dim), np.float32)
-            for k, t in enumerate(upd_tracks):
-                hs_p[k] = t.h
-            f_u = self._det_feats_np(x[rows], boxes[rows], te_u)
-            h_out = self._gru_np(hs_p, f_u)
-            for k, t in enumerate(upd_tracks):
-                t.h = h_out[k]
-            for k, di in enumerate(new_idx):
-                t = _ActiveTrack(self._next_id, h_out[n_upd + k],
-                                 [frame_idx],
-                                 [dets[di, :4].astype(np.float32)])
-                self.active.append(t)
-                self._next_id += 1
+            if use_dev:
+                for di in new_idx:
+                    t = _ActiveTrack(self._next_id,
+                                     np.asarray(h_new[di], np.float32),
+                                     [frame_idx],
+                                     [dets[di, :4].astype(np.float32)])
+                    self.active.append(t)
+                    self._next_id += 1
+            else:
+                rows = [di for di, _ in upd_feats] + new_idx
+                te_u = np.asarray([g for _, g in upd_feats]
+                                  + [0.0] * len(new_idx), np.float32)
+                hs_p = np.zeros((m, self.cfg.rnn_dim), np.float32)
+                for k, t in enumerate(upd_tracks):
+                    hs_p[k] = t.h
+                f_u = self._det_feats_np(x[rows], boxes[rows], te_u)
+                h_out = self._gru_np(hs_p, f_u)
+                for k, t in enumerate(upd_tracks):
+                    t.h = h_out[k]
+                for k, di in enumerate(new_idx):
+                    t = _ActiveTrack(self._next_id, h_out[n_upd + k],
+                                     [frame_idx],
+                                     [dets[di, :4].astype(np.float32)])
+                    self.active.append(t)
+                    self._next_id += 1
         # cap active set (static max_tracks capacity)
         if len(self.active) > self.cfg.max_tracks:
             self.active.sort(key=lambda t: -len(t.frames))
             self.finished.extend(self.active[self.cfg.max_tracks:])
             self.active = self.active[:self.cfg.max_tracks]
 
+    def _device_step(self, frame_idx: int, te_scalar: float,
+                     x: np.ndarray, boxes: np.ndarray):
+        """One whole tracker step as ONE fused kernel dispatch.
+
+        Packs the active set and the frame's detections into the
+        kernel's pow2 slot square (live tracks as the row prefix in
+        active-list order, detections as the column prefix), runs
+        ``kernels.track_step`` — or submits to the cross-stream
+        ``TrackBroker`` when one is attached — and returns (pairs,
+        h_upd rows per track row, h_new rows per det column).  Bit-
+        identical to the host twins at ANY slot count: the kernel
+        restricts its JV solve to the canonical ``assoc_side`` square
+        the host solves (f32 JV is not padding-invariant)."""
+        from repro.core.detector import next_bucket
+
+        T, n = len(self.active), len(boxes)
+        e = self.cfg.embed_dim
+        H = self.cfg.rnn_dim
+        Q = next_bucket(max(T, n, 1), min_bucket=8)
+        h_r = np.zeros((Q, H), np.float32)
+        tbox_r = np.zeros((Q, 4), np.float32)
+        alive_r = np.zeros((Q,), np.float32)
+        te_gap_r = np.zeros((Q,), np.float32)
+        for ti, t in enumerate(self.active):
+            h_r[ti] = t.h
+            tbox_r[ti] = t.boxes[-1]
+            alive_r[ti] = 1.0
+            te_gap_r[ti] = frame_idx - t.frames[-1]
+        te_match = np.full((Q,), te_scalar, np.float32)
+        x_p = np.zeros((Q, e), np.float32)
+        x_p[:n] = x
+        dbox = np.zeros((Q, 4), np.float32)
+        dbox[:n] = boxes
+        dvalid = np.zeros((Q,), np.float32)
+        dvalid[:n] = 1.0
+        params, table = self._device_operands()
+        self.dispatches += 1
+        if self._track_handle is not None:
+            matched, h_upd, h_new = self._track_handle.step(
+                h_r, tbox_r, alive_r, te_gap_r, te_match, x_p, dbox,
+                dvalid, self._thr, params, table,
+                params_key=id(self.params))
+        else:
+            from repro.kernels.track_step import track_step
+            out = track_step(h_r[None], tbox_r[None], alive_r[None],
+                             te_gap_r[None], te_match[None], x_p[None],
+                             dbox[None], dvalid[None], self._thr,
+                             params, table)
+            matched, h_upd, h_new = (np.asarray(o[0]) for o in out)
+        pairs = [(ti, int(matched[ti])) for ti in range(T)
+                 if matched[ti] >= 0]
+        return pairs, h_upd, h_new
+
+    def step_chunk(self, frame_ids: Sequence[int],
+                   dets_per_frame: Sequence[np.ndarray],
+                   frames: Sequence[np.ndarray],
+                   embeds: Optional[Sequence[np.ndarray]] = None
+                   ) -> None:
+        """Feed one chunk in frame order.  The base tracker simply
+        loops ``step`` (host math, or one kernel dispatch per frame
+        with ``assign="device"``); ``DeviceTracker`` overrides this
+        with a single chunk-scan dispatch."""
+        for k, f in enumerate(frame_ids):
+            self.step(int(f), dets_per_frame[k], frames[k],
+                      det_embeds=None if embeds is None else embeds[k])
+
     def result(self) -> List[np.ndarray]:
         tracks = self.finished + self.active
         return [t.as_array() for t in tracks
                 if len(t.frames) >= self.min_hits]
+
+
+# sorting key for dead slots: past any live track's recency rank
+_BIGK = np.int32(1 << 30)
+
+
+@functools.partial(jax.jit, static_argnames=("max_misses", "max_tracks"))
+def _device_chunk_scan(carry, fidx, x, dbox, dvalid, thr, params, table,
+                       *, max_misses: int, max_tracks: int):
+    """Whole-chunk tracker recurrence: ``lax.scan`` over B frames, one
+    fused ``kernels.track_step`` call per step, entirely on device.
+
+    carry (slot space, Q slots): h (Q, H), tbox (Q, 4), alive (Q,) f32,
+    last_f/misses/length/order (Q,) i32, next_key i32 (the next
+    active-list rank to issue), last_g i32 (previously processed frame,
+    -1 for none).  Inputs: fidx (B,) i32; x (B, Q, e); dbox (B, Q, 4);
+    dvalid (B, Q) with each frame's detections as a column prefix.
+
+    ``order`` encodes the host tracker's active-LIST position (matched
+    tracks keep their rank, new tracks append, a max_tracks overflow
+    re-sorts by track length); each step gathers slots into rank order,
+    so the kernel sees exactly the rows the per-frame path would build
+    and every step stays bit-identical to ``RecurrentTracker.step``.
+
+    Returns per-frame events for the host replay: matched det column
+    per slot (or -1), assigned slot per det column (Q for none), and
+    the post-step h per slot."""
+    from repro.kernels.track_step import track_step
+
+    Q = carry[0].shape[0]
+    slot = jnp.arange(Q, dtype=jnp.int32)
+
+    def body(c, inp):
+        h, tbox, alive, last_f, misses, length, order, next_key, \
+            last_g = c
+        f, xk, dbk, dvk = inp
+        live = alive > 0
+        te_m = jnp.where(last_g < 0, 0, f - last_g).astype(jnp.float32)
+        perm = jnp.argsort(jnp.where(live, order, _BIGK + slot))
+        alive_r = alive[perm]
+        te_gap_r = jnp.where(alive_r > 0,
+                             (f - last_f[perm]).astype(jnp.float32),
+                             np.float32(0))
+        matched_r, h_upd_r, h_new = (o[0] for o in track_step(
+            h[perm][None], tbox[perm][None], alive_r[None],
+            te_gap_r[None], jnp.full((Q,), te_m)[None], xk[None],
+            dbk[None], dvk[None], thr, params, table))
+        # back to slot space; apply matched-track updates
+        m_slot = jnp.full((Q,), -1, jnp.int32).at[perm].set(matched_r)
+        is_m = m_slot >= 0
+        mcol = jnp.clip(m_slot, 0, Q - 1)
+        h = jnp.where(is_m[:, None],
+                      jnp.zeros_like(h).at[perm].set(h_upd_r), h)
+        tbox = jnp.where(is_m[:, None], dbk[mcol], tbox)
+        last_f = jnp.where(is_m, f, last_f)
+        length = jnp.where(is_m, length + 1, length)
+        misses = jnp.where(is_m, 0, misses)
+        # age out unmatched live tracks
+        aged = live & ~is_m
+        misses = jnp.where(aged, misses + 1, misses)
+        alive = jnp.where(aged & (misses > max_misses),
+                          np.float32(0), alive)
+        # unmatched detections start new tracks in ascending free slots,
+        # ranks appended after every existing track (host list append)
+        det_hit = jnp.zeros((Q + 1,), jnp.int32).at[
+            jnp.where(matched_r >= 0, matched_r, Q)].set(1)[:Q]
+        new_mask = (dvk > 0) & (det_hit == 0)
+        free = alive <= 0
+        free_rank = jnp.cumsum(free.astype(jnp.int32)) - 1
+        slot_for_rank = jnp.full((Q,), Q, jnp.int32).at[
+            jnp.where(free, free_rank, Q)].set(slot, mode="drop")
+        new_rank = jnp.cumsum(new_mask.astype(jnp.int32)) - 1
+        tgt = jnp.where(new_mask,
+                        slot_for_rank[jnp.clip(new_rank, 0, Q - 1)], Q)
+        alive = alive.at[tgt].set(1.0, mode="drop")
+        h = h.at[tgt].set(h_new, mode="drop")
+        tbox = tbox.at[tgt].set(dbk, mode="drop")
+        last_f = last_f.at[tgt].set(f, mode="drop")
+        misses = misses.at[tgt].set(0, mode="drop")
+        length = length.at[tgt].set(1, mode="drop")
+        order = order.at[tgt].set(next_key + new_rank, mode="drop")
+        next_key = next_key + new_mask.astype(jnp.int32).sum()
+        # capacity overflow: keep the max_tracks longest tracks (stable
+        # on list order — the host's in-place sort) and renumber ranks
+        n_alive = (alive > 0).astype(jnp.int32).sum()
+        over = n_alive > max_tracks
+        perm2 = jnp.lexsort((jnp.where(alive > 0, order, _BIGK + slot),
+                             jnp.where(alive > 0, -length, _BIGK)))
+        pos = jnp.zeros((Q,), jnp.int32).at[perm2].set(slot)
+        alive = jnp.where(over & (alive > 0) & (pos >= max_tracks),
+                          np.float32(0), alive)
+        order = jnp.where(over, pos, order)
+        next_key = jnp.where(over, max_tracks, next_key)
+        return ((h, tbox, alive, last_f, misses, length, order,
+                 next_key, f), (m_slot, tgt, h))
+
+    _, ys = jax.lax.scan(body, carry, (fidx, x, dbox, dvalid))
+    return ys
+
+
+class DeviceTracker(RecurrentTracker):
+    """Chunk-scan tracker: ONE device dispatch per chunk.
+
+    Same tracks, bit for bit, as ``RecurrentTracker`` — the fused step
+    kernel shares its math with the host twins via ``fastmath`` — but
+    the per-frame recurrence runs as a ``lax.scan`` over the chunk with
+    track state held in a padded slot buffer on device, so B frames
+    cost one dispatch instead of B host round trips.  The host
+    materializes track objects once per chunk by replaying the scan's
+    (matched, new-slot, h) event stream.
+
+    With a cross-stream ``TrackBroker`` handle attached the per-frame
+    fused step is used instead (the broker batches steps ACROSS
+    streams, which a per-stream scan cannot), so the live per-frame
+    regime still shares dispatches."""
+
+    def __init__(self, cfg: TrackerConfig, params, max_misses: int = 2,
+                 min_hits: int = 2, assign: str = "device"):
+        super().__init__(cfg, params, max_misses=max_misses,
+                         min_hits=min_hits, assign="device")
+
+    def step_chunk(self, frame_ids: Sequence[int],
+                   dets_per_frame: Sequence[np.ndarray],
+                   frames: Sequence[np.ndarray],
+                   embeds: Optional[Sequence[np.ndarray]] = None
+                   ) -> None:
+        B = len(frame_ids)
+        if B == 0:
+            return
+        if self._track_handle is not None:
+            super().step_chunk(frame_ids, dets_per_frame, frames,
+                               embeds)
+            return
+        cfg = self.cfg
+        if embeds is None:
+            self.dispatches += 1
+            embeds = embed_dets_chunk(self.params, cfg, frames,
+                                      dets_per_frame)
+        from repro.core.detector import next_bucket
+        T = len(self.active)
+        D = max((len(d) for d in dets_per_frame), default=0)
+        Q = next_bucket(max(T, cfg.max_tracks) + D, min_bucket=8)
+        H, e = cfg.rnn_dim, cfg.embed_dim
+        h0 = np.zeros((Q, H), np.float32)
+        tbox0 = np.zeros((Q, 4), np.float32)
+        alive0 = np.zeros((Q,), np.float32)
+        lastf0 = np.zeros((Q,), np.int32)
+        miss0 = np.zeros((Q,), np.int32)
+        len0 = np.zeros((Q,), np.int32)
+        order0 = np.zeros((Q,), np.int32)
+        for i, t in enumerate(self.active):
+            h0[i] = t.h
+            tbox0[i] = t.boxes[-1]
+            alive0[i] = 1.0
+            lastf0[i] = t.frames[-1]
+            miss0[i] = t.misses
+            len0[i] = len(t.frames)
+            order0[i] = i
+        last_g0 = np.int32(-1 if self._last_frame is None
+                           else self._last_frame)
+        fidx = np.asarray([int(f) for f in frame_ids], np.int32)
+        x = np.zeros((B, Q, e), np.float32)
+        dbox = np.zeros((B, Q, 4), np.float32)
+        dvalid = np.zeros((B, Q), np.float32)
+        for k in range(B):
+            n = len(dets_per_frame[k])
+            if n:
+                x[k, :n] = embeds[k]
+                dbox[k, :n] = np.asarray(
+                    dets_per_frame[k], np.float32)[:, :4]
+                dvalid[k, :n] = 1.0
+        params, table = self._device_operands()
+        self.dispatches += 1
+        m_ev, new_ev, h_ev = _device_chunk_scan(
+            (h0, tbox0, alive0, lastf0, miss0, len0, order0,
+             np.int32(T), last_g0),
+            fidx, x, dbox, dvalid, self._thr, params, table,
+            max_misses=self.max_misses, max_tracks=cfg.max_tracks)
+        m_ev = np.asarray(m_ev)
+        new_ev = np.asarray(new_ev)
+        h_ev = np.asarray(h_ev)
+
+        # replay the event stream onto host track objects; ``slots``
+        # stays parallel to ``self.active``
+        slots = list(range(T))
+        for k in range(B):
+            f = int(frame_ids[k])
+            dets = dets_per_frame[k]
+            ms, hs = m_ev[k], h_ev[k]
+            keep_t: List[_ActiveTrack] = []
+            keep_s: List[int] = []
+            for t, s in zip(self.active, slots):
+                di = int(ms[s])
+                if di >= 0:
+                    t.h = hs[s].copy()
+                    t.frames.append(f)
+                    t.boxes.append(dets[di, :4].astype(np.float32))
+                    t.misses = 0
+                    keep_t.append(t)
+                    keep_s.append(s)
+                else:
+                    t.misses += 1
+                    if t.misses > self.max_misses:
+                        self.finished.append(t)
+                    else:
+                        keep_t.append(t)
+                        keep_s.append(s)
+            self.active, slots = keep_t, keep_s
+            for di in range(len(dets)):
+                s = int(new_ev[k][di])
+                if s < Q:
+                    t = _ActiveTrack(self._next_id, hs[s].copy(), [f],
+                                     [dets[di, :4].astype(np.float32)])
+                    self.active.append(t)
+                    slots.append(s)
+                    self._next_id += 1
+            if len(self.active) > cfg.max_tracks:
+                ranked = sorted(zip(self.active, slots),
+                                key=lambda ts: -len(ts[0].frames))
+                self.finished.extend(
+                    t for t, _ in ranked[cfg.max_tracks:])
+                self.active = [t for t, _ in ranked[:cfg.max_tracks]]
+                slots = [s for _, s in ranked[:cfg.max_tracks]]
+            self._last_frame = f
 
 
 def embed_dets_chunk(params, cfg: TrackerConfig,

@@ -26,19 +26,38 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) or \
     pltpu.TPUCompilerParams
 
 
-def solve_one(cost):
+def solve_one(cost, eff_n=None):
     """cost: (N, N) finite f32 -> (N,) int32 matched column per row.
 
     Jonker-Volgenant with 1-indexed potential vectors, exactly the
     update order of ``_hungarian_np`` (so equal-cost tie-breaking
-    matches the numpy path when the arithmetic is exact)."""
+    matches the numpy path when the arithmetic is exact).
+
+    ``eff_n`` (dynamic int32, default the static N) restricts the solve
+    to the leading (eff_n, eff_n) submatrix: rows past it are skipped,
+    columns past it never enter an argmin, so every f32 potential
+    update touches exactly the values a direct (eff_n, eff_n) solve
+    would — BIT-identical results regardless of the padded size N.
+    That matters because JV arithmetic is NOT padding-invariant: a
+    forced forbidden match pushes sentinel-scale deltas through the
+    potentials, and f32 rounding of real-cost differences then depends
+    on which padding columns the search walked.  Rows at or past
+    ``eff_n`` report column 0."""
     N = cost.shape[0]
     a = jnp.pad(cost.astype(jnp.float32), ((1, 0), (1, 0)))  # row/col 0 dummy
     rows1 = jnp.arange(N + 1, dtype=jnp.int32)
+    eff = jnp.int32(N) if eff_n is None else \
+        jnp.asarray(eff_n, jnp.int32)
+    col_ok = rows1 <= eff
 
     def outer(i, carry):
         u, v, p = carry
-        p = p.at[0].set(i)
+        # skipped rows (i > eff_n) park p[0] at 0: both while loops'
+        # conditions are then false on entry, so the row is a no-op —
+        # crucially WITHOUT lax.cond, which vmap turns into a select
+        # that executes the loop body even for skipped rows (and an
+        # all-masked argmin then never terminates)
+        p = p.at[0].set(jnp.where(i <= eff, i, 0))
 
         def scan_cond(c):
             j0, _u, _v, _way, _minv, _used = c
@@ -53,7 +72,7 @@ def solve_one(cost):
             take = free & (cur < minv)
             minv = jnp.where(take, cur, minv)
             way = jnp.where(take, j0, way)
-            masked = jnp.where(free, minv, jnp.inf)
+            masked = jnp.where(free & col_ok, minv, jnp.inf)
             j1 = jnp.argmin(masked).astype(jnp.int32)    # first index on ties
             delta = masked[j1]
             # u[p[j]] += delta over used columns j (matched rows are
@@ -81,9 +100,14 @@ def solve_one(cost):
     u0 = jnp.zeros(N + 1, jnp.float32)
     p0 = jnp.zeros(N + 1, jnp.int32)
     _, _, p = jax.lax.fori_loop(1, N + 1, outer, (u0, u0, p0))
-    # invert: p[j] = row matched to col j (1-indexed) -> col per row
-    return jnp.zeros(N, jnp.int32).at[p[1:] - 1].set(
-        jnp.arange(N, dtype=jnp.int32))
+    # invert: p[j] = row matched to col j (1-indexed) -> col per row.
+    # Columns past eff_n stay at p == 0; route them to the explicit
+    # out-of-bounds index N so mode="drop" discards them (p - 1 would
+    # be -1, which jnp WRAPS to the last row before the bounds check),
+    # leaving skipped rows at col 0 like the numpy twin
+    idx = jnp.where(p[1:] > 0, p[1:] - 1, jnp.int32(N))
+    return jnp.zeros(N, jnp.int32).at[idx].set(
+        jnp.arange(N, dtype=jnp.int32), mode="drop")
 
 
 def _assign_kernel(cost_ref, out_ref):

@@ -1,0 +1,13 @@
+"""Fused device tracker step: GRU + match head + JV assignment.
+
+One dispatch computes a whole tracker step for a padded slot layout —
+detection features, relative-motion match logits, cost-matrix assembly
+and the Jonker-Volgenant assignment (reusing ``kernels.assign``'s
+``solve_one``), plus the GRU updates for matched and new tracks.  See
+``kernels/README.md`` for the slot layout and sentinel contract.
+"""
+from repro.kernels.track_step.ops import (PARAM_ORDER, pack_params,
+                                          track_step)
+from repro.kernels.track_step.ref import track_step_ref
+
+__all__ = ["track_step", "track_step_ref", "pack_params", "PARAM_ORDER"]

@@ -1,0 +1,110 @@
+"""Numpy oracle for the fused track-step kernel.
+
+Same slot layout and operand order as ``ops.track_step``; every
+transcendental and multiply-add routes through ``fastmath``'s ``np_*``
+flavor and the assignment through ``hungarian.solve_device_np`` (the
+f32 JV twin), so the output is bit-identical to the kernel in interpret
+mode — asserted by the kernels CI gate and the property tests.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import numpy as np
+
+from repro.core import fastmath as fm
+from repro.core.hungarian import (FORBIDDEN_DEVICE, assoc_side,
+                                  solve_device_np)
+
+_ONE = np.float32(1.0)
+_EIGHTH = np.float32(0.125)
+_FORBID = np.float32(FORBIDDEN_DEVICE)
+_HALF_FORBID = np.float32(FORBIDDEN_DEVICE / 2)
+
+
+def _det_feats_np(x, boxes, te, dp_w, dp_b, table):
+    idx = np.clip(np.asarray(te).astype(np.int32), 0, len(table) - 1)
+    extra = np.stack([boxes[:, 0], boxes[:, 1], boxes[:, 2], boxes[:, 3],
+                      te * _EIGHTH, table[idx]], axis=1)
+    d = np.concatenate([x, extra], axis=1)
+    return fm.np_tanh(fm.np_matmul(d, dp_w) + dp_b)
+
+
+def _gru_np(h, feat, wz, wr, wh, bz, br, bh):
+    hf = np.concatenate([feat, h], axis=-1)
+    z = fm.np_sigmoid(fm.np_matmul(hf, wz) + bz)
+    r = fm.np_sigmoid(fm.np_matmul(hf, wr) + br)
+    hf2 = np.concatenate([feat, r * h], axis=-1)
+    cand = fm.np_tanh(fm.np_matmul(hf2, wh) + bh)
+    return fm.np_fmadd(z, cand - h, h)
+
+
+def _step_ref_one(h_r, tbox_r, alive_r, te_gap_r, te_match, x, dbox,
+                  dvalid, thr, params, table):
+    dp_w, dp_b, wz, wr, wh, bz, br, bh, m_w0, m_b0, m_w1, m_b1 = params
+    Q, H = h_r.shape
+    e = x.shape[1]
+    feats_m = _det_feats_np(x, dbox, te_match, dp_w, dp_b, table)
+
+    d = dbox[None, :, :] - tbox_r[:, None, :]
+    tesafe = np.maximum(te_match, _ONE)[None, :, None]
+    rel = np.concatenate([d[..., :2], d[..., :2] / tesafe, d[..., 2:]],
+                         axis=-1)
+    pair = np.concatenate([
+        np.broadcast_to(h_r[:, None], (Q, Q, H)),
+        np.broadcast_to(feats_m[None], (Q, Q, e)),
+        rel,
+    ], axis=-1)
+    hid = fm.np_tanh(fm.np_matmul(pair.reshape(Q * Q, -1), m_w0)
+                     + m_b0)
+    logits = (fm.np_matmul(hid, m_w1) + m_b1).reshape(Q, Q)
+
+    probs = fm.np_sigmoid(logits)
+    cost = np.where(probs >= thr, _ONE - probs, _FORBID)
+    ok_pair = (alive_r[:, None] > 0) & (dvalid[None, :] > 0)
+    cost = np.where(ok_pair, cost, _FORBID).astype(np.float32)
+
+    # canonical assoc square from the live/valid counts (twin of the
+    # kernel's dynamic eff_n restriction); rows past it report col 0
+    side = min(assoc_side(int((alive_r > 0).sum()),
+                          int((dvalid > 0).sum())), Q)
+    cols = np.zeros((Q,), np.int32)
+    cols[:side] = solve_device_np(cost[:side, :side])
+    got = np.take_along_axis(cost, cols[:, None], axis=1)[:, 0]
+    matched_r = np.where(got < _HALF_FORBID, cols, -1).astype(np.int32)
+
+    feats_g = _det_feats_np(x[cols], dbox[cols], te_gap_r, dp_w, dp_b,
+                            table)
+    h_upd_r = _gru_np(h_r, feats_g, wz, wr, wh, bz, br, bh)
+    feats_0 = _det_feats_np(x, dbox, np.zeros_like(te_match), dp_w, dp_b,
+                            table)
+    h_new = _gru_np(np.zeros_like(h_r), feats_0, wz, wr, wh, bz, br, bh)
+    return matched_r, h_upd_r, h_new
+
+
+def track_step_ref(h_r, tbox_r, alive_r, te_gap_r, te_match, x, dbox,
+                   dvalid, thr, params: Sequence[np.ndarray], table
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Numpy twin of ``ops.track_step`` (same shapes, leading K axis;
+    ``table`` accepts the (T, 1) operand or a flat (T,) table)."""
+    table = np.asarray(table, np.float32).reshape(-1)
+    thr = np.float32(np.asarray(thr).reshape(-1)[0])
+    K = h_r.shape[0]
+    matched = []
+    h_upd = []
+    h_new = []
+    for k in range(K):
+        m, hu, hn = _step_ref_one(
+            np.asarray(h_r[k], np.float32),
+            np.asarray(tbox_r[k], np.float32),
+            np.asarray(alive_r[k], np.float32),
+            np.asarray(te_gap_r[k], np.float32),
+            np.asarray(te_match[k], np.float32),
+            np.asarray(x[k], np.float32),
+            np.asarray(dbox[k], np.float32),
+            np.asarray(dvalid[k], np.float32),
+            thr, [np.asarray(p, np.float32) for p in params], table)
+        matched.append(m)
+        h_upd.append(hu)
+        h_new.append(hn)
+    return (np.stack(matched), np.stack(h_upd), np.stack(h_new))

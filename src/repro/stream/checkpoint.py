@@ -93,15 +93,28 @@ class TrackerCheckpoint:
                    [snap(t) for t in tracker.active],
                    tuple(int(c) for c in counters), float(seconds))
 
-    def restore(self, bank, params):
+    def restore(self, bank, params, options=None):
         """A live tracker continuing exactly from this state (the same
-        construction path ``executor._RunContext`` uses)."""
+        construction path ``executor._RunContext`` uses).  ``options``
+        (an ``ExecutorOptions`` or anything with ``device_assign`` /
+        ``device_tracker`` attributes) picks the execution flavor — a
+        scheduling choice, so a stream checkpointed under one flavor
+        resumes bit-identically under any other."""
         if self.kind == "recurrent":
             if bank.tracker_params is None:
                 raise ValueError("recurrent checkpoint needs a bank "
                                  "with tracker_params")
-            tracker = RecurrentTracker(bank.cfg.tracker,
-                                       bank.tracker_params)
+            if getattr(options, "device_tracker", False):
+                from repro.core.tracker import DeviceTracker
+                tracker = DeviceTracker(bank.cfg.tracker,
+                                        bank.tracker_params)
+            else:
+                assign = "device" \
+                    if getattr(options, "device_assign", False) \
+                    else "host"
+                tracker = RecurrentTracker(bank.cfg.tracker,
+                                           bank.tracker_params,
+                                           assign=assign)
             tracker._last_frame = self.last_frame
 
             def wake(s: TrackState):

@@ -72,6 +72,11 @@ class AppendReport:
     rows_delivered: int = 0     # rows newly delivered to the index
     sealed: bool = False
     delta: Optional[WatermarkDelta] = None
+    # per-stage executor profile for this segment (RunResult pass-
+    # throughs): stage -> {"wall": s, "process": s}, and device
+    # dispatch counts per stage
+    stage_seconds: Optional[Dict[str, Dict[str, float]]] = None
+    dispatches: Optional[Dict[str, int]] = None
 
 
 @dataclass
@@ -171,7 +176,8 @@ class SegmentIngestor:
         state (cheap path); otherwise roll back: replay the
         checkpointed tracker's visible tracks into a fresh index and
         re-materialize the store at the checkpoint's watermark."""
-        tracker = ckpt.restore(self.store.bank, self.store.params)
+        tracker = ckpt.restore(self.store.bank, self.store.params,
+                               self.options)
         if ckpt.watermark == packed.watermark:
             return _OpenClip(
                 clip, tracker, ckpt.cursor, ckpt.watermark,
@@ -196,7 +202,9 @@ class SegmentIngestor:
         """Same construction every other execution path does — built
         here so the instance can be carried across segment runs."""
         from repro.core.pipeline import make_tracker
-        return make_tracker(self.store.bank, self.store.params)
+        return make_tracker(self.store.bank, self.store.params,
+                            device_assign=self.options.device_assign,
+                            device_tracker=self.options.device_tracker)
 
     def watermark(self, clip: Clip) -> int:
         with self._lock:
@@ -265,7 +273,9 @@ class SegmentIngestor:
                 seconds=result.seconds, store_seconds=store_seconds,
                 rows_total=len(packed.rows),
                 rows_delivered=delta.rows_delivered,
-                sealed=sealed, delta=delta)
+                sealed=sealed, delta=delta,
+                stage_seconds=result.stage_seconds,
+                dispatches=result.dispatches)
             if self.service is not None:
                 t_sq = time.perf_counter()
                 self.service.notify_append(clip, packed, delta)

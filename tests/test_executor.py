@@ -12,8 +12,8 @@ from repro.core import pipeline as pl
 from repro.core import tuner as tuner_mod
 from repro.core.executor import (DEFAULT_CHUNK, ClipExecutor,
                                  DecodePool, ExecutorOptions,
-                                 effective_chunk, run_clip_streamed,
-                                 run_clips)
+                                 TrackBroker, effective_chunk,
+                                 run_clip_streamed, run_clips)
 from repro.core.proxy import ProxyModel
 from repro.core.tracker import init_tracker
 from repro.core.train_models import train_detector
@@ -317,6 +317,92 @@ def test_executor_segment_resume_hooks(exec_bank):
     assert len(ref.tracks) == len(r2.tracks)
     for a, b in zip(ref.tracks, r2.tracks):
         np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Device-resident TRACK: per-step device assignment, chunk-scan tracker,
+# cross-stream track batching
+# ---------------------------------------------------------------------------
+
+def test_executor_stage_seconds_and_dispatches(exec_bank):
+    """RunResult carries per-stage wall/process seconds and dispatch
+    counts for every named stage, and they are internally consistent
+    (non-negative, process <= a generous multiple of wall)."""
+    bank, clips, res, th = exec_bank
+    params = _params(bank, res, th, tracker="recurrent", chunk_size=7)
+    r = run_clip_streamed(bank, params, clips[0])
+    assert r.stage_seconds is not None
+    assert set(r.stage_seconds) == {"decode", "proxy", "detect", "track"}
+    for s, d in r.stage_seconds.items():
+        assert d["wall"] >= 0.0 and d["process"] >= 0.0, (s, d)
+    assert r.dispatches is not None
+    assert set(r.dispatches) == {"proxy", "detect", "track"}
+    assert r.dispatches["proxy"] > 0
+    assert r.dispatches["track"] > 0
+
+
+def test_executor_device_assign_roundtrip(exec_bank):
+    """ExecutorOptions(device_assign=True) routes the recurrent
+    tracker's per-step association through the fused track-step kernel
+    and reproduces the host path bit-exactly; the flag round-trips to
+    the tracker and the device steps are counted."""
+    bank, clips, res, th = exec_bank
+    params = _params(bank, res, th, tracker="recurrent", chunk_size=7)
+    for clip in clips:
+        ref = run_clip_streamed(bank, params, clip)
+        ex = ClipExecutor(bank, params,
+                          ExecutorOptions(device_assign=True))
+        run = ex.start(clip)
+        assert getattr(run.ctx.tracker, "assign", None) == "device"
+        dev = ex.finish(run)
+        _assert_same(ref, dev)
+        # every chunk embeds once; device steps add per-frame dispatches
+        assert dev.dispatches["track"] > ref.dispatches["track"]
+
+
+@pytest.mark.parametrize("chunk", [1, 16])
+def test_executor_device_tracker_equivalence(exec_bank, chunk):
+    """device_tracker=True executes whole chunks as one scan dispatch
+    and stays bit-identical to the host tracker for any chunking."""
+    bank, clips, res, th = exec_bank
+    params = _params(bank, res, th, tracker="recurrent",
+                     chunk_size=chunk)
+    for clip in clips:
+        ref = run_clip_streamed(bank, params, clip)
+        dev = run_clip_streamed(bank, params, clip,
+                                ExecutorOptions(device_tracker=True))
+        _assert_same(ref, dev)
+
+
+def test_track_broker_multi_stream_bit_identical(exec_bank):
+    """Two concurrent streams sharing a TrackBroker: per-frame device
+    track steps coalesce into batched dispatches, results stay
+    bit-identical per stream, and the broker's ledger accounts for
+    every step."""
+    import threading
+    bank, clips, res, th = exec_bank
+    params = _params(bank, res, th, tracker="recurrent", chunk_size=7)
+    broker = TrackBroker(linger_ms=2.0)
+    opts = ExecutorOptions(device_assign=True, track_broker=broker)
+    ex = ClipExecutor(bank, params, opts)
+    out = [None] * len(clips)
+
+    def run(i):
+        out[i] = ex.run(clips[i])
+
+    ts = [threading.Thread(target=run, args=(i,))
+          for i in range(len(clips))]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    broker.close()
+    for i, clip in enumerate(clips):
+        _assert_same(run_clip_streamed(bank, params, clip), out[i])
+    assert 0 < broker.dispatches <= broker.steps_in
+    # one fill entry per dispatch; their sum is every step admitted
+    assert len(broker.stream_fill) == broker.dispatches
+    assert sum(broker.stream_fill) == broker.steps_in
 
 
 # ---------------------------------------------------------------------------

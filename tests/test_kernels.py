@@ -269,3 +269,74 @@ def test_assign(K, N):
         r, c = scipy_opt.linear_sum_assignment(costs[k])
         np.testing.assert_allclose(
             costs[k][np.arange(N), ref[k]].sum(), costs[k][r, c].sum())
+
+
+def _track_step_operands(rng, K, Q, H, e, M):
+    """Random track-step operands honoring the slot contract: live
+    tracks and valid detections are PREFIXES, te gaps are integers,
+    boxes live in roughly world units."""
+    def g(*s):
+        return rng.standard_normal(s).astype(np.float32)
+
+    params = {
+        "det_proj/w": g(e + 6, e) * 0.5, "det_proj/b": g(e) * 0.1,
+        "gru/wz": g(e + H, H) * 0.5, "gru/wr": g(e + H, H) * 0.5,
+        "gru/wh": g(e + H, H) * 0.5,
+        "gru/bz": g(H) * 0.1, "gru/br": g(H) * 0.1, "gru/bh": g(H) * 0.1,
+        "match/w0": g(H + e + 6, M) * 0.5, "match/b0": g(M) * 0.1,
+        "match/w1": g(M, 1) * 0.5, "match/b1": g(1) * 0.1,
+    }
+    h_r = np.zeros((K, Q, H), np.float32)
+    tbox_r = np.zeros((K, Q, 4), np.float32)
+    alive_r = np.zeros((K, Q), np.float32)
+    te_gap_r = np.zeros((K, Q), np.float32)
+    te_match = np.zeros((K, Q), np.float32)
+    x = np.zeros((K, Q, e), np.float32)
+    dbox = np.zeros((K, Q, 4), np.float32)
+    dvalid = np.zeros((K, Q), np.float32)
+    for k in range(K):
+        T = int(rng.integers(0, Q + 1))
+        n = int(rng.integers(0, Q + 1))
+        h_r[k, :T] = g(T, H) * 0.5
+        tbox_r[k, :T] = rng.random((T, 4), np.float32)
+        alive_r[k, :T] = 1.0
+        te_gap_r[k, :T] = rng.integers(1, 9, T)
+        te_match[k] = float(rng.integers(0, 9))
+        x[k, :n] = g(n, e) * 0.5
+        dbox[k, :n] = rng.random((n, 4), np.float32)
+        dvalid[k, :n] = 1.0
+    thr = np.full((1, 1), 0.35, np.float32)
+    return (h_r, tbox_r, alive_r, te_gap_r, te_match, x, dbox,
+            dvalid), thr, params
+
+
+@pytest.mark.parametrize("K,Q,H,e,M", [(1, 8, 16, 8, 16),
+                                       (2, 16, 24, 16, 24),
+                                       (3, 8, 20, 12, 20)])
+def test_track_step(K, Q, H, e, M):
+    """Fused tracker step: Pallas interpret=True vs the vmapped-jnp
+    fallback vs the numpy oracle, BIT-exact (the fastmath contract),
+    plus the matched-column semantics (unique real columns, forbidden
+    pairs reported -1)."""
+    from repro.kernels.track_step import pack_params, track_step_ref
+    from repro.kernels.track_step.kernel import track_step_pallas
+    from repro.kernels.track_step.ops import LOG1P_TABLE_2D, _step_vmapped
+    rng = np.random.default_rng(1000 * K + Q + H + e)
+    arrs, thr, np_params = _track_step_operands(rng, K, Q, H, e, M)
+    packed = pack_params(np_params)
+    ref = track_step_ref(*arrs, thr, packed, LOG1P_TABLE_2D)
+    fb = _step_vmapped(*[jnp.asarray(a) for a in arrs],
+                       jnp.asarray(thr), *packed, LOG1P_TABLE_2D[:, 0])
+    pal = track_step_pallas(*[jnp.asarray(a) for a in arrs],
+                            jnp.asarray(thr), packed, LOG1P_TABLE_2D,
+                            interpret=True)
+    for r, f, p in zip(ref, fb, pal):
+        np.testing.assert_array_equal(np.asarray(f), r)
+        np.testing.assert_array_equal(np.asarray(p), r)
+    matched = ref[0]
+    alive, dvalid = arrs[2], arrs[7]
+    for k in range(K):
+        cols = matched[k][matched[k] >= 0]
+        assert len(set(cols.tolist())) == len(cols)       # no col reuse
+        assert np.all(dvalid[k][cols] > 0)                # real dets only
+        assert np.all(matched[k][alive[k] <= 0] == -1)    # dead rows

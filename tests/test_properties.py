@@ -209,3 +209,149 @@ def test_token_pipeline_skippable(step, n_shards):
                 for s in range(n_shards)]
         # shards are disjoint rows of a deterministic global batch
         assert all(r.shape == (8 // n_shards, 16) for r in rows)
+
+
+# ---------------------------------------------------------------------------
+# Fused track-step kernel invariants
+# ---------------------------------------------------------------------------
+
+def _track_operands(rng, K, Q, H, e, M):
+    """Random slot-contract operands (live tracks / valid dets as
+    prefixes, integer te gaps) plus the packed head parameters."""
+    def g(*s):
+        return rng.standard_normal(s).astype(np.float32)
+
+    np_params = {
+        "det_proj/w": g(e + 6, e) * 0.5, "det_proj/b": g(e) * 0.1,
+        "gru/wz": g(e + H, H) * 0.5, "gru/wr": g(e + H, H) * 0.5,
+        "gru/wh": g(e + H, H) * 0.5,
+        "gru/bz": g(H) * 0.1, "gru/br": g(H) * 0.1, "gru/bh": g(H) * 0.1,
+        "match/w0": g(H + e + 6, M) * 0.5, "match/b0": g(M) * 0.1,
+        "match/w1": g(M, 1) * 0.5, "match/b1": g(1) * 0.1,
+    }
+    arrs = [np.zeros((K, Q, H), np.float32), np.zeros((K, Q, 4), np.float32),
+            np.zeros((K, Q), np.float32), np.zeros((K, Q), np.float32),
+            np.zeros((K, Q), np.float32), np.zeros((K, Q, e), np.float32),
+            np.zeros((K, Q, 4), np.float32), np.zeros((K, Q), np.float32)]
+    for k in range(K):
+        T = int(rng.integers(0, Q + 1))
+        n = int(rng.integers(0, Q + 1))
+        arrs[0][k, :T] = g(T, H) * 0.5
+        arrs[1][k, :T] = rng.random((T, 4), np.float32)
+        arrs[2][k, :T] = 1.0
+        arrs[3][k, :T] = rng.integers(1, 9, T)
+        arrs[4][k] = float(rng.integers(0, 9))
+        arrs[5][k, :n] = g(n, e) * 0.5
+        arrs[6][k, :n] = rng.random((n, 4), np.float32)
+        arrs[7][k, :n] = 1.0
+    thr = np.full((1, 1), 0.35, np.float32)
+    return arrs, thr, np_params
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 3), st.sampled_from([8, 16]),
+       st.integers(0, 10 ** 6))
+def test_track_step_interpret_matches_ref(K, Q, seed):
+    """Pallas interpret == numpy oracle bit-for-bit on random shapes,
+    prefix occupancies and threshold-forbidden sentinel patterns."""
+    from repro.kernels.track_step import pack_params, track_step_ref
+    from repro.kernels.track_step.kernel import track_step_pallas
+    from repro.kernels.track_step.ops import LOG1P_TABLE_2D
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    H, e, M = 16, 8, 16             # fixed dims keep the jit cache warm
+    arrs, thr, np_params = _track_operands(rng, K, Q, H, e, M)
+    packed = pack_params(np_params)
+    ref = track_step_ref(*arrs, thr, packed, LOG1P_TABLE_2D)
+    pal = track_step_pallas(*[jnp.asarray(a) for a in arrs],
+                            jnp.asarray(thr), packed, LOG1P_TABLE_2D,
+                            interpret=True)
+    for r, p in zip(ref, pal):
+        np.testing.assert_array_equal(np.asarray(p), r)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_track_step_slot_padding_invariance(seed):
+    """Doubling the slot bucket Q (dead rows / invalid columns appended)
+    must not change ANY result on the original rows — the property the
+    assoc_side-restricted JV solve exists to guarantee (plain f32 JV is
+    NOT padding-invariant)."""
+    from repro.kernels.track_step import pack_params, track_step_ref
+    from repro.kernels.track_step.ops import LOG1P_TABLE_2D
+    rng = np.random.default_rng(seed)
+    K, Q, H, e, M = 2, 8, 16, 8, 16
+    arrs, thr, np_params = _track_operands(rng, K, Q, H, e, M)
+    packed = pack_params(np_params)
+    ref = track_step_ref(*arrs, thr, packed, LOG1P_TABLE_2D)
+    wide = []
+    for a in arrs:
+        pad = [(0, 0), (0, Q)] + [(0, 0)] * (a.ndim - 2)
+        wide.append(np.pad(a, pad))
+    ref2 = track_step_ref(*wide, thr, packed, LOG1P_TABLE_2D)
+    np.testing.assert_array_equal(ref2[0][:, :Q], ref[0])   # matched
+    np.testing.assert_array_equal(ref2[1][:, :Q], ref[1])   # h_upd
+    np.testing.assert_array_equal(ref2[2][:, :Q], ref[2])   # h_new
+
+
+# ---------------------------------------------------------------------------
+# DeviceTracker checkpoint round-trip
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(1, 9))
+def test_device_tracker_checkpoint_roundtrip(seed, split):
+    """Splitting a DeviceTracker run at any frame through a serialized
+    ``TrackerCheckpoint`` (NPZ-array round trip included) yields tracks
+    bit-identical to the unsplit run AND to the host tracker."""
+    import dataclasses
+    from types import SimpleNamespace
+    from repro.configs.multiscope import TrackerConfig
+    from repro.core.tracker import (DeviceTracker, RecurrentTracker,
+                                    init_tracker)
+    from repro.stream.checkpoint import TrackerCheckpoint
+
+    cfg = dataclasses.replace(TrackerConfig(), embed_dim=8, rnn_dim=12,
+                              match_hidden=12, crop=8, max_tracks=4)
+    params = init_tracker(cfg, seed=1)
+    rng = np.random.default_rng(seed)
+    B = 10
+    frames = np.zeros((B, 8, 8, 3), np.float32)
+    fids, dets, embeds = [], [], []
+    centers = rng.random((3, 2)).astype(np.float32)
+    emb_base = rng.standard_normal((3, cfg.embed_dim)).astype(np.float32)
+    for k in range(B):
+        n = int(rng.integers(0, 4))
+        ids = rng.permutation(3)[:n]
+        d = np.zeros((n, 5), np.float32)
+        em = np.zeros((n, cfg.embed_dim), np.float32)
+        for j, oid in enumerate(ids):
+            d[j, :2] = centers[oid] + 0.02 * k
+            d[j, 2:4] = 0.1
+            d[j, 4] = 0.9
+            em[j] = emb_base[oid] + 0.01 * k
+        fids.append(k)
+        dets.append(d)
+        embeds.append(em)
+
+    def run(tracker, lo, hi):
+        tracker.step_chunk(fids[lo:hi], dets[lo:hi], frames[lo:hi],
+                           embeds=embeds[lo:hi])
+        return tracker
+
+    host = run(RecurrentTracker(cfg, params), 0, B).result()
+    whole = run(DeviceTracker(cfg, params), 0, B).result()
+    t2 = run(DeviceTracker(cfg, params), 0, split)
+    ckpt = TrackerCheckpoint.capture(t2, split, split)
+    ckpt = TrackerCheckpoint.from_arrays(ckpt.to_arrays())
+    bank = SimpleNamespace(cfg=SimpleNamespace(tracker=cfg),
+                           tracker_params=params)
+    t3 = ckpt.restore(bank, None,
+                      SimpleNamespace(device_assign=False,
+                                      device_tracker=True))
+    assert isinstance(t3, DeviceTracker)
+    resumed = run(t3, split, B).result()
+    assert len(whole) == len(host) == len(resumed)
+    for a, b, c in zip(whole, host, resumed):
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(a, c)

@@ -145,6 +145,46 @@ def test_resume_across_ingestor_instances(stream_sys, tmp_path):
     _assert_packed_equal(ref, store2.get(clip))
 
 
+def test_device_tracker_ingest_and_resume(stream_sys, tmp_path):
+    """Live ingestion under ExecutorOptions(device_tracker=True): the
+    chunk-scan tracker seals bit-identically to the host batch ingest,
+    and a checkpoint written under the device flavor resumes in a NEW
+    ingestor running the HOST flavor (and vice versa) — the execution
+    flavor is a scheduling knob, never part of the stream's state."""
+    from repro.core.executor import ExecutorOptions
+    bank, thetas, clips = stream_sys
+    params = thetas["skip_heavy"]               # recurrent tracker
+    clip = clips[0]
+    ref = _batch_packed(bank, params, clip, tmp_path, "dev")
+    dev_opts = ExecutorOptions(device_tracker=True)
+    # whole-clip device ingest
+    live = TrackStore(str(tmp_path / "live_dev"), bank, params)
+    ing = SegmentIngestor(live, options=dev_opts)
+    ing.open(clip)
+    _assert_packed_equal(ref, ing.seal(clip))
+    # device -> host resume across instances
+    root = str(tmp_path / "live_dev_resume")
+    first = SegmentIngestor(TrackStore(root, bank, params),
+                            options=dev_opts)
+    first.open(clip)
+    first.append(clip, 13)                      # mid-gap boundary
+    store2 = TrackStore(root, bank, params)
+    second = SegmentIngestor(store2)            # host flavor
+    assert second.open(clip) == 13
+    second.append(clip, 48)                     # clamped, seals
+    _assert_packed_equal(ref, store2.get(clip))
+    # host -> device resume across instances
+    root3 = str(tmp_path / "live_host_resume")
+    h = SegmentIngestor(TrackStore(root3, bank, params))
+    h.open(clip)
+    h.append(clip, 13)
+    store3 = TrackStore(root3, bank, params)
+    third = SegmentIngestor(store3, options=dev_opts)
+    assert third.open(clip) == 13
+    third.append(clip, 48)
+    _assert_packed_equal(ref, store3.get(clip))
+
+
 def test_resume_rolls_back_to_stale_checkpoint(stream_sys, tmp_path):
     """checkpoint_every=2 leaves the store an append ahead of the
     sidecar (same state as a crash between materialize and checkpoint).
