@@ -1,0 +1,223 @@
+"""Perf-regression gate: fresh smoke bench runs vs committed baselines.
+
+Runs the three JSON-emitting benchmarks on the ``--smoke`` workload and
+compares each result against the committed baseline under
+``benchmarks/baselines/BENCH_<name>.json``.  Each bench runs in its own
+subprocess so every run pays its own jit warm-up: numbers stay
+comparable whether you run all three benches or a ``--bench`` subset
+(in one shared process, whichever bench ran first would absorb the
+compile cost and cold-start metrics like ``cold_ingest_fps`` would
+swing 4x on ordering alone).
+
+Checks:
+
+  * **bit-identity gates** — boolean fields that encode correctness
+    (tracks identical across engines, rows scanned exactly once,
+    indexed == scan, re-query after eviction identical...) must never
+    flip from their expected value.  Any flip fails the run regardless
+    of tolerances.
+  * **fps tolerances** — throughput metrics may not drop more than
+    ``--tol`` (default 20%) below the baseline.  Regression-direction
+    only: running FASTER than the baseline never fails.
+  * **workload context** — numeric comparison only applies when the
+    fresh run and the baseline describe the same workload (profile,
+    clip count, frames per clip, smoke flag).  A mismatch means the
+    baseline is stale, which is reported as a warning and skips the
+    fps check — bit-identity gates still apply.
+
+``--update`` regenerates the baselines in place (run it after an
+intentional perf change and commit the new JSON).
+
+    PYTHONPATH=src python -m benchmarks.bench_diff --smoke
+    PYTHONPATH=src python -m benchmarks.bench_diff --smoke --update
+
+Exit status 0 = all gates pass, 1 = regression (CI fails the job).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+from typing import Dict, List, Tuple
+
+BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
+BENCHES = ("pipeline", "stream", "query")
+
+# throughput metrics (dotted paths into the result dict), higher is
+# better for every one of them; timing *ratios* (speedups, sub-ms
+# medians) stay out — on the smoke workload those are jitter, not perf
+FPS_METRICS: Dict[str, List[str]] = {
+    "pipeline": ["fps_per_frame", "fps_chunked", "fps_streaming",
+                 "fps_streaming_device_tracker"],
+    "stream": ["append_fps"],
+    "query": ["cold_ingest_fps", "queries_per_second"],
+}
+
+# per-metric tolerance overrides for quantities built from sub-ms
+# measurements, where single-core scheduling noise swings far beyond
+# the default fps tolerance run to run
+METRIC_TOL: Dict[str, float] = {
+    "queries_per_second": 0.60,
+}
+
+# bit-identity gates: (path, expected value); any flip fails the run.
+# Only determinism invariants belong here — timing-shaped flags like
+# jit_entries_grew_after_warmup vary with broker coalescing and stay out
+GATES: Dict[str, List[Tuple[str, bool]]] = {
+    "pipeline": [("tracks_identical", True),
+                 ("device_tracks_identical", True)],
+    "stream": [("fleet.tracks_bit_identical", True),
+               ("rows_scanned_exactly_once", True),
+               ("standing_matches_adhoc_and_reference", True)],
+    "query": [("limit_query_identical_to_inline_scan", True),
+              ("index.indexed_equals_scan", True),
+              ("eviction.requery_identical", True)],
+}
+
+# workload fields that must match for fps numbers to be comparable
+WORKLOAD_KEYS = ("profile", "clips", "frames_per_clip",
+                 "segment_frames", "smoke")
+
+
+def _get(d, path: str):
+    for part in path.split("."):
+        if not isinstance(d, dict) or part not in d:
+            return None
+        d = d[part]
+    return d
+
+
+def _run_bench(name: str, smoke: bool) -> dict:
+    """Run one bench in a fresh subprocess and return its result dict.
+
+    A fresh interpreter per bench keeps jit caches cold for every run,
+    so cold-start metrics mean the same thing regardless of which
+    benches ran before (see the module docstring).
+    """
+    if name not in BENCHES:
+        raise ValueError(f"unknown bench {name!r}")
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    src = os.path.join(root, "src")
+    env["PYTHONPATH"] = (src + os.pathsep + env["PYTHONPATH"]
+                         if env.get("PYTHONPATH") else src)
+    fd, out = tempfile.mkstemp(prefix=f"bench_{name}_",
+                               suffix=".json")
+    os.close(fd)
+    try:
+        cmd = [sys.executable, "-m", f"benchmarks.{name}_bench",
+               "--out", out]
+        if smoke:
+            cmd.append("--smoke")
+        subprocess.run(cmd, cwd=root, env=env, check=True)
+        with open(out) as f:
+            return json.load(f)
+    finally:
+        os.unlink(out)
+
+
+def _workload_ctx(result: dict) -> dict:
+    w = result.get("workload", {})
+    return {k: w.get(k) for k in WORKLOAD_KEYS}
+
+
+def compare(name: str, fresh: dict, baseline: dict,
+            tol: float) -> Tuple[List[str], List[str]]:
+    """(failures, warnings) for one bench's fresh-vs-baseline pair."""
+    fails: List[str] = []
+    warns: List[str] = []
+    for path, want in GATES[name]:
+        got = _get(fresh, path)
+        if got is None:
+            fails.append(f"{name}: bit-identity gate {path} missing "
+                         f"from the fresh run")
+        elif bool(got) != want:
+            fails.append(f"{name}: bit-identity gate {path} flipped "
+                         f"to {got} (want {want})")
+    if _workload_ctx(fresh) != _workload_ctx(baseline):
+        warns.append(f"{name}: baseline workload "
+                     f"{_workload_ctx(baseline)} != fresh "
+                     f"{_workload_ctx(fresh)} — stale baseline, "
+                     f"fps comparison skipped (rerun --update)")
+        return fails, warns
+    for m in FPS_METRICS[name]:
+        base_v = _get(baseline, m)
+        got = _get(fresh, m)
+        if base_v is None:
+            warns.append(f"{name}: baseline lacks {m}, skipped")
+            continue
+        if got is None:
+            fails.append(f"{name}: fps metric {m} missing from the "
+                         f"fresh run")
+            continue
+        m_tol = max(tol, METRIC_TOL.get(m, tol))
+        if base_v > 0 and got < base_v * (1.0 - m_tol):
+            fails.append(f"{name}: {m} regressed {base_v:.2f} -> "
+                         f"{got:.2f} fps (> {m_tol:.0%} drop)")
+        else:
+            warns.append(f"{name}: {m} {base_v:.2f} -> {got:.2f} ok")
+    return fails, warns
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="compare on the smoke workload (the only "
+                         "mode with committed baselines)")
+    ap.add_argument("--bench", action="append", choices=BENCHES,
+                    help="restrict to one bench (repeatable; "
+                         "default all)")
+    ap.add_argument("--baseline-dir", default=BASELINE_DIR)
+    ap.add_argument("--tol", type=float, default=0.20,
+                    help="max allowed fps drop vs baseline "
+                         "(default 0.20)")
+    ap.add_argument("--update", action="store_true",
+                    help="regenerate the baselines instead of "
+                         "comparing")
+    args = ap.parse_args(argv)
+    if not args.smoke:
+        ap.error("only --smoke comparisons are supported (the "
+                 "committed baselines are smoke-workload runs)")
+    benches = args.bench or list(BENCHES)
+
+    os.makedirs(args.baseline_dir, exist_ok=True)
+    failures: List[str] = []
+    for name in benches:
+        path = os.path.join(args.baseline_dir, f"BENCH_{name}.json")
+        print(f"[bench_diff] running {name} (smoke)...", flush=True)
+        fresh = _run_bench(name, smoke=True)
+        if args.update:
+            with open(path, "w") as f:
+                json.dump(fresh, f, indent=2)
+                f.write("\n")
+            print(f"[bench_diff] wrote baseline {path}")
+            continue
+        if not os.path.exists(path):
+            failures.append(f"{name}: no committed baseline at {path} "
+                            f"(run --update and commit it)")
+            continue
+        with open(path) as f:
+            baseline = json.load(f)
+        fails, warns = compare(name, fresh, baseline, args.tol)
+        for w in warns:
+            print(f"[bench_diff]   {w}")
+        for msg in fails:
+            print(f"[bench_diff]   FAIL {msg}")
+        failures.extend(fails)
+
+    if args.update:
+        return 0
+    if failures:
+        print(f"[bench_diff] {len(failures)} regression(s):")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    print("[bench_diff] all gates pass")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

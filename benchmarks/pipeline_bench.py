@@ -238,11 +238,17 @@ def stream_scaling(bank, params, clips, stream_counts=(1, 4, 16),
 
 
 def run(out_path: str | None = DEFAULT_OUT, reps: int = 7,
-        smoke: bool = False) -> dict:
+        smoke: bool = False, trace_out: str | None = None) -> dict:
+    from repro import obs
     from repro.core import pipeline as pl
     from repro.core.detector import detect_jit_entries
     from repro.core.engine import DEFAULT_CHUNK, run_clip_chunked
     from repro.core.executor import ExecutorOptions, run_clip_streamed
+
+    obs.REGISTRY.reset()
+    obs.TRACER.clear()
+    if trace_out:
+        obs.enable()
 
     if smoke:
         bank, params, clips = build_workload(n_clips=2, n_frames=24,
@@ -309,8 +315,7 @@ def run(out_path: str | None = DEFAULT_OUT, reps: int = 7,
     # into the `stage_seconds` block
     dev_opts = ExecutorOptions(device_tracker=True)
     fps_dev_all, device_identical = [], True
-    stage_wall = {}
-    stage_proc = {}
+    dev_blocks = []
     dispatch_sum = {}
     for _ in range(max(2, reps // 2)):
         s_host = s_dev = frames = 0.0
@@ -323,18 +328,21 @@ def run(out_path: str | None = DEFAULT_OUT, reps: int = 7,
             device_identical &= len(ra.tracks) == len(rd.tracks) and \
                 all(np.array_equal(x, y)
                     for x, y in zip(ra.tracks, rd.tracks))
-            for st, d in rd.stage_seconds.items():
-                stage_wall[st] = stage_wall.get(st, 0.0) + d["wall"]
-                stage_proc[st] = stage_proc.get(st, 0.0) + d["process"]
+            if smoke:
+                obs.assert_stage_sane(rd.stage_seconds)
+            dev_blocks.append(rd.stage_seconds)
             for k, v in rd.dispatches.items():
                 dispatch_sum[k] = dispatch_sum.get(k, 0) + v
         fps_dev_all.append(frames / s_dev)
     assert device_identical, \
         "device tracker diverged from the host tracker"
+    merged = obs.merge_stage_blocks(dev_blocks)
+    if smoke:
+        obs.assert_stage_sane(merged)
     stage_seconds = {
-        st: {"wall": round(stage_wall[st], 4),
-             "process": round(stage_proc[st], 4)}
-        for st in stage_wall}
+        st: {"wall": round(d["wall"], 4),
+             "process": round(d["process"], 4)}
+        for st, d in merged.items()}
 
     scaling = stream_scaling(bank, params, clips,
                              stream_counts=(1, 4) if smoke else (1, 4, 16))
@@ -388,7 +396,14 @@ def run(out_path: str | None = DEFAULT_OUT, reps: int = 7,
         "detector_jit_entries": detect_jit_entries(),
         "jit_entries_grew_after_warmup":
             detect_jit_entries() != entries_warm,
+        # registry snapshot: counters/gauges flat, histograms summarized
+        # — the same keys bench_diff.py reads for its tolerance gates
+        "obs": obs.REGISTRY.snapshot(),
     }
+    if trace_out:
+        n_spans = obs.export_jsonl(trace_out)
+        result["trace"] = {"path": trace_out, "spans": n_spans}
+        obs.disable()
     if out_path:
         with open(out_path, "w") as f:
             json.dump(result, f, indent=2)
@@ -407,11 +422,15 @@ def main(argv=None) -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny workload, no file written unless --out "
                          "is explicitly set (CI correctness gate)")
+    ap.add_argument("--trace-out", default=None,
+                    help="enable tracing and write JSON-lines spans "
+                         "here (tracing is off otherwise)")
     args = ap.parse_args(argv)
     # default=None keeps an explicit `--out <default path>` detectable
     out = args.out if args.out is not None else \
         (None if args.smoke else DEFAULT_OUT)
-    r = run(out, reps=args.reps, smoke=args.smoke)
+    r = run(out, reps=args.reps, smoke=args.smoke,
+            trace_out=args.trace_out)
     print(f"per-frame engine : {r['fps_per_frame']:8.1f} frames/sec")
     print(f"chunked engine   : {r['fps_chunked']:8.1f} frames/sec")
     print(f"streaming engine : {r['fps_streaming']:8.1f} frames/sec"
@@ -439,6 +458,8 @@ def main(argv=None) -> None:
           f"{not r['jit_entries_grew_after_warmup']})")
     if out:
         print(f"wrote {out}")
+    if args.trace_out:
+        print(f"wrote {r['trace']['spans']} spans to {args.trace_out}")
 
 
 if __name__ == "__main__":

@@ -50,9 +50,16 @@ WANT = 8
 
 
 def run(out_path: str | None = DEFAULT_OUT, reps: int = 30,
-        clients: int = 4, smoke: bool = False) -> dict:
+        clients: int = 4, smoke: bool = False,
+        trace_out: str | None = None) -> dict:
     from benchmarks.pipeline_bench import build_workload
+    from repro import obs
     from repro.query import QueryService, TrackStore
+
+    obs.REGISTRY.reset()
+    obs.TRACER.clear()
+    if trace_out:
+        obs.enable()
 
     if smoke:
         bank, params, clips = build_workload(n_clips=2, n_frames=24,
@@ -73,7 +80,7 @@ def run(out_path: str | None = DEFAULT_OUT, reps: int = 30,
 
     try:
         return _measure(det, store, service, clips, reps, clients,
-                        smoke, spacing, params, out_path)
+                        smoke, spacing, params, out_path, trace_out)
     finally:
         import shutil
         shutil.rmtree(root, ignore_errors=True)
@@ -89,7 +96,8 @@ def _median_ms(service, q, clips, reps, use_index=True) -> float:
 
 
 def _measure(det, store, service, clips, reps, clients, smoke, spacing,
-             params, out_path) -> dict:
+             params, out_path, trace_out=None) -> dict:
+    from repro import obs
     from repro.query import Query, StoreBudget, TimeRange
     from repro.query.ref import reference_limit_scan
 
@@ -237,7 +245,15 @@ def _measure(det, store, service, clips, reps, clients, smoke, spacing,
             "requery_reingest_detector_calls": int(reingest_calls),
             "requery_identical": True,          # asserted above
         },
+        # the service's own rollup: per-dataset latency breakdown plus
+        # the skip/index/scan clip counters folded over every query run
+        "latency_report": service.latency_report(),
+        "obs": obs.REGISTRY.snapshot(),
     }
+    if trace_out:
+        n_spans = obs.export_jsonl(trace_out)
+        result["trace"] = {"path": trace_out, "spans": n_spans}
+        obs.disable()
     if out_path:
         with open(out_path, "w") as f:
             json.dump(result, f, indent=2)
@@ -263,9 +279,13 @@ def main(argv=None) -> None:
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny workload (CI correctness gate)")
+    ap.add_argument("--trace-out", default=None,
+                    help="enable tracing and write JSON-lines spans "
+                         "here (tracing is off otherwise)")
     args = ap.parse_args(argv)
     out = args.out if args.out is not None else DEFAULT_OUT
-    r = run(out, reps=args.reps, clients=args.clients, smoke=args.smoke)
+    r = run(out, reps=args.reps, clients=args.clients, smoke=args.smoke,
+            trace_out=args.trace_out)
     print(f"cold ingest      : {r['cold_ingest_seconds']:8.2f}s "
           f"({r['cold_ingest_fps']:.1f} fps)")
     for name, ms in r["warm_query_ms"].items():
@@ -287,8 +307,13 @@ def main(argv=None) -> None:
           f"(asserted 0)")
     print(f"identical to inline scan: "
           f"{r['limit_query_identical_to_inline_scan']}")
+    for ds, blk in r["latency_report"].get("datasets", {}).items():
+        print(f"dataset {ds:10s}: {blk['queries']} queries, "
+              f"scan median {blk['scan_seconds_median'] * 1e3:.3f} ms")
     if out:
         print(f"wrote {out}")
+    if args.trace_out:
+        print(f"wrote {r['trace']['spans']} spans to {args.trace_out}")
 
 
 if __name__ == "__main__":

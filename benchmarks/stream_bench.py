@@ -51,11 +51,18 @@ DEFAULT_OUT = "BENCH_stream.json"
 REGION_TOP = (0.0, 0.0, 1.0, 0.5)
 
 
-def run(out_path: str | None = DEFAULT_OUT, smoke: bool = False) -> dict:
+def run(out_path: str | None = DEFAULT_OUT, smoke: bool = False,
+        trace_out: str | None = None) -> dict:
     from benchmarks.pipeline_bench import build_workload
+    from repro import obs
     from repro.query import Query, QueryService, TrackStore
     from repro.query.ref import reference_query
     from repro.stream import SegmentIngestor, StandingQuery
+
+    obs.REGISTRY.reset()
+    obs.TRACER.clear()
+    if trace_out:
+        obs.enable()
 
     if smoke:
         bank, params, clips = build_workload(n_clips=3, n_frames=24,
@@ -72,7 +79,7 @@ def run(out_path: str | None = DEFAULT_OUT, smoke: bool = False) -> dict:
     root = tempfile.mkdtemp(prefix="stream_bench_")
     try:
         return _measure(bank, params, clips, segment, n_frames, root,
-                        smoke, out_path,
+                        smoke, out_path, trace_out,
                         Query, QueryService, TrackStore,
                         reference_query, SegmentIngestor, StandingQuery)
     finally:
@@ -99,6 +106,7 @@ def _fleet_lag(bank, params, clips, segment, root, smoke,
     import os
     import threading
 
+    from repro import obs
     from repro.core.executor import (BatchBroker, ExecutorOptions,
                                      TrackBroker)
 
@@ -172,12 +180,9 @@ def _fleet_lag(bank, params, clips, segment, root, smoke,
             broker.dispatches if broker is not None
             else detector.dispatches)
         # per-stage utilization summed over every append in the fleet
-        stage = {}
-        for r in flat:
-            for st, d in (r.stage_seconds or {}).items():
-                e = stage.setdefault(st, {"wall": 0.0, "process": 0.0})
-                e["wall"] += d["wall"]
-                e["process"] += d["process"]
+        stage = obs.merge_stage_blocks(r.stage_seconds for r in flat)
+        if smoke:
+            obs.assert_stage_sane(stage)
         out[f"stage_seconds_broker_{mode}"] = {
             st: {k: round(v, 4) for k, v in d.items()}
             for st, d in stage.items()}
@@ -199,9 +204,11 @@ def _fleet_lag(bank, params, clips, segment, root, smoke,
 
 
 def _measure(bank, params, clips, segment, n_frames, root, smoke,
-             out_path, Query, QueryService, TrackStore,
+             out_path, trace_out, Query, QueryService, TrackStore,
              reference_query, SegmentIngestor, StandingQuery) -> dict:
     import os
+
+    from repro import obs
 
     store = TrackStore(os.path.join(root, "live"), bank, params)
     service = QueryService(store)
@@ -267,6 +274,13 @@ def _measure(bank, params, clips, segment, n_frames, root, smoke,
             assert acc.aggregates == adhoc.aggregates, \
                 (si, acc.aggregates, adhoc.aggregates)
     assert all(r.sealed for r in reports[-len(clips):])
+
+    # per-stage executor seconds summed over every append of the
+    # single-stream phase (the fleet phase reports its own blocks)
+    stage_totals = obs.merge_stage_blocks(
+        r.stage_seconds for r in reports)
+    if smoke:
+        obs.assert_stage_sane(stage_totals)
 
     # -- exactness counters ---------------------------------------------------
     total_rows = sum(len(store.get(c).rows) for c in clips)
@@ -335,8 +349,16 @@ def _measure(bank, params, clips, segment, n_frames, root, smoke,
         "rows_scanned_exactly_once": True,      # asserted above
         "standing_matches_adhoc_and_reference": True,
         "open_clips_during_adhoc_measure": len(clips),
+        "stage_seconds": {
+            st: {k: round(v, 4) for k, v in d.items()}
+            for st, d in stage_totals.items()},
         "fleet": fleet,
+        "obs": obs.REGISTRY.snapshot(),
     }
+    if trace_out:
+        n_spans = obs.export_jsonl(trace_out)
+        result["trace"] = {"path": trace_out, "spans": n_spans}
+        obs.disable()
     if out_path:
         with open(out_path, "w") as f:
             json.dump(result, f, indent=2)
@@ -356,9 +378,12 @@ def main(argv=None) -> None:
                     help=f"output JSON path (default {DEFAULT_OUT})")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny workload (CI correctness gate)")
+    ap.add_argument("--trace-out", default=None,
+                    help="enable tracing and write JSON-lines spans "
+                         "here (tracing is off otherwise)")
     args = ap.parse_args(argv)
     out = args.out if args.out is not None else DEFAULT_OUT
-    r = run(out, smoke=args.smoke)
+    r = run(out, smoke=args.smoke, trace_out=args.trace_out)
     a = r["append_ms"]
     print(f"append latency   : {a['median']:8.2f} ms median "
           f"(p95 {a['p95']:.2f}; executor {a['executor_median']:.2f} "
@@ -389,6 +414,8 @@ def main(argv=None) -> None:
           f"(fill {fl['track_fill_mean']:.2f})")
     if out:
         print(f"wrote {out}")
+    if args.trace_out:
+        print(f"wrote {r['trace']['spans']} spans to {args.trace_out}")
 
 
 if __name__ == "__main__":

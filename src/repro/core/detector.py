@@ -226,8 +226,12 @@ class Detector:
         self.params = params if params is not None else init_detector(
             arch, seed)
         # dispatch counter: the track store's re-ingest guarantee
-        # ("zero detector calls on a warm split") is asserted against it
+        # ("zero detector calls on a warm split") is asserted against it.
+        # Kept a plain per-instance int (benches reset it directly); each
+        # increment also folds into the global obs registry.
         self.dispatches = 0
+        from repro.obs.metrics import REGISTRY
+        self._m_dispatches = REGISTRY.counter("detector.dispatches")
 
     def detect_batch(self, frames: np.ndarray, conf: float,
                      origins=None, scales=None, max_dets: int = 64,
@@ -238,6 +242,7 @@ class Detector:
         decode_detections); default full frame.  n_valid: decode only the
         first n_valid rows (the rest are bucket padding)."""
         self.dispatches += 1
+        self._m_dispatches.inc()
         scores, boxes = _detect_scores(self.params,
                                        jnp.asarray(frames), self.arch)
         scores = np.asarray(scores)

@@ -80,6 +80,8 @@ from repro.core.tracker import RecurrentTracker, embed_dets_chunk
 from repro.core.windows import (ChunkPlan, full_frame_plan, plan_chunk,
                                 plan_from_mapped)
 from repro.data.video_synth import Clip
+from repro.obs.metrics import REGISTRY, RunProfile, drift_enabled
+from repro.obs.trace import TRACER
 
 DEFAULT_CHUNK = 16     # frames per chunk (B) when θ does not say
 
@@ -229,7 +231,7 @@ class _BrokerHandle:
 
 class _BrokerRequest:
     __slots__ = ("handle", "detector", "frames", "conf", "origins",
-                 "scales", "n", "done", "result", "error")
+                 "scales", "n", "t_enq", "done", "result", "error")
 
     def __init__(self, handle, detector, frames, conf, origins, scales,
                  n: int):
@@ -240,6 +242,7 @@ class _BrokerRequest:
         self.origins = list(origins)
         self.scales = list(scales)
         self.n = n
+        self.t_enq = 0.0                # monotonic at enqueue
         self.done = False
         self.result: Optional[List[np.ndarray]] = None
         self.error: Optional[BaseException] = None
@@ -296,6 +299,12 @@ class BatchBroker:
         self.dispatches = 0
         self.windows_in = 0
         self.batch_fill: List[float] = []
+        # registry mirrors (cached: registry reset zeroes in place)
+        self._m_disp = REGISTRY.counter("broker.detect.dispatches")
+        self._m_units = REGISTRY.counter("broker.detect.units_in")
+        self._m_fill = REGISTRY.histogram("broker.detect.fill")
+        self._m_wait = REGISTRY.histogram("broker.detect.linger_wait_ms")
+        self._m_depth = REGISTRY.gauge("broker.detect.queue_depth")
 
     # -- stream side ----------------------------------------------------------
 
@@ -353,10 +362,12 @@ class BatchBroker:
             # itself before waiting, and every other waiter re-checks at
             # its own linger deadline — waking 15 peers per enqueue on a
             # single core is pure context-switch churn
+            req.t_enq = time.monotonic()
             self._pending.append(req)
             self._waiting += 1
+            self._m_depth.set(len(self._pending))
             try:
-                deadline = time.monotonic() + self.linger
+                deadline = req.t_enq + self.linger
                 while not req.done:
                     if self._pending and (
                             self._should_flush()
@@ -405,9 +416,24 @@ class BatchBroker:
             self.dispatches += 1
             self.windows_in += total
             self.batch_fill.append(total / bucket)
+            self._m_disp.inc()
+            self._m_units.inc(total)
+            self._m_fill.observe(total / bucket)
 
     def _flush(self, batch: List[_BrokerRequest]
                ) -> List[Tuple[int, int]]:
+        # how long the oldest rider lingered before this flush fired
+        wait_ms = max(0.0, (time.monotonic()
+                            - min(r.t_enq for r in batch)) * 1e3)
+        self._m_wait.observe(wait_ms)
+        fsp = None
+        if TRACER.enabled:
+            fsp = TRACER.open(
+                "broker.detect.flush", "broker",
+                args={"requests": len(batch),
+                      "streams": len({id(r.handle) for r in batch}),
+                      "windows": sum(r.n for r in batch),
+                      "wait_ms": round(wait_ms, 3)})
         groups: Dict[tuple, List[_BrokerRequest]] = {}
         for req in batch:
             key = (id(req.detector), float(req.conf),
@@ -415,12 +441,24 @@ class BatchBroker:
             groups.setdefault(key, []).append(req)
         stats: List[Tuple[int, int]] = []
         for reqs in groups.values():
+            d0 = time.perf_counter_ns() if fsp is not None else 0
             try:
                 stats.append(self._dispatch(reqs))
             except BaseException as exc:
                 for r in reqs:
                     r.error = exc
                     r.done = True
+            else:
+                if fsp is not None:
+                    total, bucket = stats[-1]
+                    TRACER.emit(
+                        "broker.detect.dispatch", "broker", ts=d0,
+                        dur=time.perf_counter_ns() - d0, parent=fsp.sid,
+                        args={"windows": total, "bucket": bucket,
+                              "streams": len(reqs),
+                              "fill": round(total / bucket, 3)})
+        if fsp is not None:
+            TRACER.close(fsp)
         return stats
 
     def _dispatch(self, reqs: List[_BrokerRequest]) -> Tuple[int, int]:
@@ -491,7 +529,7 @@ class _TrackHandle:
 
 class _TrackRequest:
     __slots__ = ("handle", "arrs", "thr", "params", "table", "key",
-                 "done", "result", "error")
+                 "t_enq", "done", "result", "error")
 
     def __init__(self, handle, arrs, thr, params, table, key):
         self.handle = handle
@@ -500,6 +538,7 @@ class _TrackRequest:
         self.params = params
         self.table = table
         self.key = key                  # flush-group key
+        self.t_enq = 0.0                # monotonic at enqueue
         self.done = False
         self.result = None
         self.error: Optional[BaseException] = None
@@ -542,6 +581,12 @@ class TrackBroker:
         self.dispatches = 0
         self.steps_in = 0
         self.stream_fill: List[int] = []
+        # registry mirrors (cached: registry reset zeroes in place)
+        self._m_disp = REGISTRY.counter("broker.track.dispatches")
+        self._m_units = REGISTRY.counter("broker.track.units_in")
+        self._m_fill = REGISTRY.histogram("broker.track.fill")
+        self._m_wait = REGISTRY.histogram("broker.track.linger_wait_ms")
+        self._m_depth = REGISTRY.gauge("broker.track.queue_depth")
 
     # -- stream side ----------------------------------------------------------
 
@@ -592,10 +637,12 @@ class TrackBroker:
                 raise RuntimeError("TrackBroker is closed")
             if not handle.active:
                 raise BrokerCancelled("handle already closed")
+            req.t_enq = time.monotonic()
             self._pending.append(req)
             self._waiting += 1
+            self._m_depth.set(len(self._pending))
             try:
-                deadline = time.monotonic() + self.linger
+                deadline = req.t_enq + self.linger
                 while not req.done:
                     if self._pending and (
                             self._should_flush()
@@ -635,19 +682,41 @@ class TrackBroker:
             self.dispatches += 1
             self.steps_in += k
             self.stream_fill.append(k)
+            self._m_disp.inc()
+            self._m_units.inc(k)
+            self._m_fill.observe(float(k))
 
     def _flush(self, batch: List[_TrackRequest]) -> List[int]:
+        wait_ms = max(0.0, (time.monotonic()
+                            - min(r.t_enq for r in batch)) * 1e3)
+        self._m_wait.observe(wait_ms)
+        fsp = None
+        if TRACER.enabled:
+            fsp = TRACER.open(
+                "broker.track.flush", "broker",
+                args={"requests": len(batch),
+                      "streams": len({id(r.handle) for r in batch}),
+                      "wait_ms": round(wait_ms, 3)})
         groups: Dict[tuple, List[_TrackRequest]] = {}
         for req in batch:
             groups.setdefault(req.key, []).append(req)
         stats: List[int] = []
         for reqs in groups.values():
+            d0 = time.perf_counter_ns() if fsp is not None else 0
             try:
                 stats.append(self._dispatch(reqs))
             except BaseException as exc:
                 for r in reqs:
                     r.error = exc
                     r.done = True
+            else:
+                if fsp is not None:
+                    TRACER.emit(
+                        "broker.track.dispatch", "broker", ts=d0,
+                        dur=time.perf_counter_ns() - d0, parent=fsp.sid,
+                        args={"streams": len(reqs)})
+        if fsp is not None:
+            TRACER.close(fsp)
         return stats
 
     def _dispatch(self, reqs: List[_TrackRequest]) -> int:
@@ -750,20 +819,26 @@ class _RunContext:
         self.n_windows = 0
         self.full_frames = 0
         self.skipped = 0
-        # per-stage profile (wall + thread-CPU seconds, device dispatch
-        # counts); decode may run on several workers, hence the lock
-        self.stage_wall = {s: 0.0 for s in STAGES}
-        self.stage_proc = {s: 0.0 for s in STAGES}
-        self._stage_lock = threading.Lock()
-        self.disp_proxy = 0
-        self.disp_detect = 0
-        self.disp_embed = 0           # chunk crop-CNN calls (TRACK)
+        # per-stage wall/CPU + dispatch profile (obs.metrics.RunProfile:
+        # the one assembly point for RunResult.stage_seconds); decode may
+        # run on several workers, the profile carries the lock
+        self.profile = RunProfile(STAGES)
         self._disp_track0 = int(getattr(self.tracker, "dispatches", 0))
-
-    def note_stage(self, name: str, wall: float, proc: float) -> None:
-        with self._stage_lock:
-            self.stage_wall[name] += wall
-            self.stage_proc[name] += proc
+        # observability: stream label for spans/gauges, plus the run's
+        # root span (children emitted from worker threads parent to it
+        # by explicit id)
+        self.stream = f"{clip.profile.name}/{clip.split}{clip.clip_id}"
+        self.run_span = None
+        if TRACER.enabled:
+            self.run_span = TRACER.open(
+                "run", "executor", stream=self.stream,
+                args={"frames": len(self.frame_ids),
+                      "chunk": self.chunk})
+        # per-frame proxy positive-cell fractions (drift monitoring
+        # only; PROXY runs on the draining thread in chunk order, so
+        # appends stay frame-ordered without a lock)
+        self.proxy_fracs: Optional[List[float]] = \
+            [] if drift_enabled() else None
 
     def broker(self) -> Optional[_BrokerHandle]:
         """The run's broker handle, registered lazily on the first
@@ -788,6 +863,10 @@ class _RunContext:
             self.track_handle.close()
             self.track_handle = None
         self._track_broker = None
+        if self.run_span is not None and self.run_span.dur < 0:
+            TRACER.close(self.run_span,
+                         args={"windows": self.n_windows,
+                               "skipped": self.skipped})
 
     def device_for(self, task: ChunkTask):
         return self.devices[(self.device_offset + task.index)
@@ -840,7 +919,7 @@ def stage_proxy(ctx: _RunContext, task: ChunkTask) -> ChunkTask:
     legacy path (``fused_plan=False``) pulls the score map back and
     maps/plans fully on the host; both produce bit-identical plans."""
     if ctx.proxy is not None:
-        ctx.disp_proxy += 1
+        ctx.profile.dispatch("proxy")
         pframes = downsample_chunk(task.frames, ctx.proxy.resolution)
         if ctx.fused_plan:
             grids, stats = ctx.proxy.plan_batch(
@@ -855,6 +934,13 @@ def stage_proxy(ctx: _RunContext, task: ChunkTask) -> ChunkTask:
             task.plan = plan_chunk(grids, ctx.sizeset,
                                    ctx.cfg.windows.max_windows,
                                    chunk_size=ctx.chunk)
+        if ctx.proxy_fracs is not None:
+            # drift signal: positive-cell fraction per REAL frame (an
+            # observer of grids the plan already computed — rows past
+            # the chunk's frame count are padding)
+            g = np.asarray(grids)[:len(task.frame_ids)]
+            fracs = (g > 0).mean(axis=tuple(range(1, g.ndim)))
+            ctx.proxy_fracs.extend(float(v) for v in fracs)
     else:
         task.plan = full_frame_plan(len(task.frame_ids), ctx.sizeset)
     return task
@@ -875,7 +961,7 @@ def stage_detect(ctx: _RunContext, task: ChunkTask) -> ChunkTask:
                    for (_, x, y, _) in entries]
         scales = [(pw / W, ph / H)] * n
         broker = ctx.broker()
-        ctx.disp_detect += 1
+        ctx.profile.dispatch("detect")
         if (pw, ph) == (W, H):
             # full-frame windows: the crop is the frame itself
             stack = frames[[slot for (slot, _, _, _) in entries]]
@@ -954,7 +1040,7 @@ def stage_track(ctx: _RunContext, task: ChunkTask) -> ChunkTask:
             ctx.skipped += 1
     ctx.charged += task.charged
     if ctx.batch_embed:
-        ctx.disp_embed += 1
+        ctx.profile.dispatch("embed")
         embeds = embed_dets_chunk(ctx.bank.tracker_params,
                                   ctx.cfg.tracker, task.frames,
                                   task.dets,
@@ -978,15 +1064,28 @@ def _timed(name: str, fn: Callable) -> Callable:
     into the run's per-stage profile.  ``thread_time`` counts only the
     calling thread, so overlapped stages (decode on workers, compute on
     the draining thread) sum to honest per-stage CPU rather than
-    double-counting each other."""
+    double-counting each other.  With tracing on, the same interval is
+    also emitted as a ``stage.{name}`` span parented to the run's root
+    (explicitly — decode runs on worker threads whose thread-local span
+    stack is empty)."""
+    span_name = f"stage.{name}"
+
     def wrapper(ctx: _RunContext, task: ChunkTask) -> ChunkTask:
-        t0 = time.perf_counter()
-        c0 = time.thread_time()
+        t0 = time.perf_counter_ns()
+        c0 = time.thread_time_ns()
         try:
             return fn(ctx, task)
         finally:
-            ctx.note_stage(name, time.perf_counter() - t0,
-                           time.thread_time() - c0)
+            dur = time.perf_counter_ns() - t0
+            proc = time.thread_time_ns() - c0
+            ctx.profile.note_stage(name, dur / 1e9, proc / 1e9)
+            if TRACER.enabled:
+                root = ctx.run_span
+                TRACER.emit(span_name, "stage", ts=t0, dur=dur,
+                            proc=proc, stream=ctx.stream,
+                            chunk=task.index,
+                            parent=root.sid if root is not None
+                            else None)
     return wrapper
 
 
@@ -1369,18 +1468,19 @@ class ClipExecutor:
         if ctx.params.refine and ctx.bank.refiner is not None:
             tracks = [ctx.bank.refiner.refine(t) for t in tracks]
         seconds = time.process_time() - t0 + max(ctx.charged, 0.0)
-        stage_seconds = {s: {"wall": ctx.stage_wall[s],
-                             "process": ctx.stage_proc[s]}
-                         for s in STAGES}
+        stage_seconds = ctx.profile.stage_seconds()
         track_disp = int(getattr(ctx.tracker, "dispatches", 0)) \
-            - ctx._disp_track0 + ctx.disp_embed
-        dispatches = {"proxy": ctx.disp_proxy,
-                      "detect": ctx.disp_detect,
+            - ctx._disp_track0 + ctx.profile.dispatches("embed")
+        dispatches = {"proxy": ctx.profile.dispatches("proxy"),
+                      "detect": ctx.profile.dispatches("detect"),
                       "track": track_disp}
+        ctx.profile.disp["track"] = track_disp
+        ctx.profile.publish()
         return RunResult(tracks, seconds, len(ctx.frame_ids),
                          ctx.n_windows, ctx.full_frames, ctx.skipped,
                          stage_seconds=stage_seconds,
-                         dispatches=dispatches)
+                         dispatches=dispatches,
+                         proxy_fracs=ctx.proxy_fracs)
 
     def run(self, clip: Clip) -> RunResult:
         return self.finish(self.start(clip))

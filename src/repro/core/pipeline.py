@@ -265,6 +265,10 @@ class RunResult:
     # device dispatches per stage ("proxy" plan/score calls, "detect"
     # detector batches, "track" tracker kernel + crop-CNN calls)
     dispatches: Optional[Dict[str, int]] = None
+    # per-frame proxy positive-cell fractions, collected by the executor
+    # only while drift monitoring is enabled (obs.enable_drift); the
+    # ingestor's per-stream DriftMonitor consumes them
+    proxy_fracs: Optional[List[float]] = None
 
 
 def detect_with_windows(bank: ModelBank, params: PipelineParams,

@@ -1,0 +1,22 @@
+"""Observability: tracing spans + metrics registry for the pipeline.
+
+``from repro import obs`` then ``obs.enable()`` to trace,
+``obs.REGISTRY.snapshot()`` to read metrics.  See obs/README.md for
+the naming scheme and the no-perturbation contract.
+"""
+from .trace import (Span, Tracer, TRACER, enable, disable, enabled,
+                    export_jsonl, export_chrome)
+from .metrics import (Counter, Gauge, Histogram, Registry, REGISTRY,
+                      RunProfile, DriftMonitor, stage_block,
+                      empty_stage_block, merge_stage_blocks,
+                      assert_stage_sane, drift_enabled, enable_drift,
+                      disable_drift)
+
+__all__ = [
+    "Span", "Tracer", "TRACER", "enable", "disable", "enabled",
+    "export_jsonl", "export_chrome",
+    "Counter", "Gauge", "Histogram", "Registry", "REGISTRY",
+    "RunProfile", "DriftMonitor", "stage_block", "empty_stage_block",
+    "merge_stage_blocks", "assert_stage_sane",
+    "drift_enabled", "enable_drift", "disable_drift",
+]

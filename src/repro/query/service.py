@@ -58,6 +58,8 @@ from typing import Deque, Dict, List, Mapping, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.data.video_synth import Clip
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import TRACER
 from repro.query.ops import Query
 from repro.query.plan import CompiledPlan, QueryResult, compile_query
 from repro.query.store import IngestReport, TrackStore
@@ -70,15 +72,61 @@ _WARM_ATTEMPTS = 3
 
 @dataclass
 class QueryStats:
-    """Per-query latency accounting (seconds, wall clock)."""
+    """Per-query latency accounting (seconds, wall clock) plus the
+    plan-phase clip counters ``plan.run`` computes."""
     ingest_seconds: float = 0.0     # time spent materializing cold clips
     scan_seconds: float = 0.0       # time spent in the vectorized scan
     ingested_clips: int = 0
     plan: str = ""
+    # plan-phase disposition of this query's clips (QueryResult
+    # pass-throughs): summary-skipped, answered from the histogram
+    # index, row-scanned, and the selected total
+    skipped_clips: int = 0
+    indexed_clips: int = 0
+    scanned_clips: int = 0
+    n_clips: int = 0
+    # datasets this query actually touched, "+"-joined sorted names
+    # (the latency_report per-dataset breakdown groups on it)
+    datasets: str = ""
 
     @property
     def total_seconds(self) -> float:
         return self.ingest_seconds + self.scan_seconds
+
+
+def summarize_latency(hist: Sequence["QueryStats"]) -> Dict[str, object]:
+    """Aggregate a list of ``QueryStats`` into the ``latency_report``
+    dict: the flat keys are unchanged from before the per-dataset
+    breakdown (bit-compatible), the new clip-counter totals expose what
+    ``plan.run`` always computed, and ``datasets`` groups queries by
+    the datasets they touched.  Pure — tested directly."""
+    if not hist:
+        return {"queries": 0}
+
+    def block(group: Sequence[QueryStats]) -> Dict[str, float]:
+        scans = np.asarray(sorted(s.scan_seconds for s in group))
+        return {
+            "queries": len(group),
+            "ingest_seconds_total": sum(s.ingest_seconds
+                                        for s in group),
+            "scan_seconds_total": sum(s.scan_seconds for s in group),
+            "scan_seconds_median": float(np.median(scans)),
+            "scan_seconds_p95": float(np.percentile(scans, 95)),
+            "warm_queries": sum(1 for s in group
+                                if s.ingested_clips == 0),
+        }
+
+    out: Dict[str, object] = block(hist)
+    out["clips_skipped_total"] = sum(s.skipped_clips for s in hist)
+    out["clips_indexed_total"] = sum(s.indexed_clips for s in hist)
+    out["clips_scanned_total"] = sum(s.scanned_clips for s in hist)
+    out["clips_total"] = sum(s.n_clips for s in hist)
+    by: Dict[str, List[QueryStats]] = {}
+    for s in hist:
+        by.setdefault(s.datasets or "(none)", []).append(s)
+    out["datasets"] = {name: block(group)
+                       for name, group in sorted(by.items())}
+    return out
 
 
 class QueryService:
@@ -293,12 +341,28 @@ class QueryService:
         in the result refer to positions in ``clips``.
         ``use_index=False`` forces the full row scan — the differential
         baseline the indexed path is tested against."""
+        if TRACER.enabled:
+            with TRACER.span("query.run", "query") as sp:
+                result = self._query(q, clips, log, use_index)
+                st = result.stats
+                sp.args = {"plan": st.plan, "datasets": st.datasets,
+                           "ingested": st.ingested_clips,
+                           "skipped": st.skipped_clips,
+                           "indexed": st.indexed_clips,
+                           "scanned": st.scanned_clips}
+                return result
+        return self._query(q, clips, log, use_index)
+
+    def _query(self, q: Query, clips: Sequence[Clip], log,
+               use_index: bool) -> QueryResult:
         stats = QueryStats()
         plan = compile_query(q)
         stats.plan = plan.describe()
         selected = [(i, c) for i, c in enumerate(clips)
                     if q.datasets is None
                     or c.profile.name in q.datasets]
+        stats.datasets = "+".join(
+            sorted({c.profile.name for _, c in selected}))
         t0 = time.perf_counter()
         entries = self._gather(plan, selected, use_index, stats, log)
         stats.ingest_seconds = time.perf_counter() - t0
@@ -307,9 +371,21 @@ class QueryService:
         # plan indices are positions in `selected`; map back to `clips`
         result.frames = [(selected[j][0], f) for j, f in result.frames]
         stats.scan_seconds = time.perf_counter() - t0
+        stats.skipped_clips = result.skipped_clips
+        stats.indexed_clips = result.indexed_clips
+        stats.scanned_clips = result.scanned_clips
+        stats.n_clips = result.n_clips
         result.stats = stats
         with self._hist_lock:
             self._history.append(stats)
+        REGISTRY.counter("query.count").inc()
+        REGISTRY.histogram("query.scan_seconds").observe(
+            stats.scan_seconds)
+        REGISTRY.histogram("query.ingest_seconds").observe(
+            stats.ingest_seconds)
+        REGISTRY.counter("query.clips.skipped").inc(stats.skipped_clips)
+        REGISTRY.counter("query.clips.indexed").inc(stats.indexed_clips)
+        REGISTRY.counter("query.clips.scanned").inc(stats.scanned_clips)
         log(f"[query] {stats.plan}: ingest={stats.ingest_seconds:.3f}s "
             f"({stats.ingested_clips} clips) "
             f"scan={stats.scan_seconds * 1e3:.2f}ms "
@@ -319,22 +395,13 @@ class QueryService:
 
     # -- reporting ------------------------------------------------------------
 
-    def latency_report(self) -> Dict[str, float]:
-        """Aggregate ingest/scan split over the recorded history.
-        Median and p95 use linear interpolation (an even-length history
-        averages the two middle scans rather than reporting the upper
-        one)."""
+    def latency_report(self) -> Dict[str, object]:
+        """Aggregate ingest/scan split over the recorded history
+        (``summarize_latency``): the flat keys of the original report,
+        plus the plan-phase clip-counter totals and a per-dataset
+        breakdown keyed by the datasets each query touched.  Median and
+        p95 use linear interpolation (an even-length history averages
+        the two middle scans rather than reporting the upper one)."""
         with self._hist_lock:
             hist: List[QueryStats] = list(self._history)
-        if not hist:
-            return {"queries": 0}
-        scans = np.asarray(sorted(s.scan_seconds for s in hist))
-        return {
-            "queries": len(hist),
-            "ingest_seconds_total": sum(s.ingest_seconds for s in hist),
-            "scan_seconds_total": sum(s.scan_seconds for s in hist),
-            "scan_seconds_median": float(np.median(scans)),
-            "scan_seconds_p95": float(np.percentile(scans, 95)),
-            "warm_queries": sum(1 for s in hist
-                                if s.ingested_clips == 0),
-        }
+        return summarize_latency(hist)

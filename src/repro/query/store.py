@@ -276,6 +276,9 @@ class TrackStore:
         self._loaded_datasets: Set[str] = set()
         self.evictions = 0              # lifetime counters (this instance)
         self.evicted_bytes = 0
+        from repro.obs.metrics import REGISTRY
+        self._m_evictions = REGISTRY.counter("store.evictions")
+        self._m_evicted_bytes = REGISTRY.counter("store.evicted_bytes")
         self.params: Optional[PipelineParams] = None
         self.fingerprint: Optional[str] = None
         self.set_params(params)
@@ -402,6 +405,8 @@ class TrackStore:
         self._index.pop(key, None)
         self.evictions += 1
         self.evicted_bytes += e["bytes"]
+        self._m_evictions.inc()
+        self._m_evicted_bytes.inc(e["bytes"])
 
     # -- paths ----------------------------------------------------------------
 

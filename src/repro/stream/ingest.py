@@ -47,9 +47,12 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
-from repro.core.executor import ClipExecutor, ExecutorOptions
+from repro.core.executor import STAGES, ClipExecutor, ExecutorOptions
 from repro.core.pipeline import RunResult
 from repro.data.video_synth import Clip
+from repro.obs.metrics import (REGISTRY, DriftMonitor, drift_enabled,
+                               empty_stage_block)
+from repro.obs.trace import TRACER
 from repro.query.store import ClipKey, PackedTracks, TrackStore, clip_key
 from repro.stream.checkpoint import TrackerCheckpoint
 from repro.stream.state import StreamIndexState, WatermarkDelta
@@ -77,6 +80,9 @@ class AppendReport:
     # dispatch counts per stage
     stage_seconds: Optional[Dict[str, Dict[str, float]]] = None
     dispatches: Optional[Dict[str, int]] = None
+    # per-stream drift summary (obs.DriftMonitor.summary()); populated
+    # only while obs.enable_drift() is on
+    drift: Optional[dict] = None
 
 
 @dataclass
@@ -89,6 +95,7 @@ class _OpenClip:
     index: StreamIndexState
     seconds: float = 0.0        # accumulated RunResult seconds
     counters: List[int] = field(default_factory=lambda: [0, 0, 0, 0])
+    drift: Optional[DriftMonitor] = None    # lazy, drift-enabled only
 
 
 class SegmentIngestor:
@@ -219,6 +226,19 @@ class SegmentIngestor:
         queries.  Clamped at the clip's end; the final append seals the
         clip (its NPZ becomes byte-for-byte the batch-ingest layout,
         minus the timing field)."""
+        if TRACER.enabled:
+            stream = f"{clip.profile.name}/{clip.split}{clip.clip_id}"
+            with TRACER.span("stream.append", "stream",
+                             stream=stream) as sp:
+                rep = self._append(clip, n_frames)
+                sp.args = {"watermark": rep.watermark,
+                           "appended": rep.appended,
+                           "rows_delivered": rep.rows_delivered,
+                           "sealed": rep.sealed}
+                return rep
+        return self._append(clip, n_frames)
+
+    def _append(self, clip: Clip, n_frames: int) -> AppendReport:
         t_wall = time.perf_counter()
         if int(n_frames) < 0:
             raise ValueError(f"cannot append {n_frames} frames: "
@@ -281,14 +301,46 @@ class SegmentIngestor:
                 self.service.notify_append(clip, packed, delta)
                 report.standing_seconds = time.perf_counter() - t_sq
             report.wall_seconds = time.perf_counter() - t_wall
+            if drift_enabled():
+                if st.drift is None:
+                    st.drift = DriftMonitor()
+                st.drift.observe(st.watermark,
+                                 proxy_fracs=result.proxy_fracs,
+                                 track_count=len(result.tracks))
+                report.drift = st.drift.summary()
+            self._publish(clip, report)
             return report
+
+    def _publish(self, clip: Clip, report: AppendReport) -> None:
+        """Fold one append into the registry: live-path latency
+        histograms plus the per-clip watermark gauges the fleet
+        dashboard reads (lag = how long this watermark took to land in
+        the store from the moment append() was called)."""
+        REGISTRY.counter("stream.appends").inc()
+        REGISTRY.histogram("stream.append.wall_seconds").observe(
+            report.wall_seconds)
+        REGISTRY.histogram("stream.append.store_seconds").observe(
+            report.store_seconds)
+        if self.service is not None:
+            REGISTRY.histogram("stream.append.standing_seconds").observe(
+                report.standing_seconds)
+        stream = f"{clip.profile.name}/{clip.split}{clip.clip_id}"
+        REGISTRY.gauge(f"stream.watermark[{stream}]").set(
+            report.watermark)
+        REGISTRY.gauge(f"stream.watermark_lag_seconds[{stream}]").set(
+            report.wall_seconds)
 
     def _run_segment(self, st: _OpenClip,
                      ids: Sequence[int]) -> RunResult:
         if not ids:
             # segment smaller than the gap stride: nothing to run, but
-            # the watermark still advances (and queries still answer)
-            return RunResult(st.tracker.result(), 0.0, 0, 0, 0, 0)
+            # the watermark still advances (and queries still answer);
+            # the zero stage block keeps AppendReport.stage_seconds
+            # uniformly shaped across appends
+            return RunResult(st.tracker.result(), 0.0, 0, 0, 0, 0,
+                             stage_seconds=empty_stage_block(STAGES),
+                             dispatches={"proxy": 0, "detect": 0,
+                                         "track": 0})
         run = self._executor.start(st.clip, frame_ids=ids,
                                    tracker=st.tracker)
         return self._executor.finish(run)

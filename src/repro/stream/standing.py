@@ -128,6 +128,11 @@ class StandingQuery:
         self.rows_scanned = 0           # lifetime counters: every
         self.rows_skipped = 0           # delivered row is exactly one
         self.clips_skipped = 0          # of scanned / summary-skipped
+        from repro.obs.metrics import REGISTRY
+        self._m_scanned = REGISTRY.counter("standing.rows_scanned")
+        self._m_skipped = REGISTRY.counter("standing.rows_skipped")
+        self._m_clips_skipped = REGISTRY.counter(
+            "standing.clips_skipped")
         # recent per-watermark deltas — BOUNDED: the accumulated answer
         # lives in the per-clip counts/emitted state, so an always-on
         # stream must not grow memory per append (consumers wanting
@@ -185,6 +190,8 @@ class StandingQuery:
                 sd.skipped = True
                 self.clips_skipped += 1
                 self.rows_skipped += delta.rows_delivered
+                self._m_clips_skipped.inc()
+                self._m_skipped.inc(delta.rows_delivered)
                 self.deltas.append(sd)
                 return sd
             st = self._state.get(key)
@@ -193,6 +200,7 @@ class StandingQuery:
                 self._state[key] = st
             self._fold(st, delta, sd, pos)
             self.rows_scanned += sd.rows_scanned
+            self._m_scanned.inc(sd.rows_scanned)
             self.deltas.append(sd)
             return sd
 

@@ -223,6 +223,77 @@ def test_broker_stream_failure_mid_flight():
     broker.close()
 
 
+def test_broker_flush_spans_ledger():
+    """Tracing on: concurrent flushes emit one ``broker.detect.flush``
+    span per flush with its consolidated ``broker.detect.dispatch``
+    children parented to it and nested inside its interval, and the
+    dispatch spans' window counts form an exact ledger — per flush they
+    sum to the flush's recorded total, and across the run to every
+    window any stream submitted."""
+    from repro.obs.trace import TRACER
+
+    broker = BatchBroker(linger_ms=50.0)
+    det = _FakeDetector()
+    n_streams, rounds = 6, 4
+    handles = [broker.register() for _ in range(n_streams)]
+    TRACER.enable()
+    TRACER.clear()
+    try:
+        errors = []
+
+        def feed(i):
+            try:
+                for r in range(rounds):
+                    n = 1 + (i + r) % 3
+                    origins = [(i * 100 + r * 10 + j, 0)
+                               for j in range(n)]
+                    out = handles[i].detect(
+                        det, _win(n), 0.4, origins, [1.0] * n, n_valid=n)
+                    # responses routed back to the right stream
+                    assert [o[0][0] for o in out] \
+                        == [float(og[0]) for og in origins]
+            except BaseException as exc:     # surfaced after join
+                errors.append(exc)
+
+        threads = [threading.Thread(target=feed, args=(i,))
+                   for i in range(n_streams)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors, errors
+        spans = TRACER.snapshot()
+    finally:
+        for h in handles:
+            h.close()
+        broker.close()
+        TRACER.disable()
+        TRACER.clear()
+
+    total_windows = sum(1 + (i + r) % 3
+                        for i in range(n_streams) for r in range(rounds))
+    flushes = {s.sid: s for s in spans
+               if s.name == "broker.detect.flush"}
+    disp = [s for s in spans if s.name == "broker.detect.dispatch"]
+    assert flushes and disp
+    assert len(disp) == broker.dispatches
+    assert broker.windows_in == total_windows
+    assert sum(s.args["windows"] for s in disp) == total_windows
+    assert sum(f.args["windows"] for f in flushes.values()) \
+        == total_windows
+    # well-parented: every dispatch belongs to exactly one flush and
+    # its interval nests inside that flush's interval
+    by_parent = {}
+    for s in disp:
+        p = flushes.get(s.parent)
+        assert p is not None, "dispatch span not parented to a flush"
+        assert p.ts <= s.ts and s.ts + s.dur <= p.ts + p.dur
+        by_parent[s.parent] = by_parent.get(s.parent, 0) \
+            + s.args["windows"]
+    for sid, w in by_parent.items():
+        assert flushes[sid].args["windows"] == w
+
+
 def test_broker_drain_on_close():
     """close() flushes whatever is pending before refusing new work."""
     broker = BatchBroker(linger_ms=60000.0)
