@@ -8,17 +8,20 @@ TPU v5e expectation (bytes / 819 GB/s vs FLOPs / 197 TFLOP/s).
 
     PYTHONPATH=src python -m benchmarks.kernels [--smoke]
 
-``--smoke`` is the CI correctness gate: it skips the timing sweep and
-instead asserts the ``proxy_plan``, ``assign`` and ``track_step``
-Pallas kernels (interpret mode) agree bit-for-bit with their jnp
-references on random inputs — the same interpret-vs-ref contract the
-kernel tests enforce, runnable without pytest.
+``--smoke`` is the CI correctness gate: it auto-discovers every kernel
+package under ``src/repro/kernels/`` (any directory with a
+``kernel.py``) and runs its ``smoke.py:smoke()`` — interpret-mode
+Pallas vs the jnp reference, the same contract the kernel tests
+enforce, runnable without pytest.  The ``kernel-contract`` pass of
+``python -m repro.analysis`` verifies every package ships that entry.
 """
 from __future__ import annotations
 
 import argparse
+import importlib
 import time
-from typing import Callable, Dict, List
+from pathlib import Path
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -115,8 +118,9 @@ def run() -> List[Dict]:
 
     from repro.kernels.track_step import (pack_params, track_step)
     from repro.kernels.track_step.ops import LOG1P_TABLE_2D
+    from repro.kernels.track_step.smoke import track_operands
     K, Q, H, e, M = 8, 32, 32, 16, 32
-    arrs, thr, np_params = _track_operands(
+    arrs, thr, np_params = track_operands(
         np.random.default_rng(0), K, Q, H, e, M)
     packed = pack_params(np_params)
     jarrs = [jnp.asarray(a) for a in arrs]
@@ -138,82 +142,25 @@ def run() -> List[Dict]:
     return rows
 
 
-def _track_operands(rng, K, Q, H, e, M):
-    """Random track-step operands honoring the slot contract (live
-    tracks / valid detections as prefixes, integer te gaps)."""
-    def g(*s):
-        return rng.standard_normal(s).astype(np.float32)
-
-    params = {
-        "det_proj/w": g(e + 6, e) * 0.5, "det_proj/b": g(e) * 0.1,
-        "gru/wz": g(e + H, H) * 0.5, "gru/wr": g(e + H, H) * 0.5,
-        "gru/wh": g(e + H, H) * 0.5,
-        "gru/bz": g(H) * 0.1, "gru/br": g(H) * 0.1, "gru/bh": g(H) * 0.1,
-        "match/w0": g(H + e + 6, M) * 0.5, "match/b0": g(M) * 0.1,
-        "match/w1": g(M, 1) * 0.5, "match/b1": g(1) * 0.1,
-    }
-    shapes = [(K, Q, H), (K, Q, 4), (K, Q), (K, Q), (K, Q),
-              (K, Q, e), (K, Q, 4), (K, Q)]
-    arrs = [np.zeros(s, np.float32) for s in shapes]
-    h_r, tbox_r, alive_r, te_gap_r, te_match, x, dbox, dvalid = arrs
-    for k in range(K):
-        T = int(rng.integers(0, Q + 1))
-        n = int(rng.integers(0, Q + 1))
-        h_r[k, :T] = g(T, H) * 0.5
-        tbox_r[k, :T] = rng.random((T, 4), np.float32)
-        alive_r[k, :T] = 1.0
-        te_gap_r[k, :T] = rng.integers(1, 9, T)
-        te_match[k] = float(rng.integers(0, 9))
-        x[k, :n] = g(n, e) * 0.5
-        dbox[k, :n] = rng.random((n, 4), np.float32)
-        dvalid[k, :n] = 1.0
-    return arrs, np.full((1, 1), 0.35, np.float32), params
+def discover_kernel_packages() -> List[str]:
+    """Kernel package names: directories under ``src/repro/kernels/``
+    that contain a ``kernel.py``."""
+    import repro.kernels
+    root = Path(repro.kernels.__file__).parent
+    return sorted(p.name for p in root.iterdir()
+                  if p.is_dir() and (p / "kernel.py").is_file())
 
 
 def smoke() -> None:
-    """CI gate: interpret-mode Pallas output must equal the jnp
-    reference bit-for-bit for the fused pipeline kernels."""
-    from repro.kernels.assign.kernel import assign_pallas
-    from repro.kernels.assign.ref import assign_ref
-    from repro.kernels.proxy_plan.kernel import proxy_plan_pallas
-    from repro.kernels.proxy_plan.ref import proxy_plan_ref
-    from repro.kernels.proxy_plan.ops import span_matrix
-
-    rng = np.random.default_rng(0)
-    for B, hp, wp, C, hc, wc in [(2, 20, 32, 16, 5, 8),
-                                 (3, 6, 8, 16, 9, 11)]:
-        feat = rng.standard_normal((B, hp, wp, C)).astype(np.float32)
-        w = rng.standard_normal(C).astype(np.float32)
-        span_y = jnp.asarray(span_matrix(hc, hp))
-        span_x = jnp.asarray(span_matrix(wc, wp))
-        gp, sp = proxy_plan_pallas(feat, w, 0.1, 0.5, span_y, span_x,
-                                   interpret=True)
-        gr, sr = proxy_plan_ref(feat, w, 0.1, 0.5, span_y, span_x)
-        np.testing.assert_array_equal(np.asarray(gp), np.asarray(gr))
-        np.testing.assert_array_equal(np.asarray(sp), np.asarray(sr))
-    for K, N in [(1, 1), (3, 4), (2, 9)]:
-        # multiples of 1/64: exact in f32, tie-breaks match the ref
-        costs = rng.integers(0, 256, (K, N, N)).astype(np.float32) / 64.0
-        got = np.asarray(assign_pallas(jnp.asarray(costs),
-                                       interpret=True))
-        np.testing.assert_array_equal(got, assign_ref(costs))
-        for k in range(K):
-            assert sorted(got[k]) == list(range(N))   # permutation
-
-    from repro.kernels.track_step import pack_params, track_step_ref
-    from repro.kernels.track_step.kernel import track_step_pallas
-    from repro.kernels.track_step.ops import LOG1P_TABLE_2D
-    for K, Q, H, e, M in [(2, 8, 16, 8, 16), (3, 16, 24, 16, 24)]:
-        arrs, thr, np_params = _track_operands(rng, K, Q, H, e, M)
-        packed = pack_params(np_params)
-        ref = track_step_ref(*arrs, thr, packed, LOG1P_TABLE_2D)
-        pal = track_step_pallas(*[jnp.asarray(a) for a in arrs],
-                                jnp.asarray(thr), packed,
-                                LOG1P_TABLE_2D, interpret=True)
-        for r, p in zip(ref, pal):
-            np.testing.assert_array_equal(np.asarray(p), r)
-    print("kernels smoke OK: proxy_plan + assign + track_step "
-          "interpret == ref")
+    """CI gate: run every kernel package's smoke.py — interpret-mode
+    Pallas output vs the jnp reference."""
+    names = discover_kernel_packages()
+    assert names, "no kernel packages discovered"
+    for name in names:
+        mod = importlib.import_module(f"repro.kernels.{name}.smoke")
+        mod.smoke()
+        print(f"kernels smoke OK: {name}")
+    print(f"kernels smoke OK: {len(names)} packages")
 
 
 def main(argv=None) -> None:

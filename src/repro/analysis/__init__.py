@@ -1,0 +1,16 @@
+"""repro.analysis — the contract linter.
+
+AST-based static checks (stdlib ``ast`` only, zero third-party deps)
+for the invariants the pipeline's speedups rest on: the fastmath f32
+bit-contract, the kernel ref-twin layout, the guarded-by lock
+discipline, the obs span/metric naming tables, and the no-tracked-
+bytecode rule.  Run it as ``python -m repro.analysis`` (CI runs
+``--strict``); see README.md in this package for the pass catalog and
+the suppression syntax.
+"""
+from repro.analysis.core import (Finding, Project, Report, PASSES,
+                                 lint_pass, run_passes)
+from repro.analysis import passes as _passes  # noqa: F401  (registers)
+
+__all__ = ["Finding", "Project", "Report", "PASSES", "lint_pass",
+           "run_passes"]

@@ -1,0 +1,64 @@
+"""CLI: ``python -m repro.analysis [--strict] [--json out.json]``.
+
+Exit status: 0 when clean (always, without ``--strict``); 1 when
+``--strict`` and any unsuppressed finding remains.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.analysis import PASSES, Project, run_passes
+
+
+def _default_root() -> Path:
+    # <root>/src/repro/analysis/__main__.py
+    return Path(__file__).resolve().parents[3]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Contract linter: static checks for the "
+                    "bit-identity, kernel-twin, lock-discipline, "
+                    "obs-naming, and tracked-bytecode invariants.")
+    ap.add_argument("--root", default=None,
+                    help="repo root (default: auto-detected)")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated pass ids (default: all)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the machine-readable report here")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on any unsuppressed finding")
+    ap.add_argument("--list-passes", action="store_true",
+                    help="list registered passes and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_passes:
+        for pid, info in PASSES.items():
+            print(f"{pid:18s} {info.summary}")
+        return 0
+
+    root = Path(args.root) if args.root else _default_root()
+    select = [s for s in args.select.split(",") if s] \
+        if args.select else None
+    project = Project(root)
+    report = run_passes(project, select=select)
+
+    if args.json:
+        Path(args.json).write_text(report.to_json() + "\n",
+                                   encoding="utf-8")
+    for f in report.findings:
+        print(f)
+    active, supp = report.active, report.suppressed
+    print(f"repro.analysis: {len(active)} finding(s), "
+          f"{len(supp)} suppressed, {len(project.files)} files, "
+          f"{len(PASSES) if select is None else len(select)} pass(es)")
+    if args.strict and active:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

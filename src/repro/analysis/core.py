@@ -1,0 +1,226 @@
+"""Framework for the contract linter: file loading, the pass registry,
+findings, and suppression comments.
+
+A *pass* is a function ``(Project) -> List[Finding]`` registered under
+a stable id with :func:`lint_pass`.  The runner applies suppression
+comments afterwards, so passes stay oblivious to them:
+
+  ``# repro-lint: disable=<pass>[,<pass>] -- <why>``
+      trailing on the offending line, or alone on the line directly
+      above it.  The ``-- <why>`` justification is REQUIRED: a bare
+      suppression is itself reported (pass id ``suppression``).
+  ``# repro-lint: disable-file=<pass> -- <why>``
+      anywhere in the file; disables the pass for the whole file.
+
+Only stdlib modules here — the linter must run in a bare CI job with
+no jax/numpy installed.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Sequence
+
+__all__ = ["Finding", "SourceFile", "Project", "Report", "PASSES",
+           "lint_pass", "run_passes"]
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*disable(?P<scope>-file)?="
+    r"(?P<passes>[A-Za-z0-9_,\-]+)"
+    r"(?:\s*--\s*(?P<why>\S.*))?")
+
+
+@dataclass
+class Finding:
+    """One defect at one location.  ``path`` is repo-root-relative."""
+    pass_id: str
+    path: str
+    line: int
+    message: str
+    suppressed: bool = False
+    justification: str = ""
+
+    def as_dict(self) -> dict:
+        return {"pass": self.pass_id, "path": self.path,
+                "line": self.line, "message": self.message,
+                "suppressed": self.suppressed,
+                "justification": self.justification}
+
+    def __str__(self) -> str:
+        tag = " (suppressed)" if self.suppressed else ""
+        return (f"{self.path}:{self.line}: [{self.pass_id}] "
+                f"{self.message}{tag}")
+
+
+@dataclass
+class _Suppression:
+    passes: List[str]
+    why: str
+    line: int
+    file_wide: bool
+
+
+class SourceFile:
+    """One parsed python file: source lines, AST, and the suppression
+    comments found on its lines."""
+
+    def __init__(self, path: Path, rel: str):
+        self.path = path
+        self.rel = rel
+        self.text = path.read_text(encoding="utf-8", errors="replace")
+        self.lines = self.text.splitlines()
+        self.parse_error: Optional[str] = None
+        try:
+            self.tree: Optional[ast.Module] = ast.parse(self.text)
+        except SyntaxError as exc:
+            self.tree = None
+            self.parse_error = f"syntax error: {exc.msg} (line {exc.lineno})"
+        # pass -> why, file wide
+        self.file_disables: Dict[str, str] = {}
+        # effective line -> {pass -> why}
+        self.line_disables: Dict[int, Dict[str, str]] = {}
+        self.suppressions: List[_Suppression] = []
+        self._scan_suppressions()
+
+    def _scan_suppressions(self) -> None:
+        for i, raw in enumerate(self.lines, start=1):
+            m = _SUPPRESS_RE.search(raw)
+            if not m:
+                continue
+            passes = [p for p in m.group("passes").split(",") if p]
+            why = (m.group("why") or "").strip()
+            file_wide = m.group("scope") == "-file"
+            self.suppressions.append(
+                _Suppression(passes, why, i, file_wide))
+            if file_wide:
+                for p in passes:
+                    self.file_disables.setdefault(p, why)
+                continue
+            # a comment-only line suppresses the NEXT line; a trailing
+            # comment suppresses its own line
+            target = i + 1 if raw.lstrip().startswith("#") else i
+            slot = self.line_disables.setdefault(target, {})
+            for p in passes:
+                slot.setdefault(p, why)
+
+    def disabled(self, pass_id: str, line: int) -> Optional[str]:
+        """The justification string if ``pass_id`` is suppressed at
+        ``line`` (empty string = suppressed without a why), else None."""
+        if pass_id in self.file_disables:
+            return self.file_disables[pass_id]
+        slot = self.line_disables.get(line)
+        if slot is not None and pass_id in slot:
+            return slot[pass_id]
+        return None
+
+
+class Project:
+    """The lint unit: a repo root plus the python trees scanned under
+    it (``src/repro`` and ``benchmarks`` by default — tests seed their
+    fixtures under a tmp root with the same shape)."""
+
+    DEFAULT_DIRS = ("src/repro", "benchmarks")
+
+    def __init__(self, root, rel_dirs: Sequence[str] = DEFAULT_DIRS):
+        self.root = Path(root).resolve()
+        self.rel_dirs = tuple(rel_dirs)
+        self.files: List[SourceFile] = []
+        for d in self.rel_dirs:
+            base = self.root / d
+            if not base.is_dir():
+                continue
+            for p in sorted(base.rglob("*.py")):
+                if "__pycache__" in p.parts:
+                    continue
+                rel = p.relative_to(self.root).as_posix()
+                self.files.append(SourceFile(p, rel))
+        self._by_rel = {sf.rel: sf for sf in self.files}
+
+    def file(self, rel: str) -> Optional[SourceFile]:
+        return self._by_rel.get(rel)
+
+    def read_text(self, rel: str) -> Optional[str]:
+        p = self.root / rel
+        if not p.is_file():
+            return None
+        return p.read_text(encoding="utf-8", errors="replace")
+
+
+@dataclass
+class _PassInfo:
+    pass_id: str
+    summary: str
+    fn: Callable[[Project], List[Finding]]
+
+
+#: pass id -> _PassInfo, in registration order
+PASSES: Dict[str, _PassInfo] = {}
+
+
+def lint_pass(pass_id: str, summary: str):
+    """Register a pass function under ``pass_id``."""
+    def deco(fn):
+        PASSES[pass_id] = _PassInfo(pass_id, summary, fn)
+        return fn
+    return deco
+
+
+@dataclass
+class Report:
+    """All findings of one run, suppressions applied."""
+    findings: List[Finding] = field(default_factory=list)
+
+    @property
+    def active(self) -> List[Finding]:
+        return [f for f in self.findings if not f.suppressed]
+
+    @property
+    def suppressed(self) -> List[Finding]:
+        return [f for f in self.findings if f.suppressed]
+
+    def as_dict(self) -> dict:
+        return {"findings": [f.as_dict() for f in self.findings],
+                "counts": {"active": len(self.active),
+                           "suppressed": len(self.suppressed)}}
+
+    def to_json(self) -> str:
+        return json.dumps(self.as_dict(), indent=2, sort_keys=True)
+
+
+def run_passes(project: Project,
+               select: Optional[Sequence[str]] = None) -> Report:
+    """Run the selected (default: all) passes and apply suppressions."""
+    selected = list(select) if select else list(PASSES)
+    unknown = [p for p in selected if p not in PASSES]
+    if unknown:
+        raise KeyError(f"unknown pass(es): {', '.join(unknown)} "
+                       f"(available: {', '.join(PASSES)})")
+    findings: List[Finding] = []
+    for pid in selected:
+        findings.extend(PASSES[pid].fn(project))
+    # a file that fails to parse can hide anything — always a finding
+    for sf in project.files:
+        if sf.parse_error:
+            findings.append(Finding("parse", sf.rel, 1, sf.parse_error))
+    for f in findings:
+        sf = project.file(f.path)
+        if sf is None:
+            continue
+        why = sf.disabled(f.pass_id, f.line)
+        if why is not None:
+            f.suppressed = True
+            f.justification = why
+    # suppressions must carry a justification (and bare file-wide ones
+    # doubly so) — enforced here so every pass gets it for free
+    for sf in project.files:
+        for sup in sf.suppressions:
+            if not sup.why:
+                findings.append(Finding(
+                    "suppression", sf.rel, sup.line,
+                    "suppression without justification — append "
+                    "' -- <why>'"))
+    findings.sort(key=lambda f: (f.path, f.line, f.pass_id))
+    return Report(findings)

@@ -1,0 +1,7 @@
+"""Pass modules — importing this package registers every pass."""
+from repro.analysis.passes import (bit_contract, kernel_contract,
+                                   lock_discipline, obs_naming,
+                                   bytecode)  # noqa: F401
+
+__all__ = ["bit_contract", "kernel_contract", "lock_discipline",
+           "obs_naming", "bytecode"]

@@ -1,0 +1,180 @@
+"""bit-contract: the fastmath f32 twin discipline.
+
+Files on the host==device bit-identity path (the tracker, the
+Hungarian solvers, the track_step/assign kernels, and anything that
+imports ``core.fastmath``) must not call the raw transcendental /
+matmul entry points — ``jnp.exp``, ``jnp.tanh``, ``jax.nn.sigmoid``,
+``jnp.matmul``/``jnp.dot`` or the ``@`` operator — because XLA and
+numpy disagree in the last ulp; the ``core.fastmath`` ``np_*/jx_*``
+twins pin one shared algorithm on both sides.
+
+The pass also re-litigates the PR 7 scatter pitfall statically: in a
+``.at[idx].set(..., mode="drop")`` / ``.add(..., mode="drop")``, jnp
+WRAPS a negative index before the drop applies, so ``-1`` sentinels
+silently write the last row.  Any drop-mode scatter whose index
+expression (or the local it names) contains a negative constant is
+flagged — misses must route to an out-of-bounds index (>= axis size).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from repro.analysis.core import Finding, Project, lint_pass
+
+# files on the bit-identity path by construction
+_SCOPE_FILES = ("core/tracker.py", "core/hungarian.py")
+_SCOPE_DIRS = ("/kernels/track_step/", "/kernels/assign/")
+# the twin implementations themselves ARE the contract
+_EXEMPT = ("core/fastmath.py",)
+
+_BANNED_ATTRS = {"exp", "tanh", "sigmoid", "expit", "matmul", "dot"}
+_BANNED_ROOTS = {"np", "numpy", "jnp", "lax", "jax.nn", "jax.lax",
+                 "jax.numpy", "jax.scipy.special"}
+_TWIN = {"exp": "exp", "tanh": "tanh", "sigmoid": "sigmoid",
+         "expit": "sigmoid", "matmul": "matmul", "dot": "matmul"}
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _imports_fastmath(tree: ast.Module) -> bool:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if mod.endswith("fastmath") \
+                    or any(a.name == "fastmath" for a in node.names):
+                return True
+        elif isinstance(node, ast.Import):
+            if any(a.name.endswith("fastmath") for a in node.names):
+                return True
+    return False
+
+
+def _in_scope(sf) -> bool:
+    rel = sf.rel
+    if any(rel.endswith(x) for x in _EXEMPT):
+        return False
+    if any(rel.endswith(x) for x in _SCOPE_FILES):
+        return True
+    if any(d in "/" + rel for d in _SCOPE_DIRS):
+        return True
+    return sf.tree is not None and _imports_fastmath(sf.tree)
+
+
+def _has_negative_const(node: ast.AST) -> bool:
+    for n in ast.walk(node):
+        if isinstance(n, ast.UnaryOp) and isinstance(n.op, ast.USub) \
+                and isinstance(n.operand, ast.Constant) \
+                and isinstance(n.operand.value, (int, float)):
+            return True
+        if isinstance(n, ast.Constant) \
+                and isinstance(n.value, (int, float)) and n.value < 0:
+            return True
+    return False
+
+
+def _drop_scatter(call: ast.Call) -> Optional[ast.AST]:
+    """The index expression of ``x.at[idx].set(.., mode="drop")``
+    (or .add/.max/.min), else None."""
+    fn = call.func
+    if not (isinstance(fn, ast.Attribute)
+            and fn.attr in ("set", "add", "max", "min")):
+        return None
+    sub = fn.value
+    if not (isinstance(sub, ast.Subscript)
+            and isinstance(sub.value, ast.Attribute)
+            and sub.value.attr == "at"):
+        return None
+    for kw in call.keywords:
+        if kw.arg == "mode" and isinstance(kw.value, ast.Constant) \
+                and kw.value.value == "drop":
+            return sub.slice
+    return None
+
+
+class _FuncAssigns(ast.NodeVisitor):
+    """name -> value expressions assigned to it inside one function."""
+
+    def __init__(self):
+        self.assigns: dict = {}
+
+    def visit_Assign(self, node: ast.Assign):
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Name):
+                self.assigns.setdefault(tgt.id, []).append(node.value)
+        self.generic_visit(node)
+
+
+@lint_pass("bit-contract",
+           "raw jnp/np transcendentals, @, and negative drop-mode "
+           "scatter indices on host==device bit-identity paths")
+def run(project: Project) -> List[Finding]:
+    out: List[Finding] = []
+    for sf in project.files:
+        if sf.tree is None or not _in_scope(sf):
+            continue
+        # enclosing-function assignment maps for the scatter check
+        func_of: dict = {}
+        for fn in ast.walk(sf.tree):
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                fa = _FuncAssigns()
+                for stmt in fn.body:
+                    fa.visit(stmt)
+                for sub in ast.walk(fn):
+                    func_of.setdefault(id(sub), fa.assigns)
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.BinOp) \
+                    and isinstance(node.op, ast.MatMult):
+                out.append(Finding(
+                    "bit-contract", sf.rel, node.lineno,
+                    "raw `@` matmul on a bit-identity path — use "
+                    "core.fastmath np_matmul/jx_matmul (fma "
+                    "contraction and XLA dot reassociation break the "
+                    "f32 bit match)"))
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            if isinstance(fn, ast.Attribute) \
+                    and fn.attr in _BANNED_ATTRS:
+                root = _dotted(fn.value)
+                if root is not None and (
+                        root in _BANNED_ROOTS
+                        or root.split(".")[0] in ("np", "numpy", "jnp")):
+                    twin = _TWIN[fn.attr]
+                    out.append(Finding(
+                        "bit-contract", sf.rel, node.lineno,
+                        f"raw {root}.{fn.attr} on a bit-identity path "
+                        f"— use core.fastmath np_{twin}/jx_{twin}"))
+            idx = _drop_scatter(node)
+            if idx is None:
+                continue
+            bad = _has_negative_const(idx)
+            culprit = ""
+            if not bad:
+                assigns = func_of.get(id(node), {})
+                for name_node in ast.walk(idx):
+                    if isinstance(name_node, ast.Name):
+                        for val in assigns.get(name_node.id, []):
+                            if _has_negative_const(val):
+                                bad, culprit = True, name_node.id
+                                break
+                    if bad:
+                        break
+            if bad:
+                who = f" (via `{culprit}`)" if culprit else ""
+                out.append(Finding(
+                    "bit-contract", sf.rel, node.lineno,
+                    f'drop-mode scatter index may be negative{who}: '
+                    f'jnp wraps negative indices BEFORE mode="drop" '
+                    f'applies, silently writing the last row — route '
+                    f'misses to an index >= the axis size instead'))
+    return out

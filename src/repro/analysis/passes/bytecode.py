@@ -1,0 +1,47 @@
+"""tracked-bytecode: no ``.pyc`` / ``__pycache__`` content in git.
+
+Committed bytecode slipped in once (PR 3); the CI grep gate that kept
+it out now lives here as a linter pass.  Uses ``git ls-files`` so
+untracked local ``__pycache__`` noise never false-positives; if git is
+unavailable (fixture trees in tests), falls back to a filesystem walk.
+"""
+from __future__ import annotations
+
+import re
+import subprocess
+from typing import List
+
+from repro.analysis.core import Finding, Project, lint_pass
+
+_PASS = "tracked-bytecode"
+_BAD_RE = re.compile(r"(^|/)__pycache__(/|$)|\.pyc$")
+
+
+def _git_ls_files(root) -> List[str]:
+    proc = subprocess.run(
+        ["git", "ls-files"], cwd=root, capture_output=True,
+        text=True, timeout=60)
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr.strip() or "git ls-files failed")
+    return proc.stdout.splitlines()
+
+
+def _walk(root) -> List[str]:
+    return [p.relative_to(root).as_posix()
+            for p in root.rglob("*")
+            if p.is_file() and ".git" not in p.parts]
+
+
+@lint_pass(_PASS,
+           "no tracked Python bytecode (__pycache__/, *.pyc)")
+def run(project: Project) -> List[Finding]:
+    try:
+        files = _git_ls_files(project.root)
+        how = "tracked"
+    except (OSError, RuntimeError, subprocess.TimeoutExpired):
+        files = _walk(project.root)
+        how = "stray"
+    return [Finding(_PASS, f, 1,
+                    f"{how} Python bytecode — delete it and add "
+                    f"__pycache__/ to .gitignore")
+            for f in files if _BAD_RE.search(f)]

@@ -1,0 +1,129 @@
+"""kernel-contract: the three-file kernel package layout.
+
+Every ``src/repro/kernels/<name>/`` package (anything shipping a
+``kernel.py``) must:
+
+- ship an ``ops.py`` (the public jit'd entry / backend dispatch) and a
+  ``ref.py`` oracle twin;
+- for each public ``<base>_pallas`` function in ``kernel.py``, define
+  ``<base>_ref`` in ``ref.py`` whose required signature matches:
+  required positional parameters agree in name and order, required
+  keyword-only parameters agree as sets (the kernel-side ``interpret``
+  flag excepted).  Defaulted parameters are tuning knobs and stay
+  free;
+- expose the interpret fallback: every ``*_pallas`` takes an
+  ``interpret`` parameter;
+- ship a ``smoke.py`` with a top-level ``smoke()`` —
+  ``benchmarks/kernels.py --smoke`` auto-discovers and runs them, so a
+  kernel cannot exist without riding the CI interpret-vs-ref gate.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.core import Finding, Project, lint_pass
+
+_PASS = "kernel-contract"
+
+
+def _packages(project: Project) -> Dict[str, Dict[str, object]]:
+    """package dir rel -> {filename stem -> SourceFile}."""
+    pkgs: Dict[str, Dict[str, object]] = {}
+    for sf in project.files:
+        parts = sf.rel.split("/")
+        if "kernels" not in parts[:-1]:
+            continue
+        k = parts.index("kernels")
+        if len(parts) != k + 3:        # kernels/<name>/<file>.py only
+            continue
+        pkg = "/".join(parts[:k + 2])
+        pkgs.setdefault(pkg, {})[parts[-1]] = sf
+    return {pkg: files for pkg, files in pkgs.items()
+            if "kernel.py" in files}
+
+
+def _top_functions(tree: ast.Module) -> Dict[str, ast.FunctionDef]:
+    return {n.name: n for n in tree.body
+            if isinstance(n, ast.FunctionDef)}
+
+
+def _required_sig(fn: ast.FunctionDef) -> Tuple[List[str], set]:
+    """(required positional names in order, required kwonly name set)."""
+    a = fn.args
+    pos = [arg.arg for arg in a.posonlyargs + a.args]
+    n_def = len(a.defaults)
+    req_pos = pos[:len(pos) - n_def] if n_def else pos
+    req_kw = {arg.arg for arg, d in zip(a.kwonlyargs, a.kw_defaults)
+              if d is None}
+    return req_pos, req_kw
+
+
+def _param_names(fn: ast.FunctionDef) -> set:
+    a = fn.args
+    return {arg.arg for arg in a.posonlyargs + a.args + a.kwonlyargs}
+
+
+@lint_pass(_PASS,
+           "every kernels/<name>/ package ships ops.py + a ref.py twin "
+           "with a matching signature, the interpret fallback, and a "
+           "smoke.py entry for benchmarks/kernels.py --smoke")
+def run(project: Project) -> List[Finding]:
+    out: List[Finding] = []
+    for pkg, files in sorted(_packages(project).items()):
+        ksf = files["kernel.py"]
+        if ksf.tree is None:
+            continue
+        for missing in ("ops.py", "ref.py", "smoke.py"):
+            if missing not in files:
+                what = {
+                    "ops.py": "the public dispatch entry (ops.py)",
+                    "ref.py": "the oracle twin (ref.py)",
+                    "smoke.py": "the CI gate entry (smoke.py with a "
+                                "top-level smoke())",
+                }[missing]
+                out.append(Finding(_PASS, ksf.rel, 1,
+                                   f"{pkg} is missing {what}"))
+        rsf = files.get("ref.py")
+        ref_fns = _top_functions(rsf.tree) \
+            if rsf is not None and rsf.tree is not None else {}
+        ssf = files.get("smoke.py")
+        if ssf is not None and ssf.tree is not None \
+                and "smoke" not in _top_functions(ssf.tree):
+            out.append(Finding(_PASS, ssf.rel, 1,
+                               "smoke.py must define a top-level "
+                               "smoke() for the --smoke gate"))
+        for name, fn in _top_functions(ksf.tree).items():
+            if name.startswith("_") or not name.endswith("_pallas"):
+                continue
+            if "interpret" not in _param_names(fn):
+                out.append(Finding(
+                    _PASS, ksf.rel, fn.lineno,
+                    f"{name} has no `interpret` parameter — every "
+                    f"Pallas kernel must expose the interpret "
+                    f"fallback"))
+            ref_name = name[:-len("_pallas")] + "_ref"
+            rfn: Optional[ast.FunctionDef] = ref_fns.get(ref_name)
+            if rfn is None:
+                if rsf is not None:
+                    out.append(Finding(
+                        _PASS, ksf.rel, fn.lineno,
+                        f"{name} has no `{ref_name}` twin in "
+                        f"{rsf.rel}"))
+                continue
+            kpos, kkw = _required_sig(fn)
+            rpos, rkw = _required_sig(rfn)
+            kkw.discard("interpret")
+            if kpos != rpos:
+                out.append(Finding(
+                    _PASS, rsf.rel, rfn.lineno,
+                    f"{ref_name}({', '.join(rpos)}) does not match "
+                    f"{name}({', '.join(kpos)}) — required "
+                    f"positional parameters must agree in name and "
+                    f"order"))
+            elif kkw != rkw:
+                out.append(Finding(
+                    _PASS, rsf.rel, rfn.lineno,
+                    f"{ref_name} required keyword-only params "
+                    f"{sorted(rkw)} != {name}'s {sorted(kkw)}"))
+    return out

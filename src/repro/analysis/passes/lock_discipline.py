@@ -1,0 +1,438 @@
+"""lock-discipline: guarded-by annotations + static deadlock check.
+
+Shared mutable state is annotated at its ``__init__`` assignment::
+
+    self._pending = []          # guarded-by: _cv
+
+and every ``self._pending`` read/write must then occur inside a
+``with self._cv:`` block (or in an allowlisted ``__init__`` /
+``__repr__`` / ``__del__`` context).  Methods that run with a lock
+already held — "caller must hold the lock" helpers, or bodies that
+acquire/release manually — declare it on (or directly above) the
+``def`` line::
+
+    def _evict(self, key):      # holds-lock: _lock
+
+The pass also builds the cross-class lock-acquisition graph: an edge
+``A.l1 -> B.l2`` means some code path acquires ``l2`` while holding
+``l1``.  Receivers resolve through ``self.attr = ClassName(...)``
+constructor assignments, string type annotations on attributes and
+parameters (``service: "QueryService"``), same-class return
+annotations (``-> "TrackStore"``), and ``for x in self.attr`` /
+``x = self.attr`` aliasing.  Any cycle in the graph is a potential
+deadlock and fails the pass; re-entrant self-edges are allowed for
+``threading.RLock`` only.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.core import Finding, Project, SourceFile, lint_pass
+
+_PASS = "lock-discipline"
+
+_GUARD_RE = re.compile(r"#\s*guarded-by:\s*([A-Za-z_]\w*)")
+_HOLDS_RE = re.compile(r"#\s*holds-lock:\s*([A-Za-z_]\w*)")
+_LOCK_CTORS = {"Lock", "RLock", "Condition", "Semaphore",
+               "BoundedSemaphore"}
+_ALLOWED_METHODS = {"__init__", "__repr__", "__del__"}
+_IDENT_RE = re.compile(r"[A-Za-z_]\w*")
+
+# (class name, lock attr) — one lock instance in the graph
+Node = Tuple[str, str]
+
+
+class _ClassInfo:
+    def __init__(self, sf: SourceFile, node: ast.ClassDef):
+        self.sf = sf
+        self.node = node
+        self.name = node.name
+        self.locks: Dict[str, str] = {}          # attr -> kind
+        self.guarded: Dict[str, str] = {}        # field -> lock attr
+        self.guard_lines: Dict[str, int] = {}
+        self.attr_types: Dict[str, str] = {}     # attr -> class name
+        self.methods: Dict[str, ast.FunctionDef] = {
+            n.name: n for n in node.body
+            if isinstance(n, ast.FunctionDef)}
+
+
+def _ann_classes(ann: ast.AST, known: Set[str]) -> Optional[str]:
+    """First known class name mentioned in an annotation (handles
+    Name, string constants, and container subscripts)."""
+    for n in ast.walk(ann):
+        if isinstance(n, ast.Name) and n.id in known:
+            return n.id
+        if isinstance(n, ast.Constant) and isinstance(n.value, str):
+            for ident in _IDENT_RE.findall(n.value):
+                if ident in known:
+                    return ident
+    return None
+
+
+def _lock_ctor_kind(value: ast.AST) -> Optional[str]:
+    if isinstance(value, ast.Call):
+        fn = value.func
+        name = fn.attr if isinstance(fn, ast.Attribute) else \
+            fn.id if isinstance(fn, ast.Name) else None
+        if name in _LOCK_CTORS:
+            return name
+    return None
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Attribute) \
+            and isinstance(node.value, ast.Name) \
+            and node.value.id == "self":
+        return node.attr
+    return None
+
+
+def _line_ann(sf: SourceFile, regex, line: int) -> List[str]:
+    """Annotation matches trailing on ``line``, or on a comment-ONLY
+    line directly above (a trailing comment on the previous statement
+    never bleeds onto this one)."""
+    out: List[str] = []
+    if 2 <= line and sf.lines[line - 2].lstrip().startswith("#"):
+        out.extend(regex.findall(sf.lines[line - 2]))
+    if 1 <= line <= len(sf.lines):
+        out.extend(regex.findall(sf.lines[line - 1]))
+    return out
+
+
+def _collect_classes(project: Project) -> Dict[str, _ClassInfo]:
+    classes: Dict[str, _ClassInfo] = {}
+    for sf in project.files:
+        if sf.tree is None:
+            continue
+        for node in sf.tree.body:
+            if isinstance(node, ast.ClassDef):
+                classes[node.name] = _ClassInfo(sf, node)
+    return classes
+
+
+def _collect_fields(ci: _ClassInfo, known: Set[str],
+                    out: List[Finding]) -> None:
+    """Locks, guarded fields, and attribute types from assignments."""
+    sf = ci.sf
+    for meth in ci.methods.values():
+        for stmt in ast.walk(meth):
+            tgt = value = ann = None
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+                tgt, value = stmt.targets[0], stmt.value
+            elif isinstance(stmt, ast.AnnAssign):
+                tgt, value, ann = stmt.target, stmt.value, \
+                    stmt.annotation
+            else:
+                continue
+            attr = _self_attr(tgt)
+            if attr is None:
+                continue
+            kind = _lock_ctor_kind(value) if value is not None else None
+            if kind is not None:
+                ci.locks[attr] = kind
+            if ann is not None:
+                t = _ann_classes(ann, known)
+                if t is not None:
+                    ci.attr_types.setdefault(attr, t)
+            if value is not None and isinstance(value, ast.Call) \
+                    and isinstance(value.func, ast.Name) \
+                    and value.func.id in known:
+                ci.attr_types.setdefault(attr, value.func.id)
+            for lock in _line_ann(sf, _GUARD_RE, stmt.lineno):
+                ci.guarded[attr] = lock
+                ci.guard_lines[attr] = stmt.lineno
+    for field, lock in ci.guarded.items():
+        if lock not in ci.locks:
+            out.append(Finding(
+                _PASS, sf.rel, ci.guard_lines[field],
+                f"{ci.name}.{field} is guarded-by `{lock}`, but "
+                f"{ci.name} creates no threading lock under that "
+                f"name"))
+
+
+class _MethodScan:
+    """One method's walk: guarded-access checks, direct lock
+    acquisitions, in-method edges, and resolved outgoing calls."""
+
+    def __init__(self, classes: Dict[str, _ClassInfo], ci: _ClassInfo,
+                 meth: ast.FunctionDef, findings: List[Finding],
+                 edges: Dict[Tuple[Node, Node], Tuple[str, int]]):
+        self.classes = classes
+        self.ci = ci
+        self.meth = meth
+        self.findings = findings
+        self.edges = edges
+        self.acquires: Set[Node] = set()
+        self.calls: List[Tuple[str, str, Tuple[str, ...]]] = []
+        self.local_types: Dict[str, str] = {}
+        self.lock_aliases: Dict[str, str] = {}   # local -> lock attr
+        self.holds = tuple(h for h in _line_ann(ci.sf, _HOLDS_RE,
+                                                meth.lineno)
+                           if h in ci.locks)
+        self._reported: Set[Tuple[str, int]] = set()
+        known = set(classes)
+        for arg in (meth.args.posonlyargs + meth.args.args
+                    + meth.args.kwonlyargs):
+            if arg.annotation is not None:
+                t = _ann_classes(arg.annotation, known)
+                if t is not None:
+                    self.local_types[arg.arg] = t
+
+    # -- type resolution --------------------------------------------------
+
+    def _lock_of(self, node: ast.AST) -> Optional[str]:
+        """The lock attr a receiver expression denotes: ``self._cv``
+        directly, or a local aliased via ``cv = self._cv``."""
+        attr = _self_attr(node)
+        if attr is not None and attr in self.ci.locks:
+            return attr
+        if isinstance(node, ast.Name):
+            return self.lock_aliases.get(node.id)
+        return None
+
+    def _type_of(self, node: ast.AST) -> Optional[str]:
+        attr = _self_attr(node)
+        if attr is not None:
+            return self.ci.attr_types.get(attr)
+        if isinstance(node, ast.Name):
+            return self.local_types.get(node.id)
+        return None
+
+    def _call_return_type(self, call: ast.Call) -> Optional[str]:
+        """Same-class call with a string return annotation."""
+        attr = _self_attr(call.func)
+        if attr is None:
+            return None
+        target = self.ci.methods.get(attr)
+        if target is None or target.returns is None:
+            return None
+        return _ann_classes(target.returns, set(self.classes))
+
+    def _note_assign(self, node: ast.Assign) -> None:
+        if len(node.targets) != 1 \
+                or not isinstance(node.targets[0], ast.Name):
+            return
+        name = node.targets[0].id
+        lock = _self_attr(node.value)
+        if lock is not None and lock in self.ci.locks:
+            self.lock_aliases[name] = lock
+            return
+        t = self._type_of(node.value)
+        if t is None and isinstance(node.value, ast.Call):
+            fn = node.value.func
+            if isinstance(fn, ast.Name) and fn.id in self.classes:
+                t = fn.id
+            else:
+                t = self._call_return_type(node.value)
+        if t is not None:
+            self.local_types[name] = t
+
+    def _note_for(self, node: ast.For) -> None:
+        it = node.iter
+        if isinstance(it, ast.Call) and isinstance(it.func, ast.Name) \
+                and it.func.id in ("list", "sorted", "tuple") \
+                and it.args:
+            it = it.args[0]
+        t = self._type_of(it)
+        if t is not None and isinstance(node.target, ast.Name):
+            self.local_types[node.target.id] = t
+
+    # -- the walk ---------------------------------------------------------
+
+    def run(self) -> None:
+        held = set(self.holds)
+        for stmt in self.meth.body:
+            self._visit(stmt, held)
+
+    def _edge(self, src: str, dst: Node, line: int) -> None:
+        key = ((self.ci.name, src), dst)
+        self.edges.setdefault(key, (self.ci.sf.rel, line))
+
+    def _acquire(self, lock: str, held: Set[str], line: int) -> None:
+        kind = self.ci.locks.get(lock)
+        if lock in held and kind != "RLock":
+            self._report(line, f"re-acquisition of non-reentrant "
+                               f"{self.ci.name}.{lock} ({kind}) — "
+                               f"self-deadlock")
+        self.acquires.add((self.ci.name, lock))
+        for h in held:
+            if h != lock:
+                self._edge(h, (self.ci.name, lock), line)
+
+    def _report(self, line: int, msg: str) -> None:
+        if (msg, line) in self._reported:
+            return
+        self._reported.add((msg, line))
+        self.findings.append(Finding(_PASS, self.ci.sf.rel, line, msg))
+
+    def _check_access(self, node: ast.Attribute,
+                      held: Set[str]) -> None:
+        attr = _self_attr(node)
+        if attr is None:
+            return
+        lock = self.ci.guarded.get(attr)
+        if lock is None or lock in held:
+            return
+        if self.meth.name in _ALLOWED_METHODS:
+            return
+        ctx = "write to" if isinstance(node.ctx,
+                                       (ast.Store, ast.Del)) \
+            else "read of"
+        self._report(
+            node.lineno,
+            f"{ctx} {self.ci.name}.{attr} outside `with "
+            f"self.{lock}` (guarded-by {lock}; hold the lock, or "
+            f"annotate the method `# holds-lock: {lock}`)")
+
+    def _handle_call(self, node: ast.Call, held: Set[str]) -> None:
+        fn = node.func
+        if isinstance(fn, ast.Attribute):
+            # manual acquire()/release() on self.<lock> or an alias —
+            # flow-sensitive: the held set mutates for the statements
+            # that follow at this nesting level
+            inner = self._lock_of(fn.value)
+            if inner is not None:
+                if fn.attr == "acquire" and inner not in held:
+                    self._acquire(inner, held, node.lineno)
+                    held.add(inner)
+                elif fn.attr == "release":
+                    held.discard(inner)
+                return
+            recv_t = self._type_of(fn.value)
+            if recv_t is not None:
+                self.calls.append((recv_t, fn.attr,
+                                   (node.lineno, *sorted(held))))
+            attr = _self_attr(fn)
+            if attr is not None and attr in self.ci.methods:
+                self.calls.append((self.ci.name, attr,
+                                   (node.lineno, *sorted(held))))
+                # the holds-lock contract: callers must already hold
+                target = self.ci.methods[attr]
+                for req in _line_ann(self.ci.sf, _HOLDS_RE,
+                                     target.lineno):
+                    if req in self.ci.locks and req not in held:
+                        self._report(
+                            node.lineno,
+                            f"call to {self.ci.name}.{attr}() which "
+                            f"requires `{req}` held (holds-lock) "
+                            f"without holding it")
+
+    def _visit(self, node: ast.AST, held: Set[str]) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # a nested def runs later (thread targets, callbacks):
+            # locks held at the definition site are NOT held then
+            for stmt in node.body:
+                self._visit(stmt, set())
+            return
+        if isinstance(node, ast.With):
+            acquired: List[str] = []
+            for item in node.items:
+                ce = item.context_expr
+                self._visit(ce, held)
+                lock = self._lock_of(ce)
+                if lock is not None:
+                    self._acquire(lock, held, node.lineno)
+                    acquired.append(lock)
+            inner = held | set(acquired)
+            for stmt in node.body:
+                self._visit(stmt, inner)
+            return
+        if isinstance(node, ast.Assign):
+            self._note_assign(node)
+        elif isinstance(node, ast.For):
+            self._note_for(node)
+        elif isinstance(node, ast.Call):
+            self._handle_call(node, held)
+        elif isinstance(node, ast.Attribute):
+            self._check_access(node, held)
+        for child in ast.iter_child_nodes(node):
+            self._visit(child, held)
+
+
+def _find_cycles(edges: Dict[Tuple[Node, Node], Tuple[str, int]],
+                 lock_kinds: Dict[Node, str],
+                 out: List[Finding]) -> None:
+    adj: Dict[Node, List[Node]] = {}
+    for (a, b) in edges:
+        if a == b:
+            if lock_kinds.get(a) != "RLock":
+                rel, line = edges[(a, b)]
+                out.append(Finding(
+                    _PASS, rel, line,
+                    f"{a[0]}.{a[1]} may be re-acquired on a path "
+                    f"that already holds it (non-reentrant) — "
+                    f"self-deadlock"))
+            continue
+        adj.setdefault(a, []).append(b)
+    seen_cycles: Set[frozenset] = set()
+    state: Dict[Node, int] = {}          # 1 = on stack, 2 = done
+
+    def dfs(n: Node, path: List[Node]) -> None:
+        state[n] = 1
+        path.append(n)
+        for m in adj.get(n, ()):
+            if state.get(m) == 1:
+                cyc = path[path.index(m):] + [m]
+                key = frozenset(cyc)
+                if key not in seen_cycles:
+                    seen_cycles.add(key)
+                    rel, line = edges[(n, m)]
+                    pretty = " -> ".join(f"{c}.{l}" for c, l in cyc)
+                    out.append(Finding(
+                        _PASS, rel, line,
+                        f"lock-order cycle (potential deadlock): "
+                        f"{pretty}"))
+            elif state.get(m) is None:
+                dfs(m, path)
+        path.pop()
+        state[n] = 2
+
+    for n in list(adj):
+        if state.get(n) is None:
+            dfs(n, [])
+
+
+@lint_pass(_PASS,
+           "guarded-by field accesses must hold their lock; the "
+           "cross-class lock graph must be acyclic")
+def run(project: Project) -> List[Finding]:
+    out: List[Finding] = []
+    classes = _collect_classes(project)
+    known = set(classes)
+    for ci in classes.values():
+        _collect_fields(ci, known, out)
+    # methods: access checks + direct acquisitions + resolved calls
+    edges: Dict[Tuple[Node, Node], Tuple[str, int]] = {}
+    scans: Dict[Tuple[str, str], _MethodScan] = {}
+    for ci in classes.values():
+        for name, meth in ci.methods.items():
+            ms = _MethodScan(classes, ci, meth, out, edges)
+            ms.run()
+            scans[(ci.name, name)] = ms
+    # transitive may-acquire per method, then call-site edges
+    may: Dict[Tuple[str, str], Set[Node]] = {
+        k: set(ms.acquires) for k, ms in scans.items()}
+    changed = True
+    while changed:
+        changed = False
+        for k, ms in scans.items():
+            for (recv, meth2, _site) in ms.calls:
+                extra = may.get((recv, meth2))
+                if extra and not extra <= may[k]:
+                    may[k] |= extra
+                    changed = True
+    for (cname, _mname), ms in scans.items():
+        for (recv, meth2, site) in ms.calls:
+            line, held = site[0], site[1:]
+            for node in may.get((recv, meth2), ()):
+                for h in held:
+                    key = ((cname, h), node)
+                    edges.setdefault(key, (ms.ci.sf.rel, line))
+    lock_kinds: Dict[Node, str] = {}
+    for ci in classes.values():
+        for attr, kind in ci.locks.items():
+            lock_kinds[(ci.name, attr)] = kind
+    _find_cycles(edges, lock_kinds, out)
+    return out

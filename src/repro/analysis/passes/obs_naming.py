@@ -1,0 +1,198 @@
+"""obs-naming: code <-> `src/repro/obs/README.md` naming-table parity.
+
+Every span name passed to ``TRACER.open/emit/span`` and every metric
+name passed to ``REGISTRY.counter/gauge/histogram`` must match a row
+of the README's span/metric tables, and every documented row must be
+emitted by at least one call site — no undocumented names, no dead
+documentation.
+
+Table names may use ``{a,b}`` alternation (expanded), ``{ident}``
+placeholders (wildcard segment), and a trailing ``[...]`` instance
+label (stripped on both sides).  f-string call sites contribute a
+wildcard segment per interpolation hole, so
+``f"{prefix}.stage.{st}.wall_seconds"`` matches
+``executor.stage.{name}.wall_seconds``.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import List, Optional, Tuple
+
+from repro.analysis.core import Finding, Project, lint_pass
+
+_PASS = "obs-naming"
+_README = "src/repro/obs/README.md"
+_WILD = "\0"
+
+_METRIC_METHODS = {"counter", "gauge", "histogram"}
+_SPAN_METHODS = {"open", "emit", "span"}
+_ALT_RE = re.compile(r"\{([^{}]*,[^{}]*)\}")
+_PLACEHOLDER_RE = re.compile(r"\{[A-Za-z_]\w*\}")
+_INSTANCE_RE = re.compile(r"\[[^\[\]]*\]\s*$")
+_BACKTICK_RE = re.compile(r"`([^`]+)`")
+
+Pattern = Tuple[str, ...]        # dotted segments; _WILD = wildcard
+
+
+def _expand(name: str) -> List[str]:
+    m = _ALT_RE.search(name)
+    if not m:
+        return [name]
+    out: List[str] = []
+    for alt in m.group(1).split(","):
+        out.extend(_expand(name[:m.start()] + alt.strip()
+                           + name[m.end():]))
+    return out
+
+
+def _to_pattern(name: str) -> Pattern:
+    name = _INSTANCE_RE.sub("", name.strip())
+    name = _PLACEHOLDER_RE.sub(_WILD, name)
+    return tuple(_WILD if _WILD in seg else seg
+                 for seg in name.split("."))
+
+
+def _doc_patterns(text: str) -> List[Tuple[Pattern, int, str]]:
+    """(pattern, line, raw) for every backticked name in a first
+    table column.  Tokens starting with ``.`` continue the previous
+    token (``broker.{d,t}.dispatches` / `.units_in```)."""
+    out: List[Tuple[Pattern, int, str]] = []
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        if not line.lstrip().startswith("|"):
+            continue
+        first_cell = line.split("|")[1] if "|" in line else ""
+        prev: Optional[str] = None
+        for raw in _BACKTICK_RE.findall(first_cell):
+            raw = raw.strip()
+            if raw.startswith(".") and prev is not None:
+                n_seg = len([s for s in raw.split(".") if s])
+                base = prev.split(".")
+                raw = ".".join(base[:-n_seg]) + raw
+            prev = raw
+            for name in _expand(raw):
+                out.append((_to_pattern(name), lineno, raw))
+    return out
+
+
+def _match(a: Pattern, b: Pattern) -> bool:
+    return len(a) == len(b) and all(
+        x == _WILD or y == _WILD or x == y for x, y in zip(a, b))
+
+
+def _name_arg(node: ast.Call) -> Optional[str]:
+    """The name literal of a call's first argument: plain string, or
+    an f-string with _WILD holes.  None = not statically knowable."""
+    if not node.args:
+        return None
+    arg = node.args[0]
+    if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+        return arg.value
+    if isinstance(arg, ast.JoinedStr):
+        parts: List[str] = []
+        for v in arg.values:
+            if isinstance(v, ast.Constant):
+                parts.append(str(v.value))
+            else:
+                parts.append(_WILD)
+        return "".join(parts)
+    if isinstance(arg, ast.Name):
+        # a previously-assigned literal (e.g. span_name = f"stage...")
+        return None
+    return None
+
+
+def _receiver(node: ast.Call) -> Optional[str]:
+    fn = node.func
+    if not isinstance(fn, ast.Attribute):
+        return None
+    v = fn.value
+    base = v.id if isinstance(v, ast.Name) else \
+        v.attr if isinstance(v, ast.Attribute) else None
+    if base in ("TRACER", "tracer") and fn.attr in _SPAN_METHODS:
+        return "span"
+    if base in ("REGISTRY", "registry") \
+            and fn.attr in _METRIC_METHODS:
+        return "metric"
+    return None
+
+
+def _code_name_pattern(raw: str) -> Pattern:
+    raw = _INSTANCE_RE.sub("", raw)
+    # an f-string hole inside a [...] instance label leaves a
+    # dangling "[" once the closing bracket was consumed by the hole
+    raw = re.sub(r"\[[^\[\]]*$", "", raw)
+    return tuple(_WILD if _WILD in seg else seg
+                 for seg in raw.split("."))
+
+
+# names assigned to locals and used as the call arg later (the
+# executor's per-stage span_name) — resolved by a simple one-step scan
+def _literal_locals(tree: ast.Module) -> dict:
+    env: dict = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            fake = ast.Call(func=ast.Name(id="x", ctx=ast.Load()),
+                            args=[node.value], keywords=[])
+            lit = _name_arg(fake)
+            if lit is not None:
+                env[node.targets[0].id] = lit
+    return env
+
+
+@lint_pass(_PASS,
+           "span/metric name literals must appear in the obs README "
+           "naming tables and vice versa")
+def run(project: Project) -> List[Finding]:
+    out: List[Finding] = []
+    text = project.read_text(_README)
+    if text is None:
+        out.append(Finding(_PASS, _README, 1,
+                           "obs naming tables not found (README "
+                           "missing)"))
+        return out
+    docs = _doc_patterns(text)
+    if not docs:
+        out.append(Finding(_PASS, _README, 1,
+                           "no naming-table rows found in the obs "
+                           "README"))
+        return out
+    used = [False] * len(docs)
+    for sf in project.files:
+        if sf.tree is None:
+            continue
+        env = _literal_locals(sf.tree)
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            kind = _receiver(node)
+            if kind is None:
+                continue
+            raw = _name_arg(node)
+            if raw is None and node.args \
+                    and isinstance(node.args[0], ast.Name):
+                raw = env.get(node.args[0].id)
+            if raw is None:
+                continue
+            pat = _code_name_pattern(raw)
+            hit = False
+            for i, (dpat, _ln, _raw) in enumerate(docs):
+                if _match(pat, dpat):
+                    used[i] = True
+                    hit = True
+            if not hit:
+                shown = raw.replace(_WILD, "{...}")
+                out.append(Finding(
+                    _PASS, sf.rel, node.lineno,
+                    f"{kind} name `{shown}` is not documented in "
+                    f"{_README} — add it to the naming table (or fix "
+                    f"the name)"))
+    for (dpat, lineno, raw), was_used in zip(docs, used):
+        if not was_used:
+            out.append(Finding(
+                _PASS, _README, lineno,
+                f"documented name `{raw}` has no emitting call site "
+                f"— dead documentation (remove the row or restore "
+                f"the metric)"))
+    return out

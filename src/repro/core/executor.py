@@ -292,13 +292,13 @@ class BatchBroker:
         self.max_batch = int(max_batch)
         self.linger = float(linger_ms) / 1e3
         self._cv = threading.Condition()
-        self._pending: List[_BrokerRequest] = []
-        self._registered = 0
-        self._waiting = 0
-        self._closed = False
-        self.dispatches = 0
-        self.windows_in = 0
-        self.batch_fill: List[float] = []
+        self._pending: List[_BrokerRequest] = []    # guarded-by: _cv
+        self._registered = 0                        # guarded-by: _cv
+        self._waiting = 0                           # guarded-by: _cv
+        self._closed = False                        # guarded-by: _cv
+        self.dispatches = 0                         # guarded-by: _cv
+        self.windows_in = 0                         # guarded-by: _cv
+        self.batch_fill: List[float] = []           # guarded-by: _cv
         # registry mirrors (cached: registry reset zeroes in place)
         self._m_disp = REGISTRY.counter("broker.detect.dispatches")
         self._m_units = REGISTRY.counter("broker.detect.units_in")
@@ -401,6 +401,7 @@ class BatchBroker:
 
     # -- flush side -----------------------------------------------------------
 
+    # holds-lock: _cv
     def _should_flush(self) -> bool:
         if not self._pending:
             return False
@@ -408,6 +409,7 @@ class BatchBroker:
             return True
         return sum(r.n for r in self._pending) >= self.max_batch
 
+    # holds-lock: _cv
     def _apply_stats(self, stats: List[Tuple[int, int]]) -> None:
         """Fold per-dispatch (valid, bucket) counts into the public
         counters; called with the condition variable held (dispatches
@@ -574,13 +576,13 @@ class TrackBroker:
         self.max_streams = int(max_streams)
         self.linger = float(linger_ms) / 1e3
         self._cv = threading.Condition()
-        self._pending: List[_TrackRequest] = []
-        self._registered = 0
-        self._waiting = 0
-        self._closed = False
-        self.dispatches = 0
-        self.steps_in = 0
-        self.stream_fill: List[int] = []
+        self._pending: List[_TrackRequest] = []     # guarded-by: _cv
+        self._registered = 0                        # guarded-by: _cv
+        self._waiting = 0                           # guarded-by: _cv
+        self._closed = False                        # guarded-by: _cv
+        self.dispatches = 0                         # guarded-by: _cv
+        self.steps_in = 0                           # guarded-by: _cv
+        self.stream_fill: List[int] = []            # guarded-by: _cv
         # registry mirrors (cached: registry reset zeroes in place)
         self._m_disp = REGISTRY.counter("broker.track.dispatches")
         self._m_units = REGISTRY.counter("broker.track.units_in")
@@ -670,6 +672,7 @@ class TrackBroker:
 
     # -- flush side -----------------------------------------------------------
 
+    # holds-lock: _cv
     def _should_flush(self) -> bool:
         if not self._pending:
             return False
@@ -677,6 +680,7 @@ class TrackBroker:
             return True
         return len(self._pending) >= self.max_streams
 
+    # holds-lock: _cv
     def _apply_stats(self, stats: List[int]) -> None:
         for k in stats:
             self.dispatches += 1

@@ -102,6 +102,7 @@ def crop_embed(params, crops):
     x = _conv(crops, p["w0"], p["b0"], 2)
     x = _conv(x, p["w1"], p["b1"], 2)
     x = x.reshape(x.shape[0], -1)
+    # repro-lint: disable=bit-contract -- crop CNN runs upstream of the host/device split: one impl, both paths consume its output
     return jnp.tanh(x @ p["wd"] + p["bd"])
 
 
@@ -114,6 +115,7 @@ def embed_dets(params, crops, boxes, t_elapsed):
                        te / 8.0, jnp.log1p(te)], axis=1)
     d = jnp.concatenate([x, extra], axis=1)
     dp = params["det_proj"]
+    # repro-lint: disable=bit-contract -- train-only head; inference twins are _det_feats_np (host) / kernels.track_step (device)
     return jnp.tanh(d @ dp["w"] + dp["b"])
 
 
@@ -122,9 +124,12 @@ def gru_step(params, h, feat):
     """h: (..., H); feat: (..., e) -> new h."""
     g = params["gru"]
     hf = jnp.concatenate([feat, h], axis=-1)
+    # repro-lint: disable=bit-contract -- train-only head; inference twins are _gru_np (host) / kernels.track_step (device)
     z = jax.nn.sigmoid(hf @ g["wz"] + g["bz"])
+    # repro-lint: disable=bit-contract -- train-only head; inference twins are _gru_np (host) / kernels.track_step (device)
     r = jax.nn.sigmoid(hf @ g["wr"] + g["br"])
     hf2 = jnp.concatenate([feat, r * h], axis=-1)
+    # repro-lint: disable=bit-contract -- train-only head; inference twins are _gru_np (host) / kernels.track_step (device)
     cand = jnp.tanh(hf2 @ g["wh"] + g["bh"])
     return (1 - z) * h + z * cand
 
@@ -149,7 +154,9 @@ def match_logits(params, track_h, track_boxes, det_feats, det_boxes, te):
         jnp.broadcast_to(det_feats[None], (T, N, det_feats.shape[1])),
         rel,
     ], axis=-1)
+    # repro-lint: disable=bit-contract -- train-only head; inference twins are _match_np (host) / kernels.track_step (device)
     hid = jnp.tanh(pair @ m["w0"] + m["b0"])
+    # repro-lint: disable=bit-contract -- train-only head; inference twins are _match_np (host) / kernels.track_step (device)
     return (hid @ m["w1"] + m["b1"])[..., 0]
 
 
@@ -192,11 +199,13 @@ def _train_loss(params, crops, boxes, te, prefix_mask, cand_mask, labels,
                           axis=-1)
     pair = jnp.concatenate(
         [jnp.broadcast_to(hT[:, None], (B, K, H)), cand, rel], axis=-1)
+    # repro-lint: disable=bit-contract -- training loss; never on the serving path
     hid = jnp.tanh(pair @ m["w0"] + m["b0"])
+    # repro-lint: disable=bit-contract -- training loss; never on the serving path
     logits = (hid @ m["w1"] + m["b1"])[..., 0]          # (B, K)
     y = labels.astype(jnp.float32)
     bce = jnp.maximum(logits, 0) - logits * y \
-        + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+        + jnp.log1p(jnp.exp(-jnp.abs(logits)))  # repro-lint: disable=bit-contract -- training loss; never on the serving path
     return (bce * cand_mask).sum() / jnp.maximum(cand_mask.sum(), 1.0)
 
 

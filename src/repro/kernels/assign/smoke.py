@@ -1,0 +1,21 @@
+"""CI smoke: assign_pallas (interpret) must match the jnp reference
+bit-for-bit.  Costs are quantized to multiples of 1/64 so f32 potential
+arithmetic is exact and tie-breaking must agree."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.assign.kernel import assign_pallas
+from repro.kernels.assign.ref import assign_ref
+
+
+def smoke() -> None:
+    rng = np.random.default_rng(0)
+    for K, N in [(1, 1), (3, 4), (2, 9)]:
+        costs = rng.integers(0, 256, (K, N, N)).astype(np.float32) / 64.0
+        got = np.asarray(assign_pallas(jnp.asarray(costs),
+                                       interpret=True))
+        np.testing.assert_array_equal(got, assign_ref(costs))
+        for k in range(K):
+            assert sorted(got[k]) == list(range(N))   # permutation

@@ -2,7 +2,7 @@
 flash-attention oracle with Sq=1 and a kv_len mask)."""
 from __future__ import annotations
 
-from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_attention.ref import flash_attention_ref
 
 
 def decode_attention_ref(q, k, v, kv_len, *, sm_scale=None):
@@ -12,6 +12,6 @@ def decode_attention_ref(q, k, v, kv_len, *, sm_scale=None):
     attends to every cached position < kv_len, including itself if the
     caller already wrote it into the cache).
     """
-    out = attention_ref(q[:, None], k, v, causal=False, sm_scale=sm_scale,
-                        kv_len=kv_len)
+    out = flash_attention_ref(q[:, None], k, v, causal=False,
+                              sm_scale=sm_scale, kv_len=kv_len)
     return out[:, 0]

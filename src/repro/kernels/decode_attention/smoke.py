@@ -1,0 +1,29 @@
+"""CI smoke: decode_attention_pallas (interpret) vs the jnp oracle."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+_TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def smoke() -> None:
+    for dtype in (jnp.float32, jnp.bfloat16):
+        for B, S, Hq, Hkv, D, bk in [(2, 256, 8, 2, 64, 64),
+                                     (3, 128, 4, 4, 32, 128)]:
+            ks = jax.random.split(jax.random.PRNGKey(2), 4)
+            q = jax.random.normal(ks[0], (B, Hq, D)).astype(dtype)
+            k = jax.random.normal(ks[1], (B, S, Hkv, D)).astype(dtype)
+            v = jax.random.normal(ks[2], (B, S, Hkv, D)).astype(dtype)
+            kvlen = jax.random.randint(ks[3], (B,), 1, S + 1)
+            ref = decode_attention_ref(q, k, v, kvlen)
+            pal = decode_attention_pallas(q, k, v, kvlen, block_k=bk,
+                                          interpret=True)
+            tol = _TOL[dtype]
+            np.testing.assert_allclose(np.asarray(pal, np.float32),
+                                       np.asarray(ref, np.float32),
+                                       atol=tol, rtol=tol)

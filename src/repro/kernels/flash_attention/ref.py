@@ -8,8 +8,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
-def attention_ref(q, k, v, *, causal: bool = True, sm_scale=None,
-                  kv_len=None):
+def flash_attention_ref(q, k, v, *, causal: bool = True, sm_scale=None,
+                        kv_len=None):
     """q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D); GQA by head repetition.
 
     kv_len: optional (B,) int32 — valid KV prefix length (decode masking).
@@ -38,3 +38,7 @@ def attention_ref(q, k, v, *, causal: bool = True, sm_scale=None,
     probs = probs / probs.sum(axis=-1, keepdims=True)
     out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
     return out.astype(q.dtype)
+
+
+# pre-rename alias: the twin of flash_attention_pallas is named after it
+attention_ref = flash_attention_ref

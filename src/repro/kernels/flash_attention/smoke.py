@@ -1,0 +1,30 @@
+"""CI smoke: flash_attention_pallas (interpret) vs the jnp oracle."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+_TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def smoke() -> None:
+    for dtype in (jnp.float32, jnp.bfloat16):
+        for B, Sq, Skv, Hq, Hkv, D, causal in [
+                (2, 128, 128, 4, 2, 64, True),
+                (1, 64, 256, 4, 4, 32, False)]:
+            ks = jax.random.split(jax.random.PRNGKey(0), 3)
+            q = jax.random.normal(ks[0], (B, Sq, Hq, D)).astype(dtype)
+            k = jax.random.normal(ks[1], (B, Skv, Hkv, D)).astype(dtype)
+            v = jax.random.normal(ks[2], (B, Skv, Hkv, D)).astype(dtype)
+            ref = flash_attention_ref(q, k, v, causal=causal)
+            pal = flash_attention_pallas(q, k, v, causal=causal,
+                                         block_q=64, block_k=64,
+                                         interpret=True)
+            tol = _TOL[dtype]
+            np.testing.assert_allclose(np.asarray(pal, np.float32),
+                                       np.asarray(ref, np.float32),
+                                       atol=tol, rtol=tol)

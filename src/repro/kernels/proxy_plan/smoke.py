@@ -1,0 +1,25 @@
+"""CI smoke: proxy_plan_pallas (interpret) must match the jnp reference
+bit-for-bit (the plan fast paths depend on identical mapped grids)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.proxy_plan.kernel import proxy_plan_pallas
+from repro.kernels.proxy_plan.ops import span_matrix
+from repro.kernels.proxy_plan.ref import proxy_plan_ref
+
+
+def smoke() -> None:
+    rng = np.random.default_rng(0)
+    for B, hp, wp, C, hc, wc in [(2, 20, 32, 16, 5, 8),
+                                 (3, 6, 8, 16, 9, 11)]:
+        feat = rng.standard_normal((B, hp, wp, C)).astype(np.float32)
+        w = rng.standard_normal(C).astype(np.float32)
+        span_y = jnp.asarray(span_matrix(hc, hp))
+        span_x = jnp.asarray(span_matrix(wc, wp))
+        gp, sp = proxy_plan_pallas(feat, w, 0.1, 0.5, span_y, span_x,
+                                   interpret=True)
+        gr, sr = proxy_plan_ref(feat, w, 0.1, 0.5, span_y, span_x)
+        np.testing.assert_array_equal(np.asarray(gp), np.asarray(gr))
+        np.testing.assert_array_equal(np.asarray(sp), np.asarray(sr))

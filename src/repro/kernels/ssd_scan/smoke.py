@@ -1,0 +1,28 @@
+"""CI smoke: ssd_scan_pallas (interpret) vs the jnp oracle."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+
+def smoke() -> None:
+    for b, S, H, P, N, Q in [(2, 64, 4, 16, 8, 16),
+                             (1, 128, 2, 32, 16, 32)]:
+        ks = jax.random.split(jax.random.PRNGKey(3), 6)
+        x = jax.random.normal(ks[0], (b, S, H, P))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S, H))) * 0.5
+        A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+        B = jax.random.normal(ks[3], (b, S, N)) * 0.5
+        C = jax.random.normal(ks[4], (b, S, N)) * 0.5
+        D = jax.random.normal(ks[5], (H,)) * 0.1
+        yr, sr = ssd_scan_ref(x, dt, A, B, C, D)
+        yp, sp = ssd_scan_pallas(x, dt, A, B, C, D, chunk=Q,
+                                 interpret=True)
+        np.testing.assert_allclose(np.asarray(yp), np.asarray(yr),
+                                   atol=1e-4)
+        np.testing.assert_allclose(np.asarray(sp), np.asarray(sr),
+                                   atol=1e-4)

@@ -1,0 +1,59 @@
+"""CI smoke: track_step_pallas (interpret) must match the numpy oracle
+bit-for-bit (the fastmath host==device contract).
+
+Also home of :func:`track_operands`, the random-operand builder shared
+with the kernel micro-benchmarks.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.track_step import pack_params, track_step_ref
+from repro.kernels.track_step.kernel import track_step_pallas
+from repro.kernels.track_step.ops import LOG1P_TABLE_2D
+
+
+def track_operands(rng, K, Q, H, e, M):
+    """Random track-step operands honoring the slot contract (live
+    tracks / valid detections as prefixes, integer te gaps)."""
+    def g(*s):
+        return rng.standard_normal(s).astype(np.float32)
+
+    params = {
+        "det_proj/w": g(e + 6, e) * 0.5, "det_proj/b": g(e) * 0.1,
+        "gru/wz": g(e + H, H) * 0.5, "gru/wr": g(e + H, H) * 0.5,
+        "gru/wh": g(e + H, H) * 0.5,
+        "gru/bz": g(H) * 0.1, "gru/br": g(H) * 0.1, "gru/bh": g(H) * 0.1,
+        "match/w0": g(H + e + 6, M) * 0.5, "match/b0": g(M) * 0.1,
+        "match/w1": g(M, 1) * 0.5, "match/b1": g(1) * 0.1,
+    }
+    shapes = [(K, Q, H), (K, Q, 4), (K, Q), (K, Q), (K, Q),
+              (K, Q, e), (K, Q, 4), (K, Q)]
+    arrs = [np.zeros(s, np.float32) for s in shapes]
+    h_r, tbox_r, alive_r, te_gap_r, te_match, x, dbox, dvalid = arrs
+    for k in range(K):
+        T = int(rng.integers(0, Q + 1))
+        n = int(rng.integers(0, Q + 1))
+        h_r[k, :T] = g(T, H) * 0.5
+        tbox_r[k, :T] = rng.random((T, 4), np.float32)
+        alive_r[k, :T] = 1.0
+        te_gap_r[k, :T] = rng.integers(1, 9, T)
+        te_match[k] = float(rng.integers(0, 9))
+        x[k, :n] = g(n, e) * 0.5
+        dbox[k, :n] = rng.random((n, 4), np.float32)
+        dvalid[k, :n] = 1.0
+    return arrs, np.full((1, 1), 0.35, np.float32), params
+
+
+def smoke() -> None:
+    rng = np.random.default_rng(0)
+    for K, Q, H, e, M in [(2, 8, 16, 8, 16), (3, 16, 24, 16, 24)]:
+        arrs, thr, np_params = track_operands(rng, K, Q, H, e, M)
+        packed = pack_params(np_params)
+        ref = track_step_ref(*arrs, thr, packed, LOG1P_TABLE_2D)
+        pal = track_step_pallas(*[jnp.asarray(a) for a in arrs],
+                                jnp.asarray(thr), packed,
+                                LOG1P_TABLE_2D, interpret=True)
+        for r, p in zip(ref, pal):
+            np.testing.assert_array_equal(np.asarray(p), r)

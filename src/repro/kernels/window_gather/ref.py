@@ -8,6 +8,7 @@ import jax.numpy as jnp
 
 
 @functools.partial(jax.jit, static_argnames=("win_h", "win_w"))
+# repro-lint: disable=kernel-contract -- ref takes pixel origins; the kernel takes cell coordinates (callers pass origin_cells * cell); units differ by contract
 def window_gather_ref(frame, origins, *, win_h: int, win_w: int):
     """frame: (H, W, C); origins: (n, 2) int32 pixel (y, x) top-left corners.
 

@@ -1,0 +1,22 @@
+"""CI smoke: window_gather_pallas (interpret) must be an exact copy of
+the crop slices (ref takes pixel origins, kernel takes cell coords)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.window_gather.kernel import window_gather_pallas
+from repro.kernels.window_gather.ref import window_gather_ref
+
+
+def smoke() -> None:
+    frame = jax.random.normal(jax.random.PRNGKey(7), (160, 256, 3))
+    for wh, ww in [(64, 96), (32, 32)]:
+        oc = jnp.array([[0, 0], [1, 2], [2, 3]], jnp.int32)
+        oc = jnp.minimum(oc, jnp.array([(160 - wh) // 32,
+                                        (256 - ww) // 32]))
+        ref = window_gather_ref(frame, oc * 32, win_h=wh, win_w=ww)
+        pal = window_gather_pallas(frame, oc, win_h=wh, win_w=ww,
+                                   interpret=True)
+        np.testing.assert_array_equal(np.asarray(pal), np.asarray(ref))

@@ -56,7 +56,7 @@ class Counter:
 
     def __init__(self):
         self._lock = threading.Lock()
-        self._value = 0
+        self._value = 0                     # guarded-by: _lock
 
     def inc(self, n: int = 1) -> None:
         with self._lock:
@@ -71,7 +71,8 @@ class Counter:
 
     @property
     def value(self) -> int:
-        return self._value
+        with self._lock:
+            return self._value
 
 
 class Gauge:
@@ -102,11 +103,11 @@ class Histogram:
 
     def __init__(self, window: int = 4096):
         self._lock = threading.Lock()
-        self.count = 0
-        self.total = 0.0
-        self.min = math.inf
-        self.max = -math.inf
-        self._window: deque = deque(maxlen=window)
+        self.count = 0                      # guarded-by: _lock
+        self.total = 0.0                    # guarded-by: _lock
+        self.min = math.inf                 # guarded-by: _lock
+        self.max = -math.inf                # guarded-by: _lock
+        self._window: deque = deque(maxlen=window)  # guarded-by: _lock
 
     def observe(self, v: float) -> None:
         v = float(v)
@@ -139,14 +140,15 @@ class Histogram:
     def summary(self) -> dict:
         with self._lock:
             count, total = self.count, self.total
+            vmin, vmax = self.min, self.max
             vals = sorted(self._window)
         if not count:
             return {"count": 0}
         return {
             "count": count,
             "mean": total / count,
-            "min": self.min,
-            "max": self.max,
+            "min": vmin,
+            "max": vmax,
             "p50": self._quantile(vals, 0.50),
             "p95": self._quantile(vals, 0.95),
         }
@@ -163,7 +165,7 @@ class Registry:
 
     def __init__(self):
         self._lock = threading.Lock()
-        self._metrics: Dict[str, object] = {}
+        self._metrics: Dict[str, object] = {}   # guarded-by: _lock
 
     def _get(self, name: str, kind, **kw):
         with self._lock:
@@ -279,9 +281,9 @@ class RunProfile:
 
     def __init__(self, stages: Sequence[str]):
         self._lock = threading.Lock()
-        self.wall = {s: 0.0 for s in stages}
-        self.proc = {s: 0.0 for s in stages}
-        self.disp: Dict[str, int] = {}
+        self.wall = {s: 0.0 for s in stages}    # guarded-by: _lock
+        self.proc = {s: 0.0 for s in stages}    # guarded-by: _lock
+        self.disp: Dict[str, int] = {}          # guarded-by: _lock
 
     def note_stage(self, name: str, wall: float, proc: float) -> None:
         with self._lock:
@@ -293,7 +295,8 @@ class RunProfile:
             self.disp[name] = self.disp.get(name, 0) + n
 
     def dispatches(self, name: str) -> int:
-        return self.disp.get(name, 0)
+        with self._lock:
+            return self.disp.get(name, 0)
 
     def stage_seconds(self) -> Dict[str, Dict[str, float]]:
         with self._lock:
@@ -339,6 +342,7 @@ class DriftMonitor:
         self.trailing = max(1, int(trailing))
         self.proxy_bins = int(proxy_bins)
         self._lock = threading.Lock()
+        # guarded-by: _lock
         self._entries: deque = deque(maxlen=self.window + self.trailing)
 
     def observe(self, watermark: int,

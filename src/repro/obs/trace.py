@@ -94,9 +94,9 @@ class Tracer:
 
     def __init__(self, capacity: int = 65536):
         self.enabled = False
-        self._capacity = int(capacity)
+        self._capacity = int(capacity)  # guarded-by: _lock
         self._lock = threading.Lock()
-        self._spans: deque = deque(maxlen=self._capacity)
+        self._spans: deque = deque(maxlen=self._capacity)  # guarded-by: _lock
         self._ids = itertools.count(1)
         self._tls = threading.local()
 

@@ -146,9 +146,9 @@ class QueryService:
                             f"{type(stores).__name__}")
         self._ingest_lock = threading.Lock()
         self._hist_lock = threading.Lock()
-        self._history: Deque[QueryStats] = deque(maxlen=history)
+        self._history: Deque[QueryStats] = deque(maxlen=history)  # guarded-by: _hist_lock
         self._standing_lock = threading.Lock()
-        self._standing: List[object] = []
+        self._standing: List["StandingQuery"] = []  # guarded-by: _standing_lock
 
     @property
     def store(self) -> TrackStore:

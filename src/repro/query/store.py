@@ -266,21 +266,22 @@ class TrackStore:
         self.root = root
         self.bank = bank
         self.options = options
+        # guarded-by: _lock
         self.budget = budget
         self._lock = threading.RLock()
-        self._index: Dict[ClipKey, PackedTracks] = {}
+        self._index: Dict[ClipKey, PackedTracks] = {}   # guarded-by: _lock
         # per-clip index.json entries for the CURRENT fingerprint:
         # {"summary": ClipSummary, "bytes": int, "last_used": float,
         #  "present": bool}; populated lazily per dataset directory
-        self._entries: Dict[ClipKey, dict] = {}
-        self._loaded_datasets: Set[str] = set()
-        self.evictions = 0              # lifetime counters (this instance)
-        self.evicted_bytes = 0
+        self._entries: Dict[ClipKey, dict] = {}     # guarded-by: _lock
+        self._loaded_datasets: Set[str] = set()     # guarded-by: _lock
+        self.evictions = 0              # guarded-by: _lock (lifetime counters)
+        self.evicted_bytes = 0          # guarded-by: _lock
         from repro.obs.metrics import REGISTRY
         self._m_evictions = REGISTRY.counter("store.evictions")
         self._m_evicted_bytes = REGISTRY.counter("store.evicted_bytes")
-        self.params: Optional[PipelineParams] = None
-        self.fingerprint: Optional[str] = None
+        self.params: Optional[PipelineParams] = None    # guarded-by: _lock
+        self.fingerprint: Optional[str] = None      # guarded-by: _lock
         self.set_params(params)
 
     # -- versioning -----------------------------------------------------------
@@ -343,6 +344,7 @@ class TrackStore:
             return sum(e["bytes"] for e in self._entries.values()
                        if e["present"])
 
+    # holds-lock: _lock
     def _load_all_datasets(self) -> None:
         try:
             names = os.listdir(self.root)
@@ -352,6 +354,7 @@ class TrackStore:
             if os.path.isdir(os.path.join(self.root, dataset)):
                 self._ensure_loaded(dataset)
 
+    # holds-lock: _lock
     def _enforce_budget(self, protect: frozenset = frozenset()) -> int:
         """Evict TTL-expired then LRU clips (never ``protect``-ed ones)
         until the budget holds.  Caller must hold the lock."""
@@ -392,6 +395,7 @@ class TrackStore:
             self._flush_index(dataset)
         return self.evictions - n0
 
+    # holds-lock: _lock
     def _evict(self, key: ClipKey) -> None:
         """Drop one clip's NPZ from memory and disk; its summary stays
         in the entry map (and index.json) for index-based skipping.
@@ -412,14 +416,16 @@ class TrackStore:
 
     def _version_dir(self, dataset: str,
                      fingerprint: Optional[str] = None) -> str:
-        return os.path.join(self.root, dataset,
-                            fingerprint or self.fingerprint)
+        # repro-lint: disable=lock-discipline -- unlocked callers (has/get) always pass an explicit fingerprint snapshot; the default-arg read is only reached under the lock
+        fp = fingerprint or self.fingerprint
+        return os.path.join(self.root, dataset, fp)
 
     def _clip_path(self, key: ClipKey,
                    fingerprint: Optional[str] = None) -> str:
         return os.path.join(self._version_dir(key[0], fingerprint),
                             _clip_name(key) + ".npz")
 
+    # holds-lock: _lock
     def _write_meta(self, dataset: str) -> None:
         vdir = self._version_dir(dataset)
         os.makedirs(vdir, exist_ok=True)
@@ -439,6 +445,7 @@ class TrackStore:
     def _index_path(self, dataset: str) -> str:
         return os.path.join(self._version_dir(dataset), "index.json")
 
+    # holds-lock: _lock
     def _ensure_loaded(self, dataset: str) -> None:
         """Populate ``_entries`` from the dataset's index.json (once per
         dataset per fingerprint).  Caller must hold the lock."""
@@ -471,6 +478,7 @@ class TrackStore:
                 "watermark": None if wm is None else int(wm),
             }
 
+    # holds-lock: _lock
     def _flush_index(self, dataset: str) -> None:
         """Atomically rewrite the dataset's index.json from the entry
         map.  Caller must hold the lock."""
@@ -496,6 +504,7 @@ class TrackStore:
             json.dump(doc, f, indent=1)
         os.replace(tmp, path)
 
+    # holds-lock: _lock
     def _register(self, key: ClipKey, packed: PackedTracks,
                   path: str) -> None:
         """Record/refresh a clip's entry after load or materialize.
@@ -582,6 +591,7 @@ class TrackStore:
         packed = self.get(clip)
         if packed is None:
             raise KeyError(f"clip {clip_key(clip)} not materialized "
+                           # repro-lint: disable=lock-discipline -- error-message snapshot; a torn θ read only mislabels the exception
                            f"for θ {self.fingerprint}")
         return packed.tracks()
 
@@ -679,6 +689,7 @@ class TrackStore:
                     f"{len(cold)} cold clips but the store has no model "
                     f"bank to extract with")
             t0 = time.perf_counter()
+            # repro-lint: disable=lock-discipline -- batch ingest runs against a stable θ snapshot; set_params mid-ingest is unsupported (the fingerprint check in get() rejects stale results)
             results, seconds = run_clips(self.bank, self.params, cold,
                                          self.options)
             for clip, res in zip(cold, results):

@@ -118,14 +118,14 @@ class SegmentIngestor:
                 "live ingestion requires refine=False: refinement "
                 "rewrites already-served rows, breaking the stream's "
                 "append-only contract (refine offline after sealing)")
-        self.store = store
-        self.service = service
+        self.store: TrackStore = store
+        self.service: Optional["QueryService"] = service
         self.options = options or ExecutorOptions()
         self.checkpoint_every = max(0, int(checkpoint_every))
         self._executor = ClipExecutor(store.bank, store.params,
                                       self.options)
-        self._open: Dict[ClipKey, _OpenClip] = {}
-        self._appends: Dict[ClipKey, int] = {}
+        self._open: Dict[ClipKey, _OpenClip] = {}  # guarded-by: _lock
+        self._appends: Dict[ClipKey, int] = {}  # guarded-by: _lock
         self._lock = threading.RLock()
 
     # -- lifecycle ------------------------------------------------------------

@@ -123,11 +123,13 @@ class StandingQuery:
             k for k, c in zip(self._pos, self.clips)
             if plan.datasets is not None
             and c.profile.name not in plan.datasets}
-        self._state: Dict[ClipKey, _ClipState] = {}
+        self._state: Dict[ClipKey, _ClipState] = {}  # guarded-by: _lock
         self._lock = threading.Lock()
-        self.rows_scanned = 0           # lifetime counters: every
-        self.rows_skipped = 0           # delivered row is exactly one
-        self.clips_skipped = 0          # of scanned / summary-skipped
+        # lifetime counters: every delivered row is exactly one of
+        # scanned / summary-skipped
+        self.rows_scanned = 0           # guarded-by: _lock
+        self.rows_skipped = 0           # guarded-by: _lock
+        self.clips_skipped = 0          # guarded-by: _lock
         from repro.obs.metrics import REGISTRY
         self._m_scanned = REGISTRY.counter("standing.rows_scanned")
         self._m_skipped = REGISTRY.counter("standing.rows_skipped")
@@ -137,7 +139,7 @@ class StandingQuery:
         # lives in the per-clip counts/emitted state, so an always-on
         # stream must not grow memory per append (consumers wanting
         # every delta read them as they arrive from on_append)
-        self.deltas: Deque[StandingDelta] = deque(maxlen=history)
+        self.deltas: Deque[StandingDelta] = deque(maxlen=history)  # guarded-by: _lock
 
     # -- registration-time catch-up -------------------------------------------
 

@@ -1,0 +1,466 @@
+"""Self-tests for the ``repro.analysis`` contract linter: one seeded
+known-bad fixture per pass (each must be caught at the right file and
+line), suppression-comment mechanics, a fully clean fixture tree, and
+the real tree itself shipping lint-clean.  Also functional regression
+coverage for the three metrics races the lock-discipline pass found
+when it first ran (Counter.value, Histogram.summary min/max,
+RunProfile.dispatches)."""
+import math
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import PASSES, Project, run_passes
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def make_project(root: Path, files: dict) -> Project:
+    """Materialize ``{rel: source}`` under ``root`` (repo shape:
+    src/repro + benchmarks) and scan it."""
+    for rel, text in files.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(text))
+    return Project(root)
+
+
+def active(report, pass_id=None):
+    out = [f for f in report.findings if not f.suppressed]
+    if pass_id is not None:
+        out = [f for f in out if f.pass_id == pass_id]
+    return out
+
+
+# a README whose tables cover everything the clean fixtures emit
+OBS_README = """\
+    # obs naming
+
+    | span | meaning |
+    | --- | --- |
+    | `run.clip` | one executor run |
+
+    | metric | meaning |
+    | --- | --- |
+    | `executor.dispatches` | detector dispatch count |
+"""
+
+
+def test_registry_has_all_passes():
+    assert set(PASSES) == {"bit-contract", "kernel-contract",
+                           "lock-discipline", "obs-naming",
+                           "tracked-bytecode"}
+
+
+# -- seeded-bad fixture per pass ----------------------------------------------
+
+
+def test_bit_contract_catches_raw_tanh_in_tracker(tmp_path):
+    proj = make_project(tmp_path, {
+        "src/repro/core/tracker.py": """\
+            import jax.numpy as jnp
+
+            def gru(x):
+                return jnp.tanh(x)
+        """,
+    })
+    rep = run_passes(proj, select=["bit-contract"])
+    hits = active(rep, "bit-contract")
+    assert len(hits) == 1
+    f = hits[0]
+    assert f.path == "src/repro/core/tracker.py"
+    assert f.line == 4
+    assert "jnp.tanh" in f.message and "fastmath" in f.message
+
+
+def test_bit_contract_scopes_by_fastmath_import(tmp_path):
+    # same call: flagged in a fastmath importer, ignored elsewhere
+    body = """\
+        import jax.numpy as jnp
+        {imp}
+
+        def f(x):
+            return jnp.exp(x)
+    """
+    proj = make_project(tmp_path, {
+        "src/repro/query/uses.py":
+            body.format(imp="from repro.core import fastmath"),
+        "src/repro/query/free.py": body.format(imp=""),
+    })
+    hits = active(run_passes(proj, select=["bit-contract"]))
+    assert [f.path for f in hits] == ["src/repro/query/uses.py"]
+
+
+def test_bit_contract_catches_negative_drop_scatter(tmp_path):
+    proj = make_project(tmp_path, {
+        "src/repro/kernels/assign/helper.py": """\
+            def scatter(buf, vals):
+                idx = -1
+                return buf.at[idx].set(vals, mode="drop")
+        """,
+    })
+    hits = active(run_passes(proj, select=["bit-contract"]))
+    assert len(hits) == 1
+    assert hits[0].line == 3
+    assert "drop" in hits[0].message
+
+
+def test_kernel_contract_catches_missing_ref_twin(tmp_path):
+    proj = make_project(tmp_path, {
+        "src/repro/kernels/foo/__init__.py": "",
+        "src/repro/kernels/foo/kernel.py": """\
+            def foo_pallas(x, y, *, interpret=False):
+                return x
+        """,
+        "src/repro/kernels/foo/ops.py": "def foo(x, y): return x\n",
+        "src/repro/kernels/foo/smoke.py": "def smoke(): pass\n",
+    })
+    hits = active(run_passes(proj, select=["kernel-contract"]))
+    # missing ref.py file + foo_pallas lacking its foo_ref twin
+    assert {f.path for f in hits} == {"src/repro/kernels/foo/kernel.py"}
+    msgs = sorted(f.message for f in hits)
+    assert any("ref.py" in m for m in msgs)
+    assert any(f.line == 1 for f in hits)
+
+
+def test_kernel_contract_catches_signature_mismatch(tmp_path):
+    proj = make_project(tmp_path, {
+        "src/repro/kernels/foo/__init__.py": "",
+        "src/repro/kernels/foo/kernel.py": """\
+            def foo_pallas(frame, origins, *, interpret=False):
+                return frame
+        """,
+        "src/repro/kernels/foo/ops.py": "def foo(f, o): return f\n",
+        "src/repro/kernels/foo/ref.py": """\
+            def foo_ref(frame, centers):
+                return frame
+        """,
+        "src/repro/kernels/foo/smoke.py": "def smoke(): pass\n",
+    })
+    hits = active(run_passes(proj, select=["kernel-contract"]))
+    assert len(hits) == 1
+    f = hits[0]
+    assert f.path == "src/repro/kernels/foo/ref.py" and f.line == 1
+    assert "positional parameters must agree" in f.message
+
+
+def test_kernel_contract_catches_missing_interpret(tmp_path):
+    proj = make_project(tmp_path, {
+        "src/repro/kernels/foo/__init__.py": "",
+        "src/repro/kernels/foo/kernel.py": """\
+            def foo_pallas(x):
+                return x
+        """,
+        "src/repro/kernels/foo/ops.py": "def foo(x): return x\n",
+        "src/repro/kernels/foo/ref.py": "def foo_ref(x): return x\n",
+        "src/repro/kernels/foo/smoke.py": "def smoke(): pass\n",
+    })
+    hits = active(run_passes(proj, select=["kernel-contract"]))
+    assert any("interpret" in f.message and f.line == 1 for f in hits)
+
+
+LOCKED_COUNTER = """\
+    import threading
+
+    class Box:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self._n = 0  # guarded-by: _lock
+
+        def inc(self):
+            with self._lock:
+                self._n += 1
+
+        def peek(self):
+            return self._n
+"""
+
+
+def test_lock_discipline_catches_unguarded_read(tmp_path):
+    proj = make_project(
+        tmp_path, {"src/repro/obs/box.py": LOCKED_COUNTER})
+    hits = active(run_passes(proj, select=["lock-discipline"]))
+    assert len(hits) == 1
+    f = hits[0]
+    assert f.path == "src/repro/obs/box.py" and f.line == 13
+    assert "Box._n" in f.message and "_lock" in f.message
+
+
+def test_lock_discipline_regression_histogram_summary_shape(tmp_path):
+    # the exact shape of the pre-PR-9 Histogram.summary() bug this
+    # pass caught in obs/metrics.py: count snapshotted under the
+    # lock, min/max read again after releasing it
+    proj = make_project(tmp_path, {"src/repro/obs/hist.py": """\
+        import threading
+
+        class Hist:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.count = 0    # guarded-by: _lock
+                self.min = 0.0    # guarded-by: _lock
+
+            def observe(self, v):
+                with self._lock:
+                    self.count += 1
+                    self.min = min(self.min, v)
+
+            def summary(self):
+                with self._lock:
+                    count = self.count
+                return {"count": count, "min": self.min}
+    """})
+    hits = active(run_passes(proj, select=["lock-discipline"]))
+    assert len(hits) == 1
+    assert hits[0].line == 17
+    assert "Hist.min" in hits[0].message
+
+
+def test_lock_discipline_catches_lock_order_cycle(tmp_path):
+    proj = make_project(tmp_path, {"src/repro/core/pair.py": """\
+        import threading
+
+        class A:
+            def __init__(self, b):
+                self._lock = threading.Lock()
+                self.b: "B" = b
+
+            def poke(self):
+                with self._lock:
+                    self.b.touch()
+
+            def touch(self):
+                with self._lock:
+                    pass
+
+        class B:
+            def __init__(self, a):
+                self._lock = threading.Lock()
+                self.a: "A" = a
+
+            def poke(self):
+                with self._lock:
+                    self.a.touch()
+
+            def touch(self):
+                with self._lock:
+                    pass
+    """})
+    hits = active(run_passes(proj, select=["lock-discipline"]))
+    assert len(hits) == 1
+    assert "lock-order cycle" in hits[0].message
+    assert "A._lock" in hits[0].message and "B._lock" in hits[0].message
+
+
+def test_obs_naming_catches_undocumented_and_dead_names(tmp_path):
+    proj = make_project(tmp_path, {
+        "src/repro/obs/README.md": OBS_README + "| `obs.dead_row` | unused |\n",
+        "src/repro/obs/emit.py": """\
+            from repro.obs.metrics import REGISTRY
+            from repro.obs.trace import TRACER
+
+            def go():
+                TRACER.span("run.clip")
+                REGISTRY.counter("executor.dispatches").inc()
+                REGISTRY.counter("executor.typo_dispatches").inc()
+        """,
+    })
+    hits = active(run_passes(proj, select=["obs-naming"]))
+    assert len(hits) == 2
+    undoc = [f for f in hits if f.path == "src/repro/obs/emit.py"]
+    dead = [f for f in hits if f.path == "src/repro/obs/README.md"]
+    assert len(undoc) == 1 and undoc[0].line == 7
+    assert "executor.typo_dispatches" in undoc[0].message
+    assert len(dead) == 1 and "obs.dead_row" in dead[0].message
+
+
+def test_tracked_bytecode_catches_pyc(tmp_path):
+    proj = make_project(tmp_path, {
+        "src/repro/core/util.py": "x = 1\n",
+    })
+    pyc = tmp_path / "src/repro/core/__pycache__/util.cpython-311.pyc"
+    pyc.parent.mkdir(parents=True)
+    pyc.write_bytes(b"\x00")
+    hits = active(run_passes(proj, select=["tracked-bytecode"]))
+    assert len(hits) == 1
+    assert hits[0].path.endswith("util.cpython-311.pyc")
+
+
+# -- suppression mechanics ----------------------------------------------------
+
+
+def test_trailing_suppression_with_why_is_honored(tmp_path):
+    proj = make_project(tmp_path, {
+        "src/repro/core/tracker.py": """\
+            import jax.numpy as jnp
+
+            def gru(x):
+                return jnp.tanh(x)  # repro-lint: disable=bit-contract -- train-only head
+        """,
+    })
+    rep = run_passes(proj, select=["bit-contract"])
+    assert active(rep) == []
+    assert len(rep.suppressed) == 1
+    assert rep.suppressed[0].justification == "train-only head"
+
+
+def test_comment_above_suppresses_next_line_only(tmp_path):
+    proj = make_project(tmp_path, {
+        "src/repro/core/tracker.py": """\
+            import jax.numpy as jnp
+
+            def gru(x):
+                # repro-lint: disable=bit-contract -- twin below
+                y = jnp.tanh(x)
+                return jnp.tanh(y)
+        """,
+    })
+    rep = run_passes(proj, select=["bit-contract"])
+    hits = active(rep, "bit-contract")
+    assert [f.line for f in hits] == [6]
+    assert [f.line for f in rep.suppressed] == [5]
+
+
+def test_bare_suppression_is_itself_flagged(tmp_path):
+    proj = make_project(tmp_path, {
+        "src/repro/core/tracker.py": """\
+            import jax.numpy as jnp
+
+            def gru(x):
+                return jnp.tanh(x)  # repro-lint: disable=bit-contract
+        """,
+    })
+    rep = run_passes(proj, select=["bit-contract"])
+    bare = active(rep, "suppression")
+    assert len(bare) == 1 and bare[0].line == 4
+    assert "justification" in bare[0].message
+
+
+def test_file_wide_suppression(tmp_path):
+    proj = make_project(tmp_path, {
+        "src/repro/core/tracker.py": """\
+            # repro-lint: disable-file=bit-contract -- fixture: whole file exempt
+            import jax.numpy as jnp
+
+            def gru(x):
+                return jnp.tanh(x)
+        """,
+    })
+    rep = run_passes(proj, select=["bit-contract"])
+    assert active(rep, "bit-contract") == []
+
+
+def test_unparseable_file_is_a_finding(tmp_path):
+    proj = make_project(tmp_path, {
+        "src/repro/core/broken.py": "def f(:\n",
+    })
+    hits = active(run_passes(proj, select=["bit-contract"]), "parse")
+    assert len(hits) == 1
+    assert "syntax error" in hits[0].message
+
+
+def test_unknown_pass_id_rejected(tmp_path):
+    proj = make_project(tmp_path, {"src/repro/x.py": "x = 1\n"})
+    with pytest.raises(KeyError):
+        run_passes(proj, select=["no-such-pass"])
+
+
+# -- clean fixture + the real tree --------------------------------------------
+
+
+def test_clean_fixture_tree_is_clean(tmp_path):
+    proj = make_project(tmp_path, {
+        "src/repro/obs/README.md": OBS_README,
+        "src/repro/core/tracker.py": """\
+            from repro.core.fastmath import np_tanh
+
+            def gru(x):
+                return np_tanh(x)
+        """,
+        "src/repro/kernels/foo/__init__.py": "",
+        "src/repro/kernels/foo/kernel.py": """\
+            def foo_pallas(x, y, *, block, interpret=False):
+                return x
+        """,
+        "src/repro/kernels/foo/ops.py": "def foo(x, y): return x\n",
+        "src/repro/kernels/foo/ref.py": """\
+            def foo_ref(x, y, *, block):
+                return x
+        """,
+        "src/repro/kernels/foo/smoke.py": "def smoke(): pass\n",
+        "src/repro/obs/box.py": """\
+            import threading
+
+            class Box:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self._n = 0  # guarded-by: _lock
+
+                def inc(self):
+                    with self._lock:
+                        self._n += 1
+
+                def peek(self):
+                    with self._lock:
+                        return self._n
+        """,
+        "src/repro/obs/emit.py": """\
+            from repro.obs.metrics import REGISTRY
+            from repro.obs.trace import TRACER
+
+            def go():
+                TRACER.span("run.clip")
+                REGISTRY.counter("executor.dispatches").inc()
+        """,
+    })
+    rep = run_passes(proj)
+    assert active(rep) == [], [str(f) for f in active(rep)]
+
+
+def test_real_tree_ships_lint_clean():
+    proj = Project(REPO_ROOT)
+    assert len(proj.files) > 100      # really scanned the tree
+    rep = run_passes(proj)
+    assert active(rep) == [], [str(f) for f in active(rep)]
+    # every suppression in the tree carries a justification
+    assert all(f.justification for f in rep.suppressed)
+
+
+def test_report_json_roundtrip(tmp_path):
+    import json
+    proj = make_project(tmp_path, {
+        "src/repro/core/tracker.py": """\
+            import jax.numpy as jnp
+            y = jnp.exp(1.0)
+        """,
+    })
+    rep = run_passes(proj, select=["bit-contract"])
+    d = json.loads(rep.to_json())
+    assert d["counts"]["active"] == 1
+    assert d["findings"][0]["pass"] == "bit-contract"
+    assert d["findings"][0]["line"] == 2
+
+
+# -- metrics races the linter caught (functional regression) ------------------
+
+
+def test_counter_value_and_dispatches_locked_reads():
+    om = pytest.importorskip("repro.obs.metrics")
+    c = om.Counter()
+    c.inc(3)
+    assert c.value == 3
+    rp = om.RunProfile(["detect"])
+    rp.dispatch("detect", 2)
+    rp.dispatch("detect")
+    assert rp.dispatches("detect") == 3
+    assert rp.dispatches("track") == 0
+
+
+def test_histogram_summary_consistent_snapshot():
+    om = pytest.importorskip("repro.obs.metrics")
+    h = om.Histogram(window=8)
+    for v in (3.0, 1.0, 2.0):
+        h.observe(v)
+    s = h.summary()
+    assert s["count"] == 3 and s["min"] == 1.0 and s["max"] == 3.0
+    assert not math.isinf(s["min"])

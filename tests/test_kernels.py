@@ -7,7 +7,7 @@ import pytest
 
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.flash_attention.ops import _chunked_jnp, flash_attention
-from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.decode_attention.kernel import decode_attention_pallas
 from repro.kernels.decode_attention.ops import _jnp_fallback
 from repro.kernels.decode_attention.ref import decode_attention_ref
@@ -39,7 +39,7 @@ def test_flash_attention(dtype, B, Sq, Skv, Hq, Hkv, D, causal):
     q = _rand(ks[0], (B, Sq, Hq, D), dtype)
     k = _rand(ks[1], (B, Skv, Hkv, D), dtype)
     v = _rand(ks[2], (B, Skv, Hkv, D), dtype)
-    ref = attention_ref(q, k, v, causal=causal)
+    ref = flash_attention_ref(q, k, v, causal=causal)
     chk = _chunked_jnp(q, k, v, causal=causal, sm_scale=1.0 / D ** 0.5,
                        block_k=64)
     pal = flash_attention_pallas(q, k, v, causal=causal, block_q=64,
@@ -59,7 +59,7 @@ def test_flash_attention_ragged_noncausal():
     q = _rand(ks[0], (2, 100, 4, 32), jnp.float32)
     k = _rand(ks[1], (2, 75, 2, 32), jnp.float32)
     v = _rand(ks[2], (2, 75, 2, 32), jnp.float32)
-    ref = attention_ref(q, k, v, causal=False)
+    ref = flash_attention_ref(q, k, v, causal=False)
     got = flash_attention(q, k, v, causal=False, block_q=64, block_k=64)
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                atol=2e-5, rtol=2e-5)
