@@ -51,7 +51,8 @@ BENCHES = ("pipeline", "stream", "query")
 # medians) stay out — on the smoke workload those are jitter, not perf
 FPS_METRICS: Dict[str, List[str]] = {
     "pipeline": ["fps_per_frame", "fps_chunked", "fps_streaming",
-                 "fps_streaming_device_tracker"],
+                 "fps_streaming_device_tracker",
+                 "exporter.fps_scrape_on"],
     "stream": ["append_fps"],
     "query": ["cold_ingest_fps", "queries_per_second"],
 }
@@ -61,6 +62,9 @@ FPS_METRICS: Dict[str, List[str]] = {
 # the default fps tolerance run to run
 METRIC_TOL: Dict[str, float] = {
     "queries_per_second": 0.60,
+    # wall fps of a 4-thread broker fleet — thread scheduling on a
+    # shared runner swings this well past the default tolerance
+    "exporter.fps_scrape_on": 0.50,
 }
 
 # bit-identity gates: (path, expected value); any flip fails the run.
@@ -68,7 +72,8 @@ METRIC_TOL: Dict[str, float] = {
 # jit_entries_grew_after_warmup vary with broker coalescing and stay out
 GATES: Dict[str, List[Tuple[str, bool]]] = {
     "pipeline": [("tracks_identical", True),
-                 ("device_tracks_identical", True)],
+                 ("device_tracks_identical", True),
+                 ("exporter.tracks_identical", True)],
     "stream": [("fleet.tracks_bit_identical", True),
                ("rows_scanned_exactly_once", True),
                ("standing_matches_adhoc_and_reference", True)],

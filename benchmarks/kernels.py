@@ -167,13 +167,27 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="correctness gate only (no timing sweep)")
+    ap.add_argument("--serve", type=int, default=None, metavar="PORT",
+                    help="expose /metrics, /healthz and /snapshot on "
+                         "this port while the bench runs (0 = "
+                         "ephemeral; the URL is printed)")
     args = ap.parse_args(argv)
-    if args.smoke:
-        smoke()
-        return
-    print("name,us_per_call,tpu_est_us")
-    for r in run():
-        print(f"{r['name']},{r['us_per_call']:.1f},{r['tpu_est_us']:.2f}")
+    server = None
+    if args.serve is not None:
+        from repro.obs.serve import ObsServer
+        server = ObsServer(port=args.serve).start()
+        print(f"obs: serving {server.url}/metrics")
+    try:
+        if args.smoke:
+            smoke()
+            return
+        print("name,us_per_call,tpu_est_us")
+        for r in run():
+            print(f"{r['name']},{r['us_per_call']:.1f},"
+                  f"{r['tpu_est_us']:.2f}")
+    finally:
+        if server is not None:
+            server.stop()
 
 
 if __name__ == "__main__":

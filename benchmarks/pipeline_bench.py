@@ -237,6 +237,133 @@ def stream_scaling(bank, params, clips, stream_counts=(1, 4, 16),
     return out
 
 
+def exporter_overhead(bank, params, clips, reps: int = 3,
+                      smoke: bool = False, n_streams: int = 4) -> dict:
+    """The telemetry serving plane's cost on the hot path: an
+    ``n_streams`` broker fleet (per-frame regime) with a live scrape
+    loop hammering ``/metrics`` + ``/healthz`` vs the same fleet
+    unscraped.
+
+    Runs are PAIRED (off/on back to back, order alternating over an
+    EVEN number of reps) and per-stream tracks must be bit-identical
+    scraped vs unscraped on every rep — the no-perturbation contract
+    on the wire.  The fps row is informational: on a shared host both
+    wall and whole-process CPU of an identical fleet jitter by 10-15%
+    run to run (broker flush coalescing plus scheduler noise), so a
+    sub-percent effect cannot be resolved by differencing two arms.
+    ``overhead_pct`` is instead measured directly: the HTTP handler
+    threads account their own CPU per request (``ObsServer.stats()``)
+    and the overhead is that serving CPU over the scraped arms' total
+    process CPU.  Smoke mode asserts it below 1%."""
+    import dataclasses
+    import threading
+    import urllib.request
+
+    from repro.core.executor import (BatchBroker, ExecutorOptions,
+                                     run_clip_streamed)
+    from repro.obs.serve import ObsServer
+
+    params = dataclasses.replace(params, chunk_size=1)
+
+    def fleet():
+        results = [None] * n_streams
+        errors = []
+        broker = BatchBroker()
+
+        def one(i):
+            try:
+                opts = ExecutorOptions(prefetch=False,
+                                       batch_broker=broker)
+                results[i] = run_clip_streamed(
+                    bank, params, clips[i % len(clips)], opts)
+            except BaseException as exc:
+                errors.append(exc)
+
+        threads = [threading.Thread(target=one, args=(i,))
+                   for i in range(n_streams)]
+        c0 = time.process_time()
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        proc = time.process_time() - c0
+        broker.close()
+        assert not errors, errors
+        frames = sum(r.frames_processed for r in results)
+        return frames / wall, proc, results
+
+    server = ObsServer(port=0).start()
+    stop = threading.Event()
+    scrapes = [0]
+
+    def scraper():
+        while not stop.is_set():
+            for path in ("/metrics", "/healthz"):
+                try:
+                    urllib.request.urlopen(server.url + path,
+                                           timeout=2).read()
+                    scrapes[0] += 1
+                except Exception:
+                    pass
+            stop.wait(0.2)
+
+    fleet()                                 # warm both paths' compiles
+    reps = max(4, reps + reps % 2)          # even: alternation balances
+    fps_on, fps_off, sec_on, sec_off = [], [], [], []
+    identical = True
+    try:
+        for rep in range(reps):
+            arms = []
+            for scraped in ([False, True] if rep % 2 == 0
+                            else [True, False]):
+                if scraped:
+                    stop.clear()
+                    th = threading.Thread(target=scraper, daemon=True)
+                    th.start()
+                f, s, res = fleet()
+                if scraped:
+                    stop.set()
+                    th.join()
+                    fps_on.append(f)
+                    sec_on.append(s)
+                else:
+                    fps_off.append(f)
+                    sec_off.append(s)
+                arms.append(res)
+            for a, b in zip(arms[0], arms[1]):
+                identical &= len(a.tracks) == len(b.tracks) and all(
+                    np.array_equal(x, y)
+                    for x, y in zip(a.tracks, b.tracks))
+    finally:
+        stop.set()
+        server.stop()
+    assert identical, \
+        "a live /metrics scrape loop perturbed per-stream tracks"
+    stats = server.stats()
+    serve_cpu = stats["handler_cpu_seconds"]
+    overhead_pct = round(100.0 * serve_cpu / sum(sec_on), 3)
+    if smoke:
+        assert scrapes[0] > 0, "scrape loop never reached the server"
+        assert overhead_pct < 1.0, \
+            f"exporter overhead {overhead_pct:.2f}% >= 1% " \
+            f"({serve_cpu:.4f}s handler CPU over {stats['requests']} " \
+            f"requests vs {sum(sec_on):.2f}s scraped-fleet CPU)"
+    return {
+        "streams": n_streams,
+        "fps_scrape_on": round(float(np.median(fps_on)), 2),
+        "fps_scrape_off": round(float(np.median(fps_off)), 2),
+        "proc_seconds_scrape_on": round(sum(sec_on), 4),
+        "proc_seconds_scrape_off": round(sum(sec_off), 4),
+        "serve_cpu_seconds": round(serve_cpu, 4),
+        "serve_requests": stats["requests"],
+        "overhead_pct": overhead_pct,
+        "scrapes": scrapes[0],
+        "tracks_identical": bool(identical),
+    }
+
+
 def run(out_path: str | None = DEFAULT_OUT, reps: int = 7,
         smoke: bool = False, trace_out: str | None = None) -> dict:
     from repro import obs
@@ -349,6 +476,9 @@ def run(out_path: str | None = DEFAULT_OUT, reps: int = 7,
     fills = [s["batch_fill_mean"] for s in scaling.values()
              if s["batch_fill_mean"] > 0]
 
+    exporter = exporter_overhead(bank, params, clips, reps=reps,
+                                 smoke=smoke)
+
     result = {
         "benchmark": "pipeline_engine",
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
@@ -389,6 +519,11 @@ def run(out_path: str | None = DEFAULT_OUT, reps: int = 7,
         # sharing one BatchBroker vs N independent runs, plus the
         # consolidated dispatch count and mean bucket occupancy
         "fps_vs_streams": scaling,
+        # telemetry serving plane: broker-fleet fps with a live
+        # /metrics + /healthz scrape loop vs unscraped, paired reps —
+        # smoke asserts <1% process-fps overhead and bit-identical
+        # tracks under scrape
+        "exporter": exporter,
         "detector_dispatches": {k: v["detector_dispatches"]
                                 for k, v in scaling.items()},
         "batch_fill_mean": round(float(np.mean(fills)), 4) if fills
@@ -425,12 +560,25 @@ def main(argv=None) -> None:
     ap.add_argument("--trace-out", default=None,
                     help="enable tracing and write JSON-lines spans "
                          "here (tracing is off otherwise)")
+    ap.add_argument("--serve", type=int, default=None, metavar="PORT",
+                    help="expose /metrics, /healthz and /snapshot on "
+                         "this port while the bench runs (0 = "
+                         "ephemeral; the URL is printed)")
     args = ap.parse_args(argv)
     # default=None keeps an explicit `--out <default path>` detectable
     out = args.out if args.out is not None else \
         (None if args.smoke else DEFAULT_OUT)
-    r = run(out, reps=args.reps, smoke=args.smoke,
-            trace_out=args.trace_out)
+    server = None
+    if args.serve is not None:
+        from repro.obs.serve import ObsServer
+        server = ObsServer(port=args.serve).start()
+        print(f"obs: serving {server.url}/metrics")
+    try:
+        r = run(out, reps=args.reps, smoke=args.smoke,
+                trace_out=args.trace_out)
+    finally:
+        if server is not None:
+            server.stop()
     print(f"per-frame engine : {r['fps_per_frame']:8.1f} frames/sec")
     print(f"chunked engine   : {r['fps_chunked']:8.1f} frames/sec")
     print(f"streaming engine : {r['fps_streaming']:8.1f} frames/sec"
@@ -453,6 +601,13 @@ def main(argv=None) -> None:
               f"{s['detector_dispatches_independent']}, "
               f"fill {s['batch_fill_mean']:.2f}; track "
               f"{s['track_dispatches']} @ {s['track_fill_mean']:.2f})")
+    e = r["exporter"]
+    print(f"exporter overhead: {e['overhead_pct']:.3f}% of fleet CPU "
+          f"({e['serve_cpu_seconds']:.4f}s handler CPU over "
+          f"{e['serve_requests']} requests vs "
+          f"{e['proc_seconds_scrape_on']:.2f}s scraped-fleet CPU, "
+          f"{e['scrapes']} scrapes; identical: "
+          f"{e['tracks_identical']})")
     print(f"detector jit entries: {r['detector_jit_entries']}"
           f" (stable after warmup: "
           f"{not r['jit_entries_grew_after_warmup']})")

@@ -282,10 +282,23 @@ def main(argv=None) -> None:
     ap.add_argument("--trace-out", default=None,
                     help="enable tracing and write JSON-lines spans "
                          "here (tracing is off otherwise)")
+    ap.add_argument("--serve", type=int, default=None, metavar="PORT",
+                    help="expose /metrics, /healthz and /snapshot on "
+                         "this port while the bench runs (0 = "
+                         "ephemeral; the URL is printed)")
     args = ap.parse_args(argv)
     out = args.out if args.out is not None else DEFAULT_OUT
-    r = run(out, reps=args.reps, clients=args.clients, smoke=args.smoke,
-            trace_out=args.trace_out)
+    server = None
+    if args.serve is not None:
+        from repro.obs.serve import ObsServer
+        server = ObsServer(port=args.serve).start()
+        print(f"obs: serving {server.url}/metrics")
+    try:
+        r = run(out, reps=args.reps, clients=args.clients,
+                smoke=args.smoke, trace_out=args.trace_out)
+    finally:
+        if server is not None:
+            server.stop()
     print(f"cold ingest      : {r['cold_ingest_seconds']:8.2f}s "
           f"({r['cold_ingest_fps']:.1f} fps)")
     for name, ms in r["warm_query_ms"].items():

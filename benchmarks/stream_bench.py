@@ -381,9 +381,22 @@ def main(argv=None) -> None:
     ap.add_argument("--trace-out", default=None,
                     help="enable tracing and write JSON-lines spans "
                          "here (tracing is off otherwise)")
+    ap.add_argument("--serve", type=int, default=None, metavar="PORT",
+                    help="expose /metrics, /healthz and /snapshot on "
+                         "this port while the bench runs (0 = "
+                         "ephemeral; the URL is printed)")
     args = ap.parse_args(argv)
     out = args.out if args.out is not None else DEFAULT_OUT
-    r = run(out, smoke=args.smoke, trace_out=args.trace_out)
+    server = None
+    if args.serve is not None:
+        from repro.obs.serve import ObsServer
+        server = ObsServer(port=args.serve).start()
+        print(f"obs: serving {server.url}/metrics")
+    try:
+        r = run(out, smoke=args.smoke, trace_out=args.trace_out)
+    finally:
+        if server is not None:
+            server.stop()
     a = r["append_ms"]
     print(f"append latency   : {a['median']:8.2f} ms median "
           f"(p95 {a['p95']:.2f}; executor {a['executor_median']:.2f} "

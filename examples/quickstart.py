@@ -241,6 +241,33 @@ def main() -> None:
         print(f"  wrote {trace} (Chrome trace) and {jsonl} "
               f"(JSON-lines)")
 
+        print("\n== the same telemetry over HTTP (obs.serve) ==")
+        # the serving plane: a background stdlib exporter mounting
+        # Prometheus /metrics, component-health /healthz (with the SLO
+        # engine's rolling-window verdicts) and a full JSON /snapshot.
+        # It costs nothing until start()ed, and a concurrent scraper
+        # never perturbs tracks — the same no-perturbation contract as
+        # tracing, asserted in tests/test_obs_serve.py
+        import json
+        import urllib.request
+
+        from repro.obs.serve import ObsServer
+        from repro.obs.slo import SloEngine
+
+        with ObsServer(port=0, slo=SloEngine()) as server:
+            text = urllib.request.urlopen(
+                server.url + "/metrics", timeout=5).read().decode()
+            hz = json.loads(urllib.request.urlopen(
+                server.url + "/healthz", timeout=5).read().decode())
+        sample = next((ln for ln in text.splitlines()
+                       if ln.startswith("stream_appends")),
+                      text.splitlines()[-1])
+        print(f"  GET /metrics: {len(text.splitlines())} exposition "
+              f"lines, e.g. `{sample}`")
+        comps = ", ".join(f"{n}={c['status']}"
+                          for n, c in hz["components"].items())
+        print(f"  GET /healthz: {hz['status']} ({comps})")
+
 
 if __name__ == "__main__":
     main()

@@ -1,10 +1,16 @@
 """obs-naming: code <-> `src/repro/obs/README.md` naming-table parity.
 
-Every span name passed to ``TRACER.open/emit/span`` and every metric
-name passed to ``REGISTRY.counter/gauge/histogram`` must match a row
-of the README's span/metric tables, and every documented row must be
-emitted by at least one call site — no undocumented names, no dead
-documentation.
+Every span name passed to ``TRACER.open/emit/span``, every metric name
+passed to ``REGISTRY.counter/gauge/histogram/provider``, every endpoint
+path passed to ``@route(...)``, every ``HealthComponent(...)`` name and
+every ``AlertRule(...)`` name must match a row of the README's tables,
+and every documented row must have at least one emitting call site —
+no undocumented names, no dead documentation.
+
+Rows are pooled by the markdown section they appear under: a heading
+containing ``endpoint`` / ``health`` / ``alert`` opens that pool; any
+other heading (or none — bare tables in tests) opens the shared
+span/metric pool.  Code sites check only against their own pool.
 
 Table names may use ``{a,b}`` alternation (expanded), ``{ident}``
 placeholders (wildcard segment), and a trailing ``[...]`` instance
@@ -25,8 +31,12 @@ _PASS = "obs-naming"
 _README = "src/repro/obs/README.md"
 _WILD = "\0"
 
-_METRIC_METHODS = {"counter", "gauge", "histogram"}
+_METRIC_METHODS = {"counter", "gauge", "histogram", "provider"}
 _SPAN_METHODS = {"open", "emit", "span"}
+# constructor/decorator names whose first (or ``name=``/``path=``)
+# string literal is a lintable name, and the pool it checks against
+_NAMED_CTORS = {"route": "endpoint", "HealthComponent": "health",
+                "AlertRule": "alert"}
 _ALT_RE = re.compile(r"\{([^{}]*,[^{}]*)\}")
 _PLACEHOLDER_RE = re.compile(r"\{[A-Za-z_]\w*\}")
 _INSTANCE_RE = re.compile(r"\[[^\[\]]*\]\s*$")
@@ -53,13 +63,30 @@ def _to_pattern(name: str) -> Pattern:
                  for seg in name.split("."))
 
 
-def _doc_patterns(text: str) -> List[Tuple[Pattern, int, str]]:
-    """(pattern, line, raw) for every backticked name in a first
+def _section_pool(heading: str) -> str:
+    h = heading.lower()
+    if "endpoint" in h:
+        return "endpoint"
+    if "health" in h:
+        return "health"
+    if "alert" in h:
+        return "alert"
+    return "name"
+
+
+def _doc_patterns(text: str) -> List[Tuple[Pattern, int, str, str]]:
+    """(pattern, line, raw, pool) for every backticked name in a first
     table column.  Tokens starting with ``.`` continue the previous
-    token (``broker.{d,t}.dispatches` / `.units_in```)."""
-    out: List[Tuple[Pattern, int, str]] = []
+    token (``broker.{d,t}.dispatches` / `.units_in```).  The pool is
+    the enclosing markdown section's (see ``_section_pool``)."""
+    out: List[Tuple[Pattern, int, str, str]] = []
+    pool = "name"
     for lineno, line in enumerate(text.splitlines(), start=1):
-        if not line.lstrip().startswith("|"):
+        stripped = line.strip()
+        if stripped.startswith("#"):
+            pool = _section_pool(stripped.lstrip("#"))
+            continue
+        if not stripped.startswith("|"):
             continue
         first_cell = line.split("|")[1] if "|" in line else ""
         prev: Optional[str] = None
@@ -71,7 +98,7 @@ def _doc_patterns(text: str) -> List[Tuple[Pattern, int, str]]:
                 raw = ".".join(base[:-n_seg]) + raw
             prev = raw
             for name in _expand(raw):
-                out.append((_to_pattern(name), lineno, raw))
+                out.append((_to_pattern(name), lineno, raw, pool))
     return out
 
 
@@ -80,12 +107,7 @@ def _match(a: Pattern, b: Pattern) -> bool:
         x == _WILD or y == _WILD or x == y for x, y in zip(a, b))
 
 
-def _name_arg(node: ast.Call) -> Optional[str]:
-    """The name literal of a call's first argument: plain string, or
-    an f-string with _WILD holes.  None = not statically knowable."""
-    if not node.args:
-        return None
-    arg = node.args[0]
+def _str_literal(arg: ast.AST) -> Optional[str]:
     if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
         return arg.value
     if isinstance(arg, ast.JoinedStr):
@@ -96,24 +118,45 @@ def _name_arg(node: ast.Call) -> Optional[str]:
             else:
                 parts.append(_WILD)
         return "".join(parts)
-    if isinstance(arg, ast.Name):
-        # a previously-assigned literal (e.g. span_name = f"stage...")
-        return None
     return None
 
 
-def _receiver(node: ast.Call) -> Optional[str]:
+def _name_arg(node: ast.Call) -> Optional[str]:
+    """The name literal of a call's first argument (or a ``name=`` /
+    ``path=`` keyword): plain string, or an f-string with _WILD holes.
+    None = not statically knowable."""
+    if node.args:
+        return _str_literal(node.args[0])
+    for kw in node.keywords:
+        if kw.arg in ("name", "path"):
+            return _str_literal(kw.value)
+    return None
+
+
+def _callable_name(fn: ast.AST) -> Optional[str]:
+    if isinstance(fn, ast.Name):
+        return fn.id
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    return None
+
+
+def _receiver(node: ast.Call) -> Optional[Tuple[str, str]]:
+    """(display kind, doc pool) for a lintable call, else None."""
     fn = node.func
-    if not isinstance(fn, ast.Attribute):
-        return None
-    v = fn.value
-    base = v.id if isinstance(v, ast.Name) else \
-        v.attr if isinstance(v, ast.Attribute) else None
-    if base in ("TRACER", "tracer") and fn.attr in _SPAN_METHODS:
-        return "span"
-    if base in ("REGISTRY", "registry") \
-            and fn.attr in _METRIC_METHODS:
-        return "metric"
+    if isinstance(fn, ast.Attribute):
+        v = fn.value
+        base = v.id if isinstance(v, ast.Name) else \
+            v.attr if isinstance(v, ast.Attribute) else None
+        if base in ("TRACER", "tracer") and fn.attr in _SPAN_METHODS:
+            return "span", "name"
+        if base in ("REGISTRY", "registry") \
+                and fn.attr in _METRIC_METHODS:
+            return "metric", "name"
+    ctor = _callable_name(fn)
+    if ctor in _NAMED_CTORS:
+        pool = _NAMED_CTORS[ctor]
+        return pool, pool
     return None
 
 
@@ -133,17 +176,15 @@ def _literal_locals(tree: ast.Module) -> dict:
     for node in ast.walk(tree):
         if isinstance(node, ast.Assign) and len(node.targets) == 1 \
                 and isinstance(node.targets[0], ast.Name):
-            fake = ast.Call(func=ast.Name(id="x", ctx=ast.Load()),
-                            args=[node.value], keywords=[])
-            lit = _name_arg(fake)
+            lit = _str_literal(node.value)
             if lit is not None:
                 env[node.targets[0].id] = lit
     return env
 
 
 @lint_pass(_PASS,
-           "span/metric name literals must appear in the obs README "
-           "naming tables and vice versa")
+           "span/metric/endpoint/health/alert name literals must "
+           "appear in the obs README naming tables and vice versa")
 def run(project: Project) -> List[Finding]:
     out: List[Finding] = []
     text = project.read_text(_README)
@@ -166,9 +207,10 @@ def run(project: Project) -> List[Finding]:
         for node in ast.walk(sf.tree):
             if not isinstance(node, ast.Call):
                 continue
-            kind = _receiver(node)
-            if kind is None:
+            rec = _receiver(node)
+            if rec is None:
                 continue
+            kind, pool = rec
             raw = _name_arg(node)
             if raw is None and node.args \
                     and isinstance(node.args[0], ast.Name):
@@ -177,8 +219,8 @@ def run(project: Project) -> List[Finding]:
                 continue
             pat = _code_name_pattern(raw)
             hit = False
-            for i, (dpat, _ln, _raw) in enumerate(docs):
-                if _match(pat, dpat):
+            for i, (dpat, _ln, _raw, dpool) in enumerate(docs):
+                if dpool == pool and _match(pat, dpat):
                     used[i] = True
                     hit = True
             if not hit:
@@ -188,7 +230,7 @@ def run(project: Project) -> List[Finding]:
                     f"{kind} name `{shown}` is not documented in "
                     f"{_README} — add it to the naming table (or fix "
                     f"the name)"))
-    for (dpat, lineno, raw), was_used in zip(docs, used):
+    for (dpat, lineno, raw, _pool), was_used in zip(docs, used):
         if not was_used:
             out.append(Finding(
                 _PASS, _README, lineno,

@@ -81,6 +81,7 @@ from repro.core.windows import (ChunkPlan, full_frame_plan, plan_chunk,
                                 plan_from_mapped)
 from repro.data.video_synth import Clip
 from repro.obs.metrics import REGISTRY, RunProfile, drift_enabled
+from repro.obs.recorder import crash_dump
 from repro.obs.trace import TRACER
 
 DEFAULT_CHUNK = 16     # frames per chunk (B) when θ does not say
@@ -1268,6 +1269,10 @@ class DecodePool:
         self.workers = max(1, int(workers))
         self._jobs: "queue.Queue" = queue.Queue()
         self._closed = False
+        # /healthz backpressure signal: undecoded jobs on the shared
+        # FIFO (qsize is advisory, which is all a health grade needs)
+        self._m_queue_depth = REGISTRY.gauge(
+            "executor.decode.queue_depth")
         self._threads = [
             threading.Thread(target=self._worker, daemon=True,
                              name=f"multiscope-pool-decode-{k}")
@@ -1284,6 +1289,7 @@ class DecodePool:
         run = _PoolRun(ctx, tasks, stages, depth)
         for i, task in enumerate(tasks):
             self._jobs.put((run, i, task))
+        self._m_queue_depth.set(self._jobs.qsize())
         return run
 
     def cancel(self, run: _PoolRun) -> None:
@@ -1326,6 +1332,7 @@ class DecodePool:
     def _worker(self) -> None:
         while True:
             job = self._jobs.get()
+            self._m_queue_depth.set(self._jobs.qsize())
             if job is None:
                 return
             run, i, task = job
@@ -1466,6 +1473,13 @@ class ClipExecutor:
         t0 = time.process_time()
         try:
             self.scheduler.drain(ctx, run.handle, self.stages)
+        except BaseException as exc:
+            # black box: a no-op unless a FlightRecorder is installed
+            crash_dump("executor.drain", exc,
+                       extra={"stream": ctx.stream,
+                              "frames": len(ctx.frame_ids),
+                              "chunk": ctx.chunk})
+            raise
         finally:
             ctx.close()
         tracks = ctx.tracker.result()

@@ -3,20 +3,36 @@
 ``from repro import obs`` then ``obs.enable()`` to trace,
 ``obs.REGISTRY.snapshot()`` to read metrics.  See obs/README.md for
 the naming scheme and the no-perturbation contract.
+
+The serving plane (``obs.serve.ObsServer`` — /metrics, /healthz,
+/snapshot over HTTP), the SLO engine (``obs.slo``) and the crash
+flight recorder (``obs.recorder``) load lazily: importing ``repro.obs``
+on the hot path pays for none of them.
 """
 from .trace import (Span, Tracer, TRACER, enable, disable, enabled,
                     export_jsonl, export_chrome)
-from .metrics import (Counter, Gauge, Histogram, Registry, REGISTRY,
-                      RunProfile, DriftMonitor, stage_block,
+from .metrics import (Counter, Gauge, Histogram, Provider, Registry,
+                      REGISTRY, RunProfile, DriftMonitor, stage_block,
                       empty_stage_block, merge_stage_blocks,
-                      assert_stage_sane, drift_enabled, enable_drift,
-                      disable_drift)
+                      assert_stage_sane, interp_quantile,
+                      drift_enabled, enable_drift, disable_drift)
 
 __all__ = [
     "Span", "Tracer", "TRACER", "enable", "disable", "enabled",
     "export_jsonl", "export_chrome",
-    "Counter", "Gauge", "Histogram", "Registry", "REGISTRY",
+    "Counter", "Gauge", "Histogram", "Provider", "Registry", "REGISTRY",
     "RunProfile", "DriftMonitor", "stage_block", "empty_stage_block",
-    "merge_stage_blocks", "assert_stage_sane",
+    "merge_stage_blocks", "assert_stage_sane", "interp_quantile",
     "drift_enabled", "enable_drift", "disable_drift",
+    "serve", "slo", "recorder",
 ]
+
+_LAZY_SUBMODULES = ("serve", "slo", "recorder")
+
+
+def __getattr__(name: str):
+    if name in _LAZY_SUBMODULES:
+        import importlib
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute "
+                         f"{name!r}")

@@ -39,9 +39,9 @@ import threading
 from collections import deque
 from typing import Dict, List, Mapping, Optional, Sequence
 
-__all__ = ["Counter", "Gauge", "Histogram", "Registry", "REGISTRY",
-           "RunProfile", "DriftMonitor", "stage_block",
-           "merge_stage_blocks", "assert_stage_sane",
+__all__ = ["Counter", "Gauge", "Histogram", "Provider", "Registry",
+           "REGISTRY", "RunProfile", "DriftMonitor", "stage_block",
+           "merge_stage_blocks", "assert_stage_sane", "interp_quantile",
            "drift_enabled", "enable_drift", "disable_drift"]
 
 # wall and thread-CPU clocks have independent resolutions; a stage sum
@@ -94,6 +94,20 @@ class Gauge:
         return self._value
 
 
+def interp_quantile(sorted_vals: Sequence[float], q: float) -> float:
+    """Linearly interpolated quantile over an already-sorted sequence
+    (the PR-4 ``latency_report`` convention: an even-length list's
+    median averages the two middle values rather than reporting the
+    upper one).  Shared by ``Histogram.summary`` and the SLO engine."""
+    if not sorted_vals:
+        return 0.0
+    pos = q * (len(sorted_vals) - 1)
+    lo = int(pos)
+    hi = min(lo + 1, len(sorted_vals) - 1)
+    frac = pos - lo
+    return sorted_vals[lo] * (1 - frac) + sorted_vals[hi] * frac
+
+
 class Histogram:
     """Running count/sum/min/max plus a bounded window of recent
     observations for percentile summaries.  ``summary()`` quantiles are
@@ -128,16 +142,16 @@ class Histogram:
             self.max = -math.inf
             self._window.clear()
 
-    def _quantile(self, sorted_vals: List[float], q: float) -> float:
-        if not sorted_vals:
-            return 0.0
-        pos = q * (len(sorted_vals) - 1)
-        lo = int(pos)
-        hi = min(lo + 1, len(sorted_vals) - 1)
-        frac = pos - lo
-        return sorted_vals[lo] * (1 - frac) + sorted_vals[hi] * frac
+    def window(self) -> List[float]:
+        """Copy of the retained observation window (newest last) — the
+        SLO engine's rolling-quantile input."""
+        with self._lock:
+            return list(self._window)
 
     def summary(self) -> dict:
+        # min/max (and everything else) are read under the lock: a
+        # concurrent observe() between unlocked reads could report a
+        # max from a sample the count does not include (the PR-9 race)
         with self._lock:
             count, total = self.count, self.total
             vmin, vmax = self.min, self.max
@@ -149,13 +163,44 @@ class Histogram:
             "mean": total / count,
             "min": vmin,
             "max": vmax,
-            "p50": self._quantile(vals, 0.50),
-            "p95": self._quantile(vals, 0.95),
+            "p50": interp_quantile(vals, 0.50),
+            "p95": interp_quantile(vals, 0.95),
+            "p99": interp_quantile(vals, 0.99),
         }
 
     @property
     def value(self) -> dict:
         return self.summary()
+
+
+class Provider:
+    """Callable-backed read-only metric: ``value`` invokes the
+    registered callable at snapshot time (DriftMonitor summaries ride
+    the registry this way — nothing is copied per append, the snapshot
+    reads the live monitor).  ``reset()`` is a no-op: the provider's
+    source owns its state.  A failing callable yields ``None`` rather
+    than breaking ``snapshot()``."""
+
+    __slots__ = ("_fn",)
+
+    def __init__(self):
+        self._fn = None
+
+    def set_fn(self, fn) -> None:
+        self._fn = fn
+
+    def reset(self) -> None:
+        pass
+
+    @property
+    def value(self):
+        fn = self._fn
+        if fn is None:
+            return None
+        try:
+            return fn()
+        except Exception:
+            return None
 
 
 class Registry:
@@ -186,6 +231,22 @@ class Registry:
 
     def histogram(self, name: str, window: int = 4096) -> Histogram:
         return self._get(name, Histogram, window=window)
+
+    def provider(self, name: str, fn) -> Provider:
+        """Register (or re-point) a callable-backed metric: its current
+        return value appears under ``name`` in ``snapshot()``.  Last
+        registration wins — a re-opened stream's fresh DriftMonitor
+        replaces the sealed one's under the same instance label."""
+        p = self._get(name, Provider)
+        p.set_fn(fn)
+        return p
+
+    def get(self, name: str):
+        """The live metric object registered under ``name`` (None when
+        absent) — lets readers reach ``Histogram.window()`` without
+        touching registry internals."""
+        with self._lock:
+            return self._metrics.get(name)
 
     def snapshot(self, prefix: str = "") -> dict:
         """{name: value} for counters/gauges, {name: summary dict} for

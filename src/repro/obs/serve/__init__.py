@@ -1,0 +1,22 @@
+"""The telemetry serving plane: an HTTP surface over ``obs.REGISTRY``.
+
+``ObsServer`` (a background stdlib ``ThreadingHTTPServer``) exposes
+
+* ``/metrics``  — Prometheus text exposition of the registry,
+* ``/snapshot`` — the full JSON state (registry incl. drift providers
+  and stage-seconds histograms, component health, SLO verdicts),
+* ``/healthz``  — declarative component health (200 ok/warn, 503 fail).
+
+Serving is strictly PULL: nothing runs, allocates, or locks until a
+request arrives, and a concurrent scraper only ever reads — the
+no-perturbation contract of ``repro.obs`` extends to the wire
+(asserted by tests/test_obs_serve.py against a 16-stream broker run).
+This is the repo's first HTTP surface, shaped so the future query
+front end can mount beside these routes.
+"""
+from .exposition import render_prometheus
+from .health import HealthComponent, default_components, health_report
+from .server import ObsServer, route
+
+__all__ = ["ObsServer", "route", "render_prometheus",
+           "HealthComponent", "default_components", "health_report"]

@@ -59,6 +59,7 @@ import numpy as np
 
 from repro.data.video_synth import Clip
 from repro.obs.metrics import REGISTRY
+from repro.obs.recorder import crash_dump
 from repro.obs.trace import TRACER
 from repro.query.ops import Query
 from repro.query.plan import CompiledPlan, QueryResult, compile_query
@@ -355,6 +356,16 @@ class QueryService:
 
     def _query(self, q: Query, clips: Sequence[Clip], log,
                use_index: bool) -> QueryResult:
+        try:
+            return self._query_inner(q, clips, log, use_index)
+        except BaseException as exc:
+            REGISTRY.counter("query.errors").inc()
+            # black box: no-op unless a FlightRecorder is installed
+            crash_dump("query.run", exc)
+            raise
+
+    def _query_inner(self, q: Query, clips: Sequence[Clip], log,
+                     use_index: bool) -> QueryResult:
         stats = QueryStats()
         plan = compile_query(q)
         stats.plan = plan.describe()

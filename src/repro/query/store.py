@@ -280,6 +280,12 @@ class TrackStore:
         from repro.obs.metrics import REGISTRY
         self._m_evictions = REGISTRY.counter("store.evictions")
         self._m_evicted_bytes = REGISTRY.counter("store.evicted_bytes")
+        # /healthz store_budget inputs: present-bytes over budget-bytes
+        # (budget gauge stays 0 for unbudgeted stores -> "no data")
+        self._m_bytes = REGISTRY.gauge("store.bytes")
+        self._m_budget_bytes = REGISTRY.gauge("store.budget_bytes")
+        if budget is not None and budget.max_bytes is not None:
+            self._m_budget_bytes.set(budget.max_bytes)
         self.params: Optional[PipelineParams] = None    # guarded-by: _lock
         self.fingerprint: Optional[str] = None      # guarded-by: _lock
         self.set_params(params)
@@ -334,6 +340,10 @@ class TrackStore:
         Returns the number of clips evicted by this call."""
         with self._lock:
             self.budget = budget
+            self._m_budget_bytes.set(
+                budget.max_bytes
+                if budget is not None and budget.max_bytes is not None
+                else 0)
             return self._enforce_budget()
 
     def disk_bytes(self) -> int:
@@ -708,6 +718,7 @@ class TrackStore:
             report.evicted_bytes = self.evicted_bytes - bytes0
             report.store_bytes = sum(
                 e["bytes"] for e in self._entries.values() if e["present"])
+            self._m_bytes.set(report.store_bytes)
         if report.ingested:
             log(f"[store] ingested {report.ingested} clips "
                 f"({report.frames} frames, {report.fps:.1f} fps wall), "

@@ -52,6 +52,7 @@ from repro.core.pipeline import RunResult
 from repro.data.video_synth import Clip
 from repro.obs.metrics import (REGISTRY, DriftMonitor, drift_enabled,
                                empty_stage_block)
+from repro.obs.recorder import crash_dump
 from repro.obs.trace import TRACER
 from repro.query.store import ClipKey, PackedTracks, TrackStore, clip_key
 from repro.stream.checkpoint import TrackerCheckpoint
@@ -239,6 +240,21 @@ class SegmentIngestor:
         return self._append(clip, n_frames)
 
     def _append(self, clip: Clip, n_frames: int) -> AppendReport:
+        try:
+            return self._append_inner(clip, n_frames)
+        except BaseException as exc:
+            # black box (no-op unless a FlightRecorder is installed):
+            # the dump's checkpoint pointer is the sidecar an operator
+            # resumes the stream from after the crash
+            crash_dump(
+                "stream.append", exc,
+                checkpoint=self.store.sidecar_path(clip, CKPT_SUFFIX),
+                extra={"stream": f"{clip.profile.name}/{clip.split}"
+                                 f"{clip.clip_id}",
+                       "requested_frames": int(n_frames)})
+            raise
+
+    def _append_inner(self, clip: Clip, n_frames: int) -> AppendReport:
         t_wall = time.perf_counter()
         if int(n_frames) < 0:
             raise ValueError(f"cannot append {n_frames} frames: "
@@ -304,6 +320,14 @@ class SegmentIngestor:
             if drift_enabled():
                 if st.drift is None:
                     st.drift = DriftMonitor()
+                    # the summary also rides REGISTRY.snapshot() (and
+                    # with it /metrics scrapers' /snapshot view) as a
+                    # zero-copy provider: the snapshot call reads the
+                    # live monitor, appends pay nothing extra
+                    stream = (f"{clip.profile.name}/{clip.split}"
+                              f"{clip.clip_id}")
+                    REGISTRY.provider(f"stream.drift[{stream}]",
+                                      st.drift.summary)
                 st.drift.observe(st.watermark,
                                  proxy_fracs=result.proxy_fracs,
                                  track_count=len(result.tracks))

@@ -274,6 +274,77 @@ def test_obs_naming_catches_undocumented_and_dead_names(tmp_path):
     assert len(dead) == 1 and "obs.dead_row" in dead[0].message
 
 
+def test_obs_naming_pools_endpoint_health_alert_sections(tmp_path):
+    """Endpoint/health/alert rows live in their own heading-scoped
+    pools: an undocumented @route path and a dead endpoint row are
+    caught, while documented HealthComponent/AlertRule names (and the
+    heading-less span/metric tables above them) stay clean."""
+    readme = OBS_README + """
+        ## Endpoint naming scheme
+
+        | endpoint | payload |
+        | --- | --- |
+        | `/metrics` | exposition |
+        | `/dead_route` | never mounted |
+
+        ## Health-component naming scheme
+
+        | component | watches |
+        | --- | --- |
+        | `decode_pool` | queue depth |
+
+        ## Alert-rule naming scheme
+
+        | rule | objective |
+        | --- | --- |
+        | `append_latency` | p95 |
+    """
+    proj = make_project(tmp_path, {
+        "src/repro/obs/README.md": readme,
+        "src/repro/obs/emit.py": """\
+            from repro.obs.metrics import REGISTRY
+            from repro.obs.trace import TRACER
+
+            def go():
+                TRACER.span("run.clip")
+                REGISTRY.counter("executor.dispatches").inc()
+        """,
+        "src/repro/obs/plane.py": """\
+            def route(path):
+                def deco(fn):
+                    return fn
+                return deco
+
+            @route("/metrics")
+            def metrics(server):
+                return 200
+
+            @route("/typo_route")
+            def typo(server):
+                return 200
+
+            class HealthComponent:
+                def __init__(self, name, metric):
+                    pass
+
+            class AlertRule:
+                def __init__(self, name, metric):
+                    pass
+
+            COMPONENTS = [HealthComponent(
+                "decode_pool", "executor.decode.queue_depth")]
+            RULES = [AlertRule(
+                "append_latency", "stream.append.wall_seconds")]
+        """,
+    })
+    hits = active(run_passes(proj, select=["obs-naming"]))
+    assert len(hits) == 2
+    undoc = [f for f in hits if f.path == "src/repro/obs/plane.py"]
+    dead = [f for f in hits if f.path == "src/repro/obs/README.md"]
+    assert len(undoc) == 1 and "/typo_route" in undoc[0].message
+    assert len(dead) == 1 and "/dead_route" in dead[0].message
+
+
 def test_tracked_bytecode_catches_pyc(tmp_path):
     proj = make_project(tmp_path, {
         "src/repro/core/util.py": "x = 1\n",

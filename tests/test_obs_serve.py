@@ -1,0 +1,515 @@
+"""Telemetry serving-plane tests (repro.obs.serve / slo / recorder).
+
+The contracts under test:
+
+  * **exposition** — ``render_prometheus`` emits well-formed 0.0.4
+    text: counters/gauges by value kind, histogram summaries with
+    interpolated ``quantile=`` samples, ``[...]`` instances as
+    ``stream=`` labels, provider dicts JSON-only;
+  * **health** — declarative thresholds grade components ok/warn/fail,
+    ratio components divide first, absent gauges report ok/None, and
+    the HTTP layer maps ``fail`` to 503;
+  * **SLO engine** — rolling-window quantiles fire alert EDGES only
+    (warn -> page -> resolved, no re-fire on a steady breach), for
+    histogram-window and gauge-sampled rules alike;
+  * **flight recorder** — the on-disk ring stays bounded across
+    rotation, ``poll`` captures span/metric deltas exactly once, and
+    nested crash hooks merge into ONE dump carrying the failing span's
+    lineage and the checkpoint pointer;
+  * **no perturbation** — a scraper hammering ``/metrics`` +
+    ``/healthz`` throughout a 16-stream broker ingest leaves tracks,
+    dispatch counts, broker units and the stage-span ledger
+    bit-identical to an unscraped run.
+"""
+import dataclasses
+import json
+import threading
+import urllib.error
+import urllib.request
+from collections import Counter as TallyCounter
+
+import numpy as np
+import pytest
+
+from repro.core.executor import BatchBroker, ExecutorOptions, \
+    run_clip_streamed
+from repro.obs import recorder as recorder_mod
+from repro.obs.metrics import REGISTRY, Histogram, Registry, \
+    interp_quantile
+from repro.obs.recorder import FlightRecorder
+from repro.obs.serve import ObsServer, health_report, render_prometheus
+from repro.obs.serve.health import HealthComponent, default_components
+from repro.obs.slo import AlertRule, SloEngine
+from repro.obs.trace import TRACER
+
+
+@pytest.fixture(autouse=True)
+def _serve_clean():
+    yield
+    TRACER.disable()
+    TRACER.clear()
+    recorder_mod.uninstall()
+
+
+def _get(url, timeout=5.0):
+    with urllib.request.urlopen(url, timeout=timeout) as resp:
+        return resp.status, resp.headers.get("Content-Type"), \
+            resp.read().decode()
+
+
+# ---------------------------------------------------------------------------
+# interpolated quantiles + exposition rendering
+# ---------------------------------------------------------------------------
+
+def test_interp_quantile_interpolates():
+    assert interp_quantile([], 0.95) == 0.0
+    assert interp_quantile([7.0], 0.5) == 7.0
+    assert interp_quantile([0.0, 10.0], 0.5) == 5.0
+    vals = [float(i) for i in range(1, 101)]     # 1..100
+    assert interp_quantile(vals, 0.50) == pytest.approx(50.5)
+    assert interp_quantile(vals, 0.99) == pytest.approx(99.01)
+    assert interp_quantile(vals, 1.0) == 100.0
+
+
+def test_histogram_summary_has_interpolated_p99():
+    h = Histogram()
+    for i in range(1, 101):
+        h.observe(float(i))
+    s = h.summary()
+    assert s["min"] == 1.0 and s["max"] == 100.0
+    assert s["p50"] == pytest.approx(50.5)
+    assert s["p95"] == pytest.approx(95.05)
+    assert s["p99"] == pytest.approx(99.01)
+
+
+def test_render_prometheus_kinds_labels_and_summaries():
+    reg = Registry()
+    reg.counter("stream.appends").inc(3)
+    reg.gauge("store.bytes").set(12.5)
+    reg.gauge("stream.watermark[caldot1/live0]").set(24.0)
+    h = reg.histogram("query.scan_seconds")
+    for v in (0.1, 0.2, 0.3, 0.4):
+        h.observe(v)
+    reg.provider("stream.drift[caldot1/live0]",
+                 lambda: {"watermarks": 2})
+    text = render_prometheus(reg.snapshot())
+    lines = text.splitlines()
+    assert "# TYPE stream_appends counter" in lines
+    assert "stream_appends 3" in lines
+    assert "# TYPE store_bytes gauge" in lines
+    assert "store_bytes 12.5" in lines
+    assert 'stream_watermark{stream="caldot1/live0"} 24.0' in lines
+    assert "# TYPE query_scan_seconds summary" in lines
+    assert 'query_scan_seconds{quantile="0.50"} 0.25' in lines
+    assert "query_scan_seconds_count 4" in lines
+    assert any(ln.startswith("query_scan_seconds_sum") for ln in lines)
+    # provider dicts have no flat representation: JSON-only
+    assert "drift" not in text
+    # the CLI's validator agrees the whole payload is well-formed
+    from repro.obs.__main__ import validate_exposition
+    assert validate_exposition(text) >= 6
+
+
+# ---------------------------------------------------------------------------
+# component health
+# ---------------------------------------------------------------------------
+
+def test_health_thresholds_ratio_and_absent():
+    comps = default_components()
+    names = {c.name for c in comps}
+    assert names == {"decode_pool", "broker_detect", "broker_track",
+                     "ingest_lag", "store_budget"}
+    # nothing registered: every component absent -> ok with value None
+    doc = health_report({}, comps)
+    assert doc["status"] == "ok"
+    assert all(c["status"] == "ok" and c["value"] is None
+               for c in doc["components"].values())
+    snap = {"broker.detect.queue_depth": 100.0,       # warn band
+            "stream.watermark_lag_seconds[a]": 1.0,
+            "stream.watermark_lag_seconds[b]": 45.0,  # worst -> fail
+            "store.bytes": 50.0, "store.budget_bytes": 100.0}
+    doc = health_report(snap, comps)
+    assert doc["components"]["broker_detect"]["status"] == "warn"
+    assert doc["components"]["ingest_lag"]["status"] == "fail"
+    assert doc["components"]["ingest_lag"]["value"] == 45.0
+    assert doc["components"]["store_budget"]["value"] == 0.5
+    assert doc["components"]["store_budget"]["status"] == "ok"
+    assert doc["status"] == "fail"
+    # ratio with a missing/zero denominator is absent, not unhealthy
+    doc = health_report({"store.bytes": 50.0}, comps)
+    assert doc["components"]["store_budget"]["value"] is None
+
+
+def test_server_routes_and_healthz_503(tmp_path):
+    reg = Registry()
+    reg.counter("stream.appends").inc()
+    comps = [HealthComponent("broker_detect",
+                             metric="broker.detect.queue_depth",
+                             warn=10.0, fail=100.0)]
+    with ObsServer(port=0, registry=reg, components=comps) as server:
+        status, ctype, text = _get(server.url + "/metrics")
+        assert status == 200
+        assert ctype.startswith("text/plain; version=0.0.4")
+        assert "stream_appends 1" in text
+        status, _, body = _get(server.url + "/healthz")
+        assert status == 200
+        assert json.loads(body)["status"] == "ok"
+        status, _, body = _get(server.url + "/snapshot")
+        doc = json.loads(body)
+        assert doc["metrics"]["stream.appends"] == 1
+        assert doc["slo"] is None
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(server.url + "/nothing")
+        assert ei.value.code == 404
+        assert "/metrics" in json.loads(ei.value.read().decode())["routes"]
+        # drive the watched gauge past fail: /healthz flips to 503
+        reg.gauge("broker.detect.queue_depth").set(500.0)
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(server.url + "/healthz")
+        assert ei.value.code == 503
+        assert json.loads(ei.value.read().decode())["status"] == "fail"
+    # stopped: the port no longer answers
+    with pytest.raises(OSError):
+        _get(server.url + "/metrics", timeout=0.5)
+
+
+def test_server_costs_nothing_until_started():
+    before = {t.name for t in threading.enumerate()}
+    ObsServer(port=0)                      # constructed, never started
+    after = {t.name for t in threading.enumerate()}
+    assert "repro-obs-serve" not in after
+    assert after == before
+
+
+# ---------------------------------------------------------------------------
+# the SLO engine
+# ---------------------------------------------------------------------------
+
+def test_slo_edges_warn_page_resolved(tmp_path):
+    reg = Registry()
+    rec = FlightRecorder(str(tmp_path / "ring"))
+    rule = AlertRule("append_latency", "stream.append.wall_seconds",
+                     objective=1.0, quantile=0.95, budget=0.25,
+                     min_samples=4)
+    eng = SloEngine([rule], registry=reg, recorder=rec)
+    h = reg.histogram("stream.append.wall_seconds")
+
+    assert eng.tick() == []                      # under min_samples
+    for _ in range(8):
+        h.observe(0.5)
+    assert eng.tick() == []                      # healthy
+    assert eng.report()["rules"]["append_latency"]["state"] == "ok"
+
+    h.observe(5.0)                               # p95 breaches, 1/9 bad
+    fired = eng.tick()
+    assert [e.severity for e in fired] == ["warn"]
+    assert fired[0].value > 1.0
+    assert eng.tick() == []                      # steady breach: no re-fire
+
+    for _ in range(3):
+        h.observe(5.0)                           # 4/12 bad: budget blown
+    fired = eng.tick()
+    assert [e.severity for e in fired] == ["page"]
+    assert fired[0].budget_remaining <= 0.0
+
+    h.reset()
+    for _ in range(8):
+        h.observe(0.1)
+    fired = eng.tick()
+    assert [e.severity for e in fired] == ["resolved"]
+
+    sev = [r["severity"] for r in rec.tail(50) if r["kind"] == "alert"]
+    assert sev == ["warn", "page", "resolved"]
+    assert [e.severity for e in eng.recent_events()] \
+        == ["warn", "page", "resolved"]
+
+
+def test_slo_gauge_rule_samples_instances_per_tick():
+    reg = Registry()
+    rule = AlertRule("ingest_watermark_lag",
+                     "stream.watermark_lag_seconds[", objective=1.0,
+                     quantile=0.5, budget=0.1, source="gauge",
+                     window=16, min_samples=4)
+    eng = SloEngine([rule], registry=reg)
+    reg.gauge("stream.watermark_lag_seconds[a]").set(8.0)
+    reg.gauge("stream.watermark_lag_seconds[b]").set(9.0)
+    eng.tick()                                   # 2 samples: under min
+    assert eng.report()["rules"]["ingest_watermark_lag"]["samples"] == 2
+    fired = eng.tick()                           # 4 samples, all bad
+    assert [e.severity for e in fired] == ["page"]
+    for g in "ab":
+        reg.gauge(f"stream.watermark_lag_seconds[{g}]").set(0.01)
+    for _ in range(10):                          # recovery fills the window
+        fired = eng.tick()
+    assert eng.report()["rules"]["ingest_watermark_lag"]["state"] == "ok"
+
+
+# ---------------------------------------------------------------------------
+# the flight recorder
+# ---------------------------------------------------------------------------
+
+def test_ring_rotation_stays_bounded(tmp_path):
+    rec = FlightRecorder(str(tmp_path / "ring"), segment_records=10,
+                         segments=3)
+    for i in range(100):
+        rec.record("probe", i=i)
+    files = rec._ring_files()
+    assert len(files) <= 3
+    tail = rec.tail(25)
+    assert [r["i"] for r in tail] == list(range(75, 100))
+    assert all(r["kind"] == "probe" for r in tail)
+
+
+def test_poll_captures_span_and_metric_deltas_once(tmp_path):
+    rec = FlightRecorder(str(tmp_path / "ring"))
+    reg = Registry()
+    tr = TRACER
+    tr.enable()
+    tr.clear()
+    reg.counter("stream.appends").inc(2)
+    with tr.span("stream.append", "stream", stream="camA"):
+        pass
+    got = rec.poll(tr, reg)
+    assert got == {"spans": 1, "metrics": 1}
+    assert rec.poll(tr, reg) == {"spans": 0, "metrics": 0}   # no re-emit
+    reg.counter("stream.appends").inc()
+    with tr.span("query.run", "query"):
+        pass
+    assert rec.poll(tr, reg) == {"spans": 1, "metrics": 1}
+    kinds = [r["kind"] for r in rec.tail(50)]
+    assert kinds.count("span") == 2 and kinds.count("metrics") == 2
+
+
+def test_crash_dump_lineage_and_nested_merge(tmp_path):
+    rec = FlightRecorder(str(tmp_path / "flight"))
+    reg = Registry()
+    reg.counter("stream.appends").inc()
+    tr = TRACER
+    tr.enable()
+    tr.clear()
+    try:
+        with tr.span("run", "executor", stream="camA"):
+            with tr.span("stream.append", "stream", stream="camA"):
+                raise RuntimeError("boom")
+    except RuntimeError as exc:
+        # inner hook (no checkpoint yet), then outer hook enriches
+        p1 = rec.dump("executor.drain", exc, tracer=tr, registry=reg)
+        p2 = rec.dump("stream.append", exc, checkpoint="camA/ckpt.npz",
+                      extra={"stream": "camA"}, tracer=tr, registry=reg)
+    assert p1 == p2 and rec.dumps() == [p1]
+    with open(p1) as f:
+        doc = json.load(f)
+    assert doc["reasons"] == ["executor.drain", "stream.append"]
+    assert doc["checkpoint"] == "camA/ckpt.npz"
+    assert doc["error"]["type"] == "RuntimeError"
+    assert "boom" in doc["error"]["traceback"]
+    names = [s["name"] for s in doc["lineage"]]
+    assert names == ["stream.append", "run"]     # innermost first
+    assert doc["metrics"]["stream.appends"] == 1
+    # a different exception gets its own dump
+    try:
+        raise ValueError("other")
+    except ValueError as exc:
+        p3 = rec.dump("query.run", exc, tracer=tr, registry=reg)
+    assert p3 != p1 and len(rec.dumps()) == 2
+
+
+def test_crash_dump_module_hook_is_noop_without_recorder():
+    recorder_mod.uninstall()
+    assert recorder_mod.crash_dump("stream.append",
+                                   RuntimeError("x")) is None
+    assert recorder_mod.active() is None
+
+
+# ---------------------------------------------------------------------------
+# induced mid-append executor crash -> readable black box (acceptance)
+# ---------------------------------------------------------------------------
+
+def test_mid_append_executor_crash_writes_black_box(qsys, tmp_path,
+                                                    monkeypatch):
+    from repro.data.video_synth import make_clip
+    from repro.query import TrackStore
+    from repro.stream import SegmentIngestor
+
+    bank, params, _, _, _ = qsys
+    clip = make_clip("caldot1", "live", 7, n_frames=24)
+    store = TrackStore(str(tmp_path / "crash_store"), bank, params)
+    # prefetch off: no decode worker lingers past the induced crash
+    ing = SegmentIngestor(store,
+                          options=ExecutorOptions(prefetch=False))
+    rec = recorder_mod.install(
+        FlightRecorder(str(tmp_path / "flight")))
+    TRACER.enable()
+    TRACER.clear()
+    ing.open(clip)
+    ing.append(clip, 12)           # a good append lands a checkpoint
+
+    def explode(*a, **k):
+        raise RuntimeError("induced mid-append failure")
+
+    monkeypatch.setattr(ing._executor.scheduler, "drain", explode)
+    with pytest.raises(RuntimeError, match="induced"):
+        ing.append(clip, 12)
+
+    dumps = rec.dumps()
+    assert len(dumps) == 1         # nested hooks merged into one dump
+    with open(dumps[0]) as f:
+        doc = json.load(f)
+    assert doc["reasons"] == ["executor.drain", "stream.append"]
+    assert doc["error"]["type"] == "RuntimeError"
+    assert "induced mid-append failure" in doc["error"]["traceback"]
+    # the failing span's lineage: the executor run that crashed,
+    # innermost first, inside the append that drove it
+    assert [s["name"] for s in doc["lineage"]] \
+        == ["run", "stream.append"]
+    assert doc["lineage"][0]["stream"] == "caldot1/live7"
+    # the pointer an operator resumes the stream from
+    assert doc["checkpoint"].endswith("ckpt.npz")
+    import os
+    assert os.path.exists(doc["checkpoint"])
+    assert doc["extra"]["stream"] == "caldot1/live7"
+    assert doc["extra"]["requested_frames"] == 12
+    assert doc["metrics"]["stream.appends"] >= 1
+    assert isinstance(doc["spans"], list)
+
+
+# ---------------------------------------------------------------------------
+# the no-perturbation contract under live scrape (acceptance)
+# ---------------------------------------------------------------------------
+
+def _broker_fleet(bank, params, clips, n_streams):
+    """N concurrent per-frame streams sharing one BatchBroker; returns
+    per-stream results in thread order."""
+    broker = BatchBroker()
+    results = [None] * n_streams
+    errors = []
+
+    def one(i):
+        try:
+            opts = ExecutorOptions(prefetch=False, batch_broker=broker)
+            results[i] = run_clip_streamed(
+                bank, params, clips[i % len(clips)], opts)
+        except BaseException as exc:   # pragma: no cover - diagnostics
+            errors.append(exc)
+
+    threads = [threading.Thread(target=one, args=(i,))
+               for i in range(n_streams)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    broker.close()
+    assert not errors, errors
+    return results
+
+
+def _stage_ledger():
+    """Per-stream multiset of (span name, chunk) for the deterministic
+    span families (stage + run); broker flush/dispatch counts are
+    timing-shaped and excluded."""
+    ledger = {}
+    for s in TRACER.snapshot():
+        if s.name == "run" or s.name.startswith("stage."):
+            ledger.setdefault(s.stream, TallyCounter())[
+                (s.name, s.chunk)] += 1
+    return ledger
+
+
+def test_concurrent_scrape_never_perturbs_16_stream_ingest(qsys,
+                                                           tmp_path):
+    bank, params, clips, _, _ = qsys
+    p1 = dataclasses.replace(params, chunk_size=1)
+    n_streams = 16
+    units = REGISTRY.counter("broker.detect.units_in")
+
+    def one_run(scrape):
+        TRACER.enable()
+        TRACER.clear()
+        units_before = units.value
+        stop = threading.Event()
+        scrapes = [0]
+        server = scraper = None
+        if scrape:
+            rec = FlightRecorder(str(tmp_path / "scrape_ring"))
+            server = ObsServer(port=0, slo=SloEngine(registry=REGISTRY),
+                               recorder=rec).start()
+
+            def hammer():
+                while not stop.is_set():
+                    for path in ("/metrics", "/healthz"):
+                        try:
+                            urllib.request.urlopen(
+                                server.url + path, timeout=2).read()
+                            scrapes[0] += 1
+                        except Exception:
+                            pass
+
+            scraper = threading.Thread(target=hammer, daemon=True)
+            scraper.start()
+        try:
+            results = _broker_fleet(bank, p1, clips, n_streams)
+        finally:
+            stop.set()
+            if scraper is not None:
+                scraper.join()
+            if server is not None:
+                server.stop()
+        ledger = _stage_ledger()
+        TRACER.disable()
+        if scrape:
+            assert scrapes[0] > 0, "scraper never completed a request"
+        return results, units.value - units_before, ledger
+
+    ref, ref_units, ref_ledger = one_run(scrape=False)
+    got, got_units, got_ledger = one_run(scrape=True)
+
+    for i, (a, b) in enumerate(zip(ref, got)):
+        assert len(a.tracks) == len(b.tracks), i
+        for x, y in zip(a.tracks, b.tracks):
+            np.testing.assert_array_equal(x, y)
+        assert a.dispatches == b.dispatches, i
+        assert a.frames_processed == b.frames_processed, i
+    assert got_units == ref_units
+    assert got_ledger == ref_ledger
+
+
+# ---------------------------------------------------------------------------
+# the operator CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_serve_smoke_writes_artifacts_and_dump(tmp_path, capsys):
+    from repro.obs.__main__ import main as obs_main
+
+    out = tmp_path / "smoke"
+    assert obs_main(["serve-smoke", "--out", str(out)]) == 0
+    for name in ("metrics.txt", "healthz.json", "snapshot.json"):
+        assert (out / name).exists(), name
+    health = json.loads((out / "healthz.json").read_text())
+    assert health["status"] in ("ok", "warn", "fail")
+    capsys.readouterr()
+
+    assert obs_main(["dump", "--dir", str(out / "flight")]) == 0
+    dump = json.loads(capsys.readouterr().out)
+    assert dump["error"]["type"] == "ValueError"
+    assert dump["checkpoint"] == "camA/ckpt.npz"
+
+    assert obs_main(["tail", "--dir", str(out / "flight"),
+                     "-n", "5"]) == 0
+    lines = capsys.readouterr().out.strip().splitlines()
+    assert 0 < len(lines) <= 5
+    assert all(json.loads(ln)["kind"] for ln in lines)
+
+
+def test_cli_scrape_and_snapshot_against_live_server(capsys):
+    from repro.obs.__main__ import main as obs_main
+
+    reg = Registry()
+    reg.counter("query.count").inc(5)
+    with ObsServer(port=0, registry=reg) as server:
+        assert obs_main(["scrape", "--url", server.url]) == 0
+        text = capsys.readouterr().out
+        assert "# TYPE query_count counter" in text
+        assert obs_main(["snapshot", "--url", server.url]) == 0
+        doc = json.loads(capsys.readouterr().out)
+        assert doc["metrics"]["query.count"] == 5
+        assert doc["health"]["status"] == "ok"
